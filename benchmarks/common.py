@@ -1,0 +1,38 @@
+"""Shared benchmark fixtures: scaled-down Llama case-study models.
+
+The paper's measurements (Tab. 1, Figs. 2–4) use Llama3.2-3B / Llama3.1-8B
+on a 48-core server.  This container is a single CPU core, so the same
+*experiments* run on dimension-scaled Llama specs ("tiny" ≈ 1/12 width,
+"small" ≈ 1/6) — the comparisons (chunk size, residency mode, method)
+are structure-preserving: every mode executes the identical pipeline the
+full-size model would.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+from repro.core.llama_graph import LlamaSpec, init_llama_params
+
+TINY = LlamaSpec(vocab=1024, d_model=256, n_layers=4, n_heads=8, n_kv=4,
+                 d_ff=512, rope_theta=10000.0)
+SMALL = LlamaSpec(vocab=2048, d_model=512, n_layers=6, n_heads=8, n_kv=4,
+                  d_ff=1024, rope_theta=10000.0)
+
+PROMPT_LENGTHS = (10, 100, 200, 500)
+
+
+@functools.lru_cache(maxsize=None)
+def weights_for(name: str):
+    spec = {"tiny": TINY, "small": SMALL}[name]
+    return spec, init_llama_params(spec, seed=0)
+
+
+def prompt(n: int, vocab: int, seed: int = 0):
+    return list(np.random.default_rng(seed).integers(0, vocab, size=n))
+
+
+def param_bytes(params) -> int:
+    return sum(a.size * a.dtype.itemsize for a in params.values())

@@ -1,0 +1,77 @@
+"""Paper Figure 3 — serving under a hard memory cap (the 8 GB scenario).
+
+Both engines get a working-set budget of 1/4 of the model (the paper's
+8 GB / 31 GB regime).  Two readings per point:
+
+  measured   — wall-clock TTFT/TPOT on this host (RAM-backed cold store, so
+               it shows scheduling/reuse effects, not disk bandwidth)
+  modeled    — bytes moved per token (hardware-independent, from pager
+               accounting) converted to TPOT at NVMe bandwidth (2 GB/s):
+               the relational engine overlaps paging with compute
+               (max(compute, io)); the llama.cpp-role engine reloads
+               synchronously (compute + io).  We grant the baseline perfect
+               sequential reload — no thrash amplification — so the
+               reported advantage is a *lower bound* on the paper's 30×.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import PROMPT_LENGTHS, param_bytes, prompt, \
+    weights_for
+
+DISK_BW = 2e9  # bytes/s (NVMe-class)
+
+
+def run(report):
+    from repro.core.bridge import llama_params_to_tree, spec_to_config
+    from repro.serving.engine import DirectEngine, RelationalEngine
+
+    spec, params = weights_for("small")
+    model_bytes = param_bytes(params)
+    budget = model_bytes // 4
+    # "pin" (MRU) eviction: scan-resistant — retains ~budget worth of
+    # tables across the cyclic per-layer scan where CLOCK/LRU retain none
+    rel = RelationalEngine(spec, params, chunk_size=64, residency="paged",
+                           budget_bytes=budget, max_len=640,
+                           pager_policy="pin")
+    direct = DirectEngine(spec_to_config(spec),
+                          llama_params_to_tree(params, spec),
+                          residency="paged", budget_bytes=budget,
+                          max_len=640)
+    # steady-state: warm both engines (XLA compile cache + pipelines)
+    rel.generate(prompt(8, spec.vocab), 2)
+    direct.generate(prompt(8, spec.vocab), 2)
+
+    for n in PROMPT_LENGTHS:
+        pr = prompt(n, spec.vocab)
+        rel.pager.stats.reset()
+        a = rel.generate(pr, max_new_tokens=6)
+        rel_bytes_tok = rel.pager.stats.bytes_loaded / 6
+
+        direct.pager.stats.reset()
+        b = direct.generate(pr, max_new_tokens=6)
+        naive_bytes_tok = direct.pager.stats.bytes_loaded / 6
+
+        # modeled TPOT at disk bandwidth
+        t_rel = max(a.tpot_s, rel_bytes_tok / DISK_BW)          # overlapped
+        t_naive = b.tpot_s + naive_bytes_tok / DISK_BW          # synchronous
+        report(f"fig3/prompt{n}/rel_disk_mem/ttft", a.ttft_s * 1e6,
+               f"tpot_us={a.tpot_s*1e6:.0f} bytes_per_tok={rel_bytes_tok:.0f}"
+               f" modeled_tpot_us={t_rel*1e6:.0f}")
+        report(f"fig3/prompt{n}/naive_paged/ttft", b.ttft_s * 1e6,
+               f"tpot_us={b.tpot_s*1e6:.0f} bytes_per_tok="
+               f"{naive_bytes_tok:.0f} modeled_tpot_us={t_naive*1e6:.0f} "
+               f"modeled_speedup={t_naive / max(t_rel, 1e-9):.1f}x")
+
+    # ---- paper-scale projection (8B model, 31 GB, NVMe, 8 GB cap) ----------
+    # carry the *measured* hit fraction to the paper's regime where IO
+    # dominates compute (per-token compute ≈ 1 s on the paper's 6-core cap)
+    hit_frac = 1.0 - rel_bytes_tok / model_bytes
+    PAPER_BYTES, COMPUTE_S = 31e9, 1.0
+    t_rel_p = max(COMPUTE_S, (1 - hit_frac) * PAPER_BYTES / DISK_BW)
+    t_naive_p = COMPUTE_S + PAPER_BYTES / DISK_BW
+    report("fig3/paper_scale_projection/tpot_speedup",
+           t_naive_p / t_rel_p * 1e6,
+           f"rel={t_rel_p:.1f}s naive={t_naive_p:.1f}s "
+           f"hit_frac={hit_frac:.0%} (measured reuse, 31GB @ 2GB/s, "
+           f"overlap+pinning; x1e-6 = unitless ratio)")

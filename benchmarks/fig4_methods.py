@@ -1,0 +1,40 @@
+"""Paper Figure 4 — TTFT / TPOT across methods × model sizes × prompts.
+
+Methods: direct-JAX (the PyTorch-CPU role), relational in-memory, and
+relational disk+mem, over prompt lengths {10, 100, 200, 500} and two model
+scales.  Expected qualitative reproduction: database modes pay a TTFT
+premium (relational-primitive overhead), in-memory TPOT is competitive,
+disk+mem TPOT trails in-memory (load overhead) but stays bounded.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import PROMPT_LENGTHS, param_bytes, prompt, \
+    weights_for
+from repro.core.bridge import llama_params_to_tree, spec_to_config
+from repro.serving.engine import DirectEngine, RelationalEngine
+
+
+def run(report):
+    for size in ("tiny", "small"):
+        spec, params = weights_for(size)
+        engines = {
+            "direct": DirectEngine(spec_to_config(spec),
+                                   llama_params_to_tree(params, spec),
+                                   residency="in_memory", max_len=640),
+            "rel_in_memory": RelationalEngine(spec, params, chunk_size=64,
+                                              residency="in_memory",
+                                              max_len=640),
+            "rel_disk_mem": RelationalEngine(
+                spec, params, chunk_size=64, residency="paged",
+                budget_bytes=param_bytes(params) // 4, max_len=640),
+        }
+        for eng in engines.values():  # steady-state warmup
+            eng.generate(prompt(8, spec.vocab), 2)
+        for n in PROMPT_LENGTHS:
+            pr = prompt(n, spec.vocab)
+            for name, eng in engines.items():
+                res = eng.generate(pr, max_new_tokens=6)
+                report(f"fig4/{size}/prompt{n}/{name}/ttft",
+                       res.ttft_s * 1e6,
+                       f"tpot_us={res.tpot_s * 1e6:.0f}")

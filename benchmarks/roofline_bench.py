@@ -1,0 +1,49 @@
+"""Roofline summary from the multi-pod dry-run (EXPERIMENTS.md §Roofline).
+
+Reads reports/dryrun.jsonl (produced by ``python -m repro.launch.dryrun``)
+and emits one row per (arch × shape × mesh): the three roofline terms, the
+bottleneck, and the MODEL_FLOPS/HLO ratio.  The "derived" column carries
+the bottleneck term so regressions are visible in CSV diffs.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+REPORT = os.environ.get("DRYRUN_REPORT", "reports/dryrun.jsonl")
+
+
+def run(report):
+    if not os.path.exists(REPORT):
+        report("roofline/missing", 0.0,
+               f"run `python -m repro.launch.dryrun` first ({REPORT})")
+        return
+    seen = {}
+    with open(REPORT) as f:
+        for line in f:
+            rec = json.loads(line)
+            key = (rec["arch"], rec["shape"], rec["mesh"],
+                   rec.get("tag", ""))
+            seen[key] = rec  # keep the latest record per cell
+    for (arch, shape, mesh, tag), rec in sorted(seen.items()):
+        suffix = f"/{tag}" if tag else ""
+        if rec["status"] == "skipped":
+            report(f"roofline/{arch}/{shape}/{mesh}{suffix}", 0.0,
+                   "skipped: " + rec["reason"][:60])
+            continue
+        if rec["status"] != "ok":
+            report(f"roofline/{arch}/{shape}/{mesh}{suffix}", -1.0,
+                   "ERROR " + rec.get("error", "")[:80])
+            continue
+        rl = rec["roofline"]
+        bound_s = max(rl["t_compute_s"], rl["t_memory_s"],
+                      rl["t_collective_s"])
+        report(
+            f"roofline/{arch}/{shape}/{mesh}{suffix}",
+            bound_s * 1e6,
+            f"bottleneck={rl['bottleneck']} "
+            f"tc={rl['t_compute_s']:.2e} tm={rl['t_memory_s']:.2e} "
+            f"tx={rl['t_collective_s']:.2e} "
+            f"useful={rl['useful_ratio']:.2f} "
+            f"frac={rl['roofline_fraction']:.2%}")

@@ -1,0 +1,47 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: one module per paper table/figure + the roofline
+summary from the dry-run.  Usage:
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run tab1 fig3  # subset
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks import (fig2_memory, fig3_capped, fig4_methods,
+                        roofline_bench, tab1_chunk_size)
+
+BENCHES = {
+    "tab1": tab1_chunk_size,
+    "fig2": fig2_memory,
+    "fig3": fig3_capped,
+    "fig4": fig4_methods,
+    "roofline": roofline_bench,
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(BENCHES)
+    print("name,us_per_call,derived")
+
+    def report(name: str, us: float, derived: str = "") -> None:
+        print(f"{name},{us:.1f},{derived}")
+        sys.stdout.flush()
+
+    failures = 0
+    for n in names:
+        try:
+            BENCHES[n].run(report)
+        except Exception as e:  # keep the harness running; flag the bench
+            failures += 1
+            traceback.print_exc(file=sys.stderr)
+            report(f"{n}/FAILED", -1.0, f"{type(e).__name__}: {e}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

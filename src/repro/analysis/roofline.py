@@ -1,0 +1,177 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds:
+
+    compute    = HLO_FLOPs_per_device / peak_FLOPs         (MXU bound)
+    memory     = HLO_bytes_per_device / HBM_bw             (HBM bound)
+    collective = collective_bytes_per_device / link_bw     (ICI bound)
+
+``compiled.cost_analysis()`` reports the *partitioned per-device* program's
+flops/bytes (verified in tests/test_dryrun.py against hand-counts), so the
+spec's ``HLO_FLOPs / (chips × peak)`` is evaluated as per-device values
+over per-chip peaks.  Collective bytes are not in cost_analysis: we parse
+the partitioned HLO text and sum operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12       # bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "collective-broadcast")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(tok: str) -> int:
+    m = _SHAPE_RE.match(tok)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes per collective kind from (partitioned) HLO text."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # `%name = TYPE[dims] op-name(TYPE[dims] %a, ...)`
+        m = re.search(r"=\s*(?:\([^)]*\)|\S+)\s+([a-z0-9-]+)\(", s)
+        if not m:
+            continue
+        op = m.group(1)
+        kind = next((k for k in _COLLECTIVES
+                     if op == k or op.startswith(k + ".")), None)
+        if kind is None:
+            continue
+        args = s[m.end():]
+        # operand shapes appear as `TYPE[dims]` tokens before each %ref
+        bytes_ = sum(_shape_bytes(t) for t in
+                     re.findall(r"\w+\[[0-9,]*\](?=\{?[0-9,{}]*\}?\s*%)",
+                                args))
+        if bytes_ == 0:
+            # fallback: use the result shape
+            rm = re.search(r"=\s*(\w+\[[0-9,]*\])", s)
+            if rm:
+                bytes_ = _shape_bytes(rm.group(1))
+        out[kind] += bytes_
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    flops_per_dev: float
+    bytes_per_dev: float
+    coll_bytes_per_dev: float
+    coll_breakdown: Dict[str, int]
+    model_flops: float                  # 6·N·D (dense) / 6·N_active·D (MoE)
+    per_dev_output_bytes: float = 0.0
+    compile_seconds: float = 0.0
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_dev / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_dev / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_dev / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> Optional[float]:
+        """MODEL_FLOPS / (HLO_FLOPs × chips): how much compiled compute is
+        'useful' — catches remat recompute and dispatch overhead."""
+        if not self.flops_per_dev:
+            return None
+        return self.model_flops / max(self.flops_per_dev, 1.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """compute term / bound time — fraction of peak at the bottleneck."""
+        bt = self.bound_time
+        return self.t_compute / bt if bt else 0.0
+
+    def row(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "flops_per_dev": self.flops_per_dev,
+            "bytes_per_dev": self.bytes_per_dev,
+            "coll_bytes_per_dev": self.coll_bytes_per_dev,
+            "model_flops_per_dev": self.model_flops,
+            "useful_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "compile_seconds": self.compile_seconds,
+        }
+
+
+def model_flops_for(cfg, shape_info: Dict, n_chips: int, kind: str) -> float:
+    """Analytic MODEL_FLOPS per device: 6·N·D train, 2·N·D forward-only
+    (per generated token for decode)."""
+    n_active = cfg.active_param_count()
+    if kind == "train":
+        tokens = shape_info["seq_len"] * shape_info["global_batch"]
+        return 6.0 * n_active * tokens / n_chips
+    if kind == "prefill":
+        tokens = shape_info["seq_len"] * shape_info["global_batch"]
+        return 2.0 * n_active * tokens / n_chips
+    tokens = shape_info["global_batch"]  # decode: 1 token per sequence
+    return 2.0 * n_active * tokens / n_chips
+
+
+def format_table(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | mesh | t_comp (s) | t_mem (s) | t_coll (s) | "
+           "bound | MODEL/HLO | roofline frac |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in rows:
+        ur = r["useful_ratio"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} "
+            f"| {r['t_collective_s']:.3e} | {r['bottleneck']} "
+            f"| {ur:.2f} | {r['roofline_fraction']:.2%} |"
+            if ur is not None else
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | - | - | - | - | - | - |")
+    return "\n".join(lines)

@@ -1,0 +1,6 @@
+"""Architecture configs. ``get_config(name)`` resolves any assigned arch."""
+
+from repro.configs.base import ModelConfig
+from repro.configs.registry import get_config, list_configs, CONFIGS
+
+__all__ = ["ModelConfig", "get_config", "list_configs", "CONFIGS"]

@@ -1,0 +1,161 @@
+"""Chunk-based tensor representation (paper §2.1, §3.1).
+
+A matrix ``W ∈ R^{m×n}`` is stored as a relational table with rows
+
+    (row_id, chunk_id, chunk FLOAT[chunk_size])
+
+where each original row is split into ``ceil(n / chunk_size)`` contiguous
+vector chunks.  On TPU we realise that table as a dense array of shape
+``[m, n_chunks, chunk_size]`` — a columnar table over a *dense* integer key
+domain, where the key (row_id, chunk_id) is simply the address.  chunk_size
+defaults to 128 to align chunks with VPU lanes / MXU tiles.
+
+Higher-rank tensors keep their leading dimensions as additional key columns
+(the paper: "each dimension is broken into one or more chunk indices").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_CHUNK_SIZE = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkedSchema:
+    """Relational schema of a chunked tensor table.
+
+    ``key_cols``: ordered (name, domain_size) pairs — e.g. (("row_id", m),
+    ("chunk_id", n_chunks)).  ``vec_col`` names the FLOAT[chunk] payload.
+    ``true_cols`` is the unpadded length of the chunked dimension so that
+    ``to_dense`` can strip padding.
+    """
+
+    name: str
+    key_cols: Tuple[Tuple[str, int], ...]
+    vec_col: str
+    chunk_size: int
+    true_cols: int
+
+    @property
+    def n_chunks(self) -> int:
+        return self.key_cols[-1][1]
+
+    @property
+    def key_names(self) -> Tuple[str, ...]:
+        return tuple(k for k, _ in self.key_cols)
+
+    def ddl(self, dtype: str = "FLOAT") -> str:
+        """CREATE TABLE statement for this schema (Appendix A style)."""
+        cols = ", ".join(f"{k} INT32" for k, _ in self.key_cols)
+        return (
+            f"CREATE TABLE {self.name} ({cols}, "
+            f"{self.vec_col} {dtype}[{self.chunk_size}]);"
+        )
+
+
+@dataclasses.dataclass
+class ChunkedTensor:
+    """A tensor in the chunk-based table layout.
+
+    ``data`` has shape ``[*key_sizes, chunk_size]`` where the last key is the
+    chunk index.  The logical table rows are all index tuples of ``data``'s
+    leading axes.
+    """
+
+    schema: ChunkedSchema
+    data: jnp.ndarray  # [*key_dims, chunk_size]
+
+    @property
+    def chunk_size(self) -> int:
+        return self.schema.chunk_size
+
+    @staticmethod
+    def n_chunks_for(cols: int, chunk_size: int) -> int:
+        return max(1, math.ceil(cols / chunk_size))
+
+    @classmethod
+    def from_dense(
+        cls,
+        name: str,
+        array,
+        chunk_size: int = DEFAULT_CHUNK_SIZE,
+        key_names: Sequence[str] | None = None,
+    ) -> "ChunkedTensor":
+        """Chunk the trailing dimension of ``array`` into FLOAT[chunk] rows."""
+        array = jnp.asarray(array)
+        if array.ndim == 0:
+            raise ValueError("cannot chunk a scalar; store as constant")
+        *lead, cols = array.shape
+        n_chunks = cls.n_chunks_for(cols, chunk_size)
+        pad = n_chunks * chunk_size - cols
+        if pad:
+            pad_width = [(0, 0)] * len(lead) + [(0, pad)]
+            array = jnp.pad(array, pad_width)
+        data = array.reshape(*lead, n_chunks, chunk_size)
+        if key_names is None:
+            base = ["row_id", "col_id", "head_id", "pos_id"]
+            key_names = base[: len(lead)] if len(lead) <= len(base) else [
+                f"k{i}" for i in range(len(lead))
+            ]
+        key_cols = tuple(zip(tuple(key_names), tuple(lead))) + (
+            ("chunk_id", n_chunks),
+        )
+        schema = ChunkedSchema(
+            name=name,
+            key_cols=key_cols,
+            vec_col="chunk",
+            chunk_size=chunk_size,
+            true_cols=cols,
+        )
+        return cls(schema=schema, data=data)
+
+    def to_dense(self) -> jnp.ndarray:
+        """Reassemble the original tensor (strip chunk padding)."""
+        *lead, n_chunks, chunk = self.data.shape
+        flat = self.data.reshape(*lead, n_chunks * chunk)
+        return flat[..., : self.schema.true_cols]
+
+    def as_table_rows(self) -> np.ndarray:
+        """Materialise the literal relational rows (for SQL INSERT / tests).
+
+        Returns a structured object array of (key..., chunk_vector) tuples in
+        row-major key order — exactly the paper's ``(i, c, w_i^{(c)})`` rows.
+        """
+        data = np.asarray(self.data)
+        key_sizes = [s for _, s in self.schema.key_cols]
+        rows = []
+        for idx in np.ndindex(*key_sizes):
+            rows.append(idx + (data[idx],))
+        return np.array(rows, dtype=object)
+
+    def insert_sql(self, limit: int | None = None) -> str:
+        """INSERT statements for the chunk rows (paper §3.1 data conversion)."""
+        data = np.asarray(self.data, dtype=np.float32)
+        key_sizes = [s for _, s in self.schema.key_cols]
+        stmts = []
+        for n, idx in enumerate(np.ndindex(*key_sizes)):
+            if limit is not None and n >= limit:
+                break
+            vec = ", ".join(f"{v:.6g}" for v in data[idx])
+            keys = ", ".join(str(i) for i in idx)
+            stmts.append(
+                f"INSERT INTO {self.schema.name} VALUES ({keys}, [{vec}]);"
+            )
+        return "\n".join(stmts)
+
+
+def rechunk(x: ChunkedTensor, chunk_size: int) -> ChunkedTensor:
+    """Re-chunk a tensor table to a different chunk size (UNNEST + re-collect)."""
+    dense = x.to_dense()
+    return ChunkedTensor.from_dense(
+        x.schema.name,
+        dense,
+        chunk_size=chunk_size,
+        key_names=x.schema.key_names[:-1],
+    )

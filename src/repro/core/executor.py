@@ -1,0 +1,567 @@
+"""Vectorised columnar executor — runs relational plans on JAX/XLA.
+
+This is the "database engine" half of the TPU adaptation (DESIGN.md §2):
+DuckDB's vectorised interpreter is replaced by a dense-key columnar engine
+whose physical operators lower to XLA:
+
+  Scan           → array lookup in the environment
+  Project        → elementwise VPU ops + reshape/transpose key remaps
+  Join (dense)   → address arithmetic: gather along the joined key axes
+  GroupAgg       → axis reduction
+  Filter         → predicate mask (identity element supplied by the plan)
+  Unnest/Collect → reshapes between key axes and the vector payload axis
+
+Physical optimisation (the "query optimiser"): a ``GroupAgg(Join(L, R))``
+whose aggregate is ``SUM`` of a product/dot of one column from each side is
+executed as a fused contraction (``jnp.einsum``) — the relational join never
+materialises, mirroring how a vectorised DB pipelines a hash join into an
+aggregation without materialising the cross product.  On TPU this is the
+MatMul-goes-to-MXU path; ``kernels/chunked_matmul`` is the hand-scheduled
+version of the same plan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import relational as ra
+from repro.core.relational import (
+    BinOp, Call, Col, Collect, Const, Expr, Filter, GroupAgg, Join, Key,
+    Param, Project, RelNode, RelSchema, Scan, Unnest, SCALAR, is_vec,
+    resolve,
+)
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass
+class DenseTable:
+    """A relation over dense integer key domains.
+
+    ``cols[name]`` has shape ``[*key_sizes]`` (scalar column) or
+    ``[*key_sizes, w]`` (vector column).
+    """
+
+    keys: Tuple[Tuple[str, int], ...]
+    cols: Dict[str, jnp.ndarray]
+    col_types: Dict[str, str]
+
+    @property
+    def key_names(self):
+        return tuple(k for k, _ in self.keys)
+
+    @property
+    def key_sizes(self):
+        return tuple(s for _, s in self.keys)
+
+    def col(self, name: str) -> jnp.ndarray:
+        return self.cols[name]
+
+    def schema(self, name: str = "t") -> RelSchema:
+        return RelSchema(keys=self.keys,
+                         cols=tuple((c, self.col_types[c]) for c in self.cols))
+
+
+def table_from_chunked(ct) -> DenseTable:
+    """Wrap a ChunkedTensor as a DenseTable (zero-copy)."""
+    return DenseTable(
+        keys=ct.schema.key_cols,
+        cols={ct.schema.vec_col: ct.data},
+        col_types={ct.schema.vec_col: ra.VEC(ct.schema.chunk_size)},
+    )
+
+
+def scalar_table(name: str, key_cols, array, col="s") -> DenseTable:
+    return DenseTable(keys=tuple(key_cols), cols={col: array},
+                      col_types={col: SCALAR})
+
+
+# ---------------------------------------------------------------------------
+# Expression evaluation
+# ---------------------------------------------------------------------------
+
+
+def _key_axis(table: DenseTable, name: str) -> int:
+    return table.key_names.index(name)
+
+
+def _eval_key_expr(expr: Expr, key_names, key_sizes, scalars=None
+                   ) -> jnp.ndarray:
+    """Evaluate an integer expression over key columns.
+
+    Returns an array broadcastable against ``[*key_sizes]`` (aranges are
+    reshaped into their key's axis position, so e.g. ``h // 4`` stays O(H)).
+    """
+    nk = len(key_names)
+    scalars = scalars or {}
+
+    def rec(e: Expr):
+        if isinstance(e, Key):
+            ax = key_names.index(e.name)
+            shape = [1] * nk
+            shape[ax] = key_sizes[ax]
+            return jnp.arange(key_sizes[ax], dtype=jnp.int32).reshape(shape)
+        if isinstance(e, Const):
+            return jnp.asarray(int(e.value), dtype=jnp.int32)
+        if isinstance(e, Param):
+            return jnp.asarray(scalars[e.name], dtype=jnp.int32)
+        if isinstance(e, BinOp):
+            l, r = rec(e.lhs), rec(e.rhs)
+            return {
+                "+": jnp.add, "-": jnp.subtract, "*": jnp.multiply,
+                "//": jnp.floor_divide, "%": jnp.mod,
+            }[e.op](l, r)
+        raise TypeError(f"not a key expression: {e!r}")
+
+    return rec(expr)
+
+
+_UNARY = {
+    "exp": jnp.exp,
+    "neg": jnp.negative,
+    "sqrt": jnp.sqrt,
+    "rsqrt": lambda x: jax.lax.rsqrt(x),
+    "sigmoid": jax.nn.sigmoid,
+    "silu": jax.nn.silu,
+    "gelu": partial(jax.nn.gelu, approximate=True),
+    "square": jnp.square,
+    "identity": lambda x: x,
+}
+
+
+def _eval_expr(expr: Expr, table: DenseTable) -> Tuple[jnp.ndarray, bool]:
+    """Evaluate a projection/aggregate expression.
+
+    Returns ``(array, is_vec)``; scalar arrays have shape ``[*key_sizes]``
+    (broadcastable), vector arrays carry a trailing payload axis.
+    """
+    if isinstance(expr, Col):
+        return table.cols[expr.name], is_vec(table.col_types[expr.name])
+    if isinstance(expr, Key):
+        return _eval_key_expr(expr, table.key_names, table.key_sizes).astype(
+            jnp.float32), False
+    if isinstance(expr, Const):
+        return jnp.asarray(expr.value), False
+    if isinstance(expr, BinOp):
+        (lv, lvec), (rv, rvec) = _eval_expr(expr.lhs, table), _eval_expr(
+            expr.rhs, table)
+        if lvec and not rvec:
+            rv = rv[..., None] if jnp.ndim(rv) else rv
+        if rvec and not lvec:
+            lv = lv[..., None] if jnp.ndim(lv) else lv
+        fn = {"+": jnp.add, "-": jnp.subtract, "*": jnp.multiply,
+              "/": jnp.divide, "//": jnp.floor_divide, "%": jnp.mod,
+              "max": jnp.maximum, "min": jnp.minimum}[expr.op]
+        return fn(lv, rv), lvec or rvec
+    if isinstance(expr, Call):
+        if expr.fn == "dot":
+            a, _ = _eval_expr(expr.args[0], table)
+            b, _ = _eval_expr(expr.args[1], table)
+            return jnp.sum(a * b, axis=-1), False
+        if expr.fn == "vsum":
+            a, _ = _eval_expr(expr.args[0], table)
+            return jnp.sum(a, axis=-1), False
+        if expr.fn == "scale":
+            a, av = _eval_expr(expr.args[0], table)
+            s, _ = _eval_expr(expr.args[1], table)
+            return a * s, av
+        if expr.fn == "concat":
+            parts = [_eval_expr(a, table)[0] for a in expr.args]
+            return jnp.concatenate(parts, axis=-1), True
+        if expr.fn == "first_half":
+            a, _ = _eval_expr(expr.args[0], table)
+            return a[..., : a.shape[-1] // 2], True
+        if expr.fn == "second_half":
+            a, _ = _eval_expr(expr.args[0], table)
+            return a[..., a.shape[-1] // 2:], True
+        if expr.fn in _UNARY:
+            a, av = _eval_expr(expr.args[0], table)
+            return _UNARY[expr.fn](a), av
+        raise NotImplementedError(f"intrinsic {expr.fn}")
+    raise TypeError(expr)
+
+
+# ---------------------------------------------------------------------------
+# Key-remap (Project.keys) structural compiler: split / merge / permute
+# ---------------------------------------------------------------------------
+
+
+def _apply_key_remap(arr: jnp.ndarray, in_keys, out_defs, has_vec: bool):
+    """Realise an integer key remapping as reshape/transpose.
+
+    ``out_defs``: list of (name, size, Expr) where each Expr is one of
+      Key(k)                      — rename / permute
+      Key(k) // n                 — high part of a split
+      Key(k) % n                  — low part of a split
+      Key(a) * n + Key(b)         — merge (a outer, b inner, n = size of b)
+    This is the paper's "integer-based remapping via a single projection".
+    """
+    in_names = [k for k, _ in in_keys]
+    in_sizes = [s for _, s in in_keys]
+
+    # --- split pass: input axes referenced via // and % get reshaped apart
+    split_spec: Dict[str, Optional[int]] = {}
+    for _, _, e in out_defs:
+        for sub in _iter_exprs(e):
+            if isinstance(sub, BinOp) and sub.op in ("//", "%") and isinstance(
+                    sub.lhs, Key) and isinstance(sub.rhs, Const):
+                n = int(sub.rhs.value)
+                prev = split_spec.get(sub.lhs.name)
+                if prev is not None and prev != n:
+                    raise ValueError(
+                        f"inconsistent split factors for key {sub.lhs.name}")
+                split_spec[sub.lhs.name] = n
+
+    mid_names, mid_shape = [], []
+    for name, size in zip(in_names, in_sizes):
+        if name in split_spec:
+            n = split_spec[name]
+            mid_names += [f"{name}::hi", f"{name}::lo"]
+            mid_shape += [size // n, n]
+        else:
+            mid_names.append(name)
+            mid_shape.append(size)
+    arr = arr.reshape(*mid_shape, *(arr.shape[len(in_sizes):]))
+
+    # --- map each output def to the intermediate axes it consumes
+    def axes_for(e: Expr):
+        if isinstance(e, Key):
+            return [mid_names.index(e.name)]
+        if isinstance(e, BinOp) and e.op == "//":
+            return [mid_names.index(f"{e.lhs.name}::hi")]
+        if isinstance(e, BinOp) and e.op == "%":
+            return [mid_names.index(f"{e.lhs.name}::lo")]
+        if isinstance(e, BinOp) and e.op == "+":
+            # Key(a)*n + <inner>; inner may itself be a split part
+            mul = e.lhs
+            assert isinstance(mul, BinOp) and mul.op == "*", (
+                f"unsupported merge expr {e!r}")
+            return axes_for(mul.lhs) + axes_for(e.rhs)
+        raise ValueError(f"unsupported key remap expr {e!r}")
+
+    perm, out_group_sizes = [], []
+    for _, size, e in out_defs:
+        axes = axes_for(e)
+        perm += axes
+        out_group_sizes.append(size)
+    tail = list(range(len(mid_shape), arr.ndim))
+    arr = arr.transpose(*perm, *tail)
+    arr = arr.reshape(*out_group_sizes, *(arr.shape[len(perm):]))
+    return arr
+
+
+def _iter_exprs(e: Expr):
+    yield e
+    if isinstance(e, BinOp):
+        yield from _iter_exprs(e.lhs)
+        yield from _iter_exprs(e.rhs)
+    elif isinstance(e, Call):
+        for a in e.args:
+            yield from _iter_exprs(a)
+
+
+# ---------------------------------------------------------------------------
+# Join: gather right-side columns along joined key axes
+# ---------------------------------------------------------------------------
+
+
+def _gather_right(left: DenseTable, right: DenseTable, on, rcol: str):
+    """Gather a right column into the joined table's key space.
+
+    Result axes: [*left_keys, *surviving_right_keys] (+payload).
+    """
+    joined = dict(on)  # right_key -> Expr over left keys / left columns
+    l_sizes = left.key_sizes
+    surv = [(k, s) for k, s in right.keys if k not in joined]
+    out_rank = len(l_sizes) + len(surv)
+
+    idx_arrays = []
+    surv_pos = 0
+    for k, s in right.keys:
+        if k in joined:
+            e = joined[k]
+            idx = _join_index(e, left)
+            # reshape/broadcast to [*l_sizes, *1s]
+            idx = jnp.broadcast_to(idx, l_sizes)
+            idx = idx.reshape(l_sizes + (1,) * len(surv))
+        else:
+            shape = [1] * out_rank
+            shape[len(l_sizes) + surv_pos] = s
+            idx = jnp.arange(s, dtype=jnp.int32).reshape(shape)
+            surv_pos += 1
+        idx_arrays.append(idx)
+
+    rarr = right.cols[rcol]
+    if is_vec(right.col_types[rcol]):
+        return rarr[tuple(idx_arrays) + (slice(None),)]
+    return rarr[tuple(idx_arrays)]
+
+
+def _join_index(e: Expr, left: DenseTable) -> jnp.ndarray:
+    """Index expression for a join condition: over left keys or left columns."""
+    if isinstance(e, Col):  # value join, e.g. vocab.token = ids.tok
+        return left.cols[e.name].astype(jnp.int32)
+    return _eval_key_expr(e, left.key_names, left.key_sizes)
+
+
+# ---------------------------------------------------------------------------
+# Fused GroupAgg(Join) → contraction
+# ---------------------------------------------------------------------------
+
+
+def _try_fused_join_agg(node: GroupAgg, env, memo, scalars=None):
+    """Recognise γ_{G, SUM(f(l_col, r_col))}(L ⋈ R) and run it as einsum.
+
+    Conditions: single SUM aggregate whose expression is ``dot(a, b)``,
+    ``mul(a, b)`` or ``scale(dot(a, b), c)`` with ``a`` from the left input
+    and ``b`` from the right; every join condition references at most one
+    left key.  Returns None when the pattern does not apply.
+    """
+    if not isinstance(node.input, Join) or len(node.aggs) != 1:
+        return None
+    out_col, fn, expr = node.aggs[0]
+    if fn != "SUM":
+        return None
+    scale_const = None
+    if isinstance(expr, Call) and expr.fn == "scale" and isinstance(
+            expr.args[1], Const):
+        scale_const = expr.args[1].value
+        expr = expr.args[0]
+    if isinstance(expr, Call) and expr.fn == "dot":
+        contract_payload = True
+        a, b = expr.args
+    elif isinstance(expr, BinOp) and expr.op == "*":
+        contract_payload = False
+        a, b = expr.lhs, expr.rhs
+    else:
+        return None
+    if not (isinstance(a, Col) and isinstance(b, Col)):
+        return None
+
+    join = node.input
+    left = execute(join.left, env, memo, scalars)
+    right = execute(join.right, env, memo, scalars)
+    ls, rs = left.schema(), right.schema()
+    if a.name in left.cols and b.name in right.cols:
+        lcol, rcol = a.name, b.name
+    elif b.name in left.cols and a.name in right.cols:
+        lcol, rcol = b.name, a.name
+    else:
+        return None
+
+    # join conditions must bind each right key to exactly one left key (or be
+    # a value join, which the fused path does not handle)
+    joined: Dict[str, str] = {}
+    for rkey, e in join.on:
+        keys_in = [s for s in _iter_exprs(e) if isinstance(s, Key)]
+        if isinstance(e, Col) or len(keys_in) != 1:
+            return None
+        joined[rkey] = keys_in[0].name
+
+    # gather right along joined axes so its axes are named by left keys
+    rarr = right.cols[rcol]
+    raxes = []
+    for ax, (rkey, size) in enumerate(right.keys):
+        if rkey in joined:
+            e = dict(join.on)[rkey]
+            if not isinstance(e, Key):  # non-trivial map, e.g. h // g
+                idx = _eval_key_expr(
+                    e, left.key_names, left.key_sizes)
+                # the expression depends on exactly one left key; flatten it
+                lname = joined[rkey]
+                lax = left.key_names.index(lname)
+                idx1d = jnp.ravel(
+                    jnp.broadcast_to(
+                        idx, tuple(1 if i != lax else left.key_sizes[i]
+                                   for i in range(len(left.key_sizes)))))
+                rarr = jnp.take(rarr, idx1d, axis=ax)
+            raxes.append(joined[rkey])
+        else:
+            raxes.append(rkey)
+
+    lvec = is_vec(left.col_types[lcol])
+    rvec = is_vec(right.col_types[rcol])
+    larr = left.cols[lcol]
+
+    # assign einsum letters
+    letters = {}
+
+    def letter(name):
+        if name not in letters:
+            letters[name] = chr(ord("a") + len(letters))
+        return letters[name]
+
+    l_sub = "".join(letter(k) for k in left.key_names) + (
+        letter("__w") if lvec else "")
+    r_sub = "".join(letter(k) for k in raxes) + (letter("__w") if rvec else "")
+    out_names = list(node.group_keys)
+    out_vec = (lvec or rvec) and not contract_payload
+    o_sub = "".join(letter(k) for k in out_names) + (
+        letter("__w") if out_vec else "")
+    res = jnp.einsum(f"{l_sub},{r_sub}->{o_sub}", larr, rarr)
+    if scale_const is not None:
+        res = res * scale_const
+
+    out_schema = resolve(node)
+    return DenseTable(
+        keys=out_schema.keys,
+        cols={out_col: res},
+        col_types={out_col: out_schema.col_type(out_col)},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Main interpreter
+# ---------------------------------------------------------------------------
+
+
+def execute(node: RelNode, env: Dict[str, DenseTable],
+            memo: Optional[Dict[int, DenseTable]] = None,
+            scalars: Optional[Dict] = None) -> DenseTable:
+    """Execute a relational plan against ``env`` (table name → DenseTable).
+
+    Scan nodes are never memoised (cache tables mutate between pipeline
+    steps); every other node is memoised by identity so shared subplans
+    across steps evaluate once.
+    """
+    if memo is None:
+        memo = {}
+    if isinstance(node, Scan):
+        if node.table not in env:
+            raise KeyError(f"table {node.table!r} not bound in environment")
+        t = env[node.table]
+        s = node.table_schema
+        if t.key_names != s.key_names or tuple(t.cols) != s.col_names:
+            # positional re-key: physical table layout matches, names differ
+            if t.key_sizes != tuple(sz for _, sz in s.keys):
+                raise ValueError(
+                    f"table {node.table!r}: stored key sizes {t.key_sizes} "
+                    f"!= schema {s.keys}")
+            cols = dict(zip(s.col_names, t.cols.values()))
+            col_types = {n: t.col_types[o]
+                         for n, o in zip(s.col_names, t.cols)}
+            t = DenseTable(keys=s.keys, cols=cols, col_types=col_types)
+        return t
+    if id(node) in memo:
+        return memo[id(node)]
+    out = _execute(node, env, memo, scalars)
+    memo[id(node)] = out
+    return out
+
+
+def _execute(node: RelNode, env, memo, scalars=None) -> DenseTable:
+
+    if isinstance(node, Project):
+        t = execute(node.input, env, memo, scalars)
+        schema = resolve(node)
+        cols, col_types = {}, {}
+        for (cname, _, e), (_, ctype) in zip(node.exprs, schema.cols):
+            arr, vec = _eval_expr(e, t)
+            full = t.key_sizes + ((arr.shape[-1],) if vec else ())
+            arr = jnp.broadcast_to(arr, full) if arr.shape != full else arr
+            if node.keys is not None:
+                arr = _apply_key_remap(arr, t.keys, node.keys, vec)
+            cols[cname] = arr
+            col_types[cname] = ctype
+        return DenseTable(keys=schema.keys, cols=cols, col_types=col_types)
+
+    if isinstance(node, Join):
+        left = execute(node.left, env, memo, scalars)
+        right = execute(node.right, env, memo, scalars)
+        schema = resolve(node)
+        out_cols, out_types = {}, {}
+        surv = [(k, s) for k, s in right.keys if k not in dict(node.on)]
+        pad = (1,) * len(surv)
+        for cname in left.cols:
+            arr = left.cols[cname]
+            vec = is_vec(left.col_types[cname])
+            if vec:
+                arr = arr.reshape(left.key_sizes + pad + (arr.shape[-1],))
+            else:
+                arr = jnp.broadcast_to(arr, left.key_sizes).reshape(
+                    left.key_sizes + pad)
+            out_cols[cname] = arr
+            out_types[cname] = left.col_types[cname]
+        for cname in right.cols:
+            oname = cname if cname not in out_cols else cname + "_r"
+            out_cols[oname] = _gather_right(left, right, node.on, cname)
+            out_types[oname] = right.col_types[cname]
+        # broadcast everything to the full key space lazily: keep as-is; the
+        # consumers (_eval_expr / reductions) broadcast correctly.
+        return DenseTable(keys=schema.keys, cols=out_cols, col_types=out_types)
+
+    if isinstance(node, GroupAgg):
+        fused = _try_fused_join_agg(node, env, memo, scalars)
+        if fused is not None:
+            return fused
+        t = execute(node.input, env, memo, scalars)
+        schema = resolve(node)
+        consumed = [i for i, (k, _) in enumerate(t.keys)
+                    if k not in node.group_keys]
+        cols, col_types = {}, {}
+        for (out, fn, e), (_, ctype) in zip(node.aggs, schema.cols):
+            arr, vec = _eval_expr(e, t)
+            full = t.key_sizes + ((arr.shape[-1],) if vec else ())
+            arr = jnp.broadcast_to(arr, full)
+            red = {"SUM": jnp.sum, "MAX": jnp.max, "MIN": jnp.min,
+                   "AVG": jnp.mean}[fn]
+            cols[out] = red(arr, axis=tuple(consumed))
+            col_types[out] = ctype
+        return DenseTable(keys=schema.keys, cols=cols, col_types=col_types)
+
+    if isinstance(node, Filter):
+        t = execute(node.input, env, memo, scalars)
+        op, lhs, rhs = node.predicate
+        l = _eval_key_expr(lhs, t.key_names, t.key_sizes, scalars)
+        r = _eval_key_expr(rhs, t.key_names, t.key_sizes, scalars)
+        mask = {"<=": jnp.less_equal, "<": jnp.less, "==": jnp.equal,
+                ">=": jnp.greater_equal, ">": jnp.greater}[op](l, r)
+        mask = jnp.broadcast_to(mask, t.key_sizes)
+        cols, col_types = {}, {}
+        for c, arr in t.cols.items():
+            vec = is_vec(t.col_types[c])
+            m = mask[..., None] if vec else mask
+            full = t.key_sizes + ((arr.shape[-1],) if vec else ())
+            arr = jnp.broadcast_to(arr, full)
+            cols[c] = jnp.where(m, arr, node.masked_value)
+            col_types[c] = t.col_types[c]
+        return DenseTable(keys=t.keys, cols=cols, col_types=col_types)
+
+    if isinstance(node, Unnest):
+        t = execute(node.input, env, memo, scalars)
+        schema = resolve(node)
+        varr = t.cols[node.vec_col]
+        cols = {node.elem_col: varr}
+        col_types = {node.elem_col: SCALAR}
+        for c, arr in t.cols.items():
+            if c == node.vec_col:
+                continue
+            cols[c] = jnp.broadcast_to(
+                arr[..., None], t.key_sizes + (varr.shape[-1],))
+            col_types[c] = t.col_types[c]
+        return DenseTable(keys=schema.keys, cols=cols, col_types=col_types)
+
+    if isinstance(node, Collect):
+        t = execute(node.input, env, memo, scalars)
+        schema = resolve(node)
+        ax = t.key_names.index(node.fold_key)
+        arr = jnp.broadcast_to(t.cols[node.scalar_col], t.key_sizes)
+        arr = jnp.moveaxis(arr, ax, -1)
+        cols = {node.vec_col: arr}
+        col_types = {node.vec_col: schema.col_type(node.vec_col)}
+        for c, a in t.cols.items():
+            if c == node.scalar_col:
+                continue
+            # other scalar columns must be constant along the folded key;
+            # take index 0 (used for carrying row ids through collects)
+            cols[c] = jnp.take(jnp.broadcast_to(a, t.key_sizes), 0, axis=ax)
+            col_types[c] = t.col_types[c]
+        return DenseTable(keys=schema.keys, cols=cols, col_types=col_types)
+
+    raise TypeError(node)

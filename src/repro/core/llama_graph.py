@@ -1,0 +1,227 @@
+"""Neural graph construction for the Llama3 case study (paper §4).
+
+Builds the inference computational graph the compiler consumes — prefill
+(full prompt, builds KV caches) and decode (single token against cached
+K/V, §3.4) — and converts model weights into the chunked relational tables
+of Appendix A:
+
+    vocabulary  (token_encode, chunk_id, embedding FLOAT[])
+    freq_each_token (token_id, freq_real FLOAT[], freq_img FLOAT[])
+    {Q,K,V}_weights_L{i} (head_id, row_id, chunk_id, chunk FLOAT[])
+    o_weights_L{i} / GLU_W{1,2,3}_L{i} (row_id, chunk_id, chunk FLOAT[])
+    {FFN,Attention}_Norm_L{i} / Final_Norm (chunk_id, chunk FLOAT[])
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.chunked import ChunkedTensor
+from repro.core.executor import DenseTable, scalar_table, table_from_chunked
+from repro.core.graph import Graph
+from repro.core import relational as ra
+
+
+@dataclasses.dataclass
+class LlamaSpec:
+    """Minimal Llama-family architecture spec for the relational path."""
+
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    rope_theta: float = 500000.0
+    eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+def build_prefill_graph(spec: LlamaSpec, seq_len: int,
+                        cache_len: Optional[int] = None) -> Graph:
+    """Prompt-processing graph: causal self-attention over the full prompt,
+    writing each layer's K/V into cache tables for subsequent decode."""
+    return _build_graph(spec, new_tokens=seq_len,
+                        cache_len=cache_len or seq_len, is_prefill=True)
+
+
+def build_decode_graph(spec: LlamaSpec, cache_len: int) -> Graph:
+    """Single-token generation graph: new K/V rows appended to the caches
+    (INSERT), attention joins the cache tables (paper §3.4)."""
+    return _build_graph(spec, new_tokens=1, cache_len=cache_len,
+                        is_prefill=False)
+
+
+def _build_graph(spec: LlamaSpec, new_tokens: int, cache_len: int,
+                 is_prefill: bool) -> Graph:
+    g = Graph(name=("llama_prefill" if is_prefill else "llama_decode"))
+    T, d, dh = new_tokens, spec.d_model, spec.head_dim
+    H, Hkv = spec.n_heads, spec.n_kv
+
+    g.inputs = ["token_ids", "freq_each_token"]
+    g.annotate("token_ids", ((("t", T)),))
+    g.annotate("freq_each_token", (("t", T), ("f", dh)))
+    g.annotate("vocabulary", (("tok", spec.vocab), ("d", d)))
+    g.initializers["vocabulary"] = None
+
+    x = g.add("embedding", ["vocabulary", "token_ids"], output="x_embed")
+    g.annotate(x, (("t", T), ("d", d)))
+
+    for L in range(spec.n_layers):
+        for w, dims in _layer_weight_dims(spec, L).items():
+            g.initializers[w] = None
+            g.annotate(w, dims)
+
+        xn = g.add("rmsnorm", [x, f"Attention_Norm_L{L}"], eps=spec.eps)
+        q = g.add("linear_heads", [xn, f"Q_weights_L{L}"], n_heads=H,
+                  head_dim=dh, head_key="h")
+        k = g.add("linear_heads", [xn, f"K_weights_L{L}"], n_heads=Hkv,
+                  head_dim=dh, head_key="hk")
+        v = g.add("linear_heads", [xn, f"V_weights_L{L}"], n_heads=Hkv,
+                  head_dim=dh, head_key="hk")
+        q = g.add("rope", [q, "freq_each_token"])
+        k = g.add("rope", [k, "freq_each_token"])
+
+        # keys/values become the cache relations: rename t → tp and give
+        # the cache columns distinct names so attention joins are unambiguous
+        k = g.add("rename", [k], mapping={"t": "tp"}, col_rename="kv")
+        v = g.add("rename", [v], mapping={"t": "tp"}, col_rename="vv")
+        g.inputs += [f"k_cache_L{L}", f"v_cache_L{L}"]
+        k = g.add("concat_rows", [f"k_cache_L{L}", k], cache_len=cache_len,
+                  append_key="tp", offset_name="cache_position")
+        v = g.add("concat_rows", [f"v_cache_L{L}", v], cache_len=cache_len,
+                  append_key="tp", offset_name="cache_position")
+
+        s = g.add("attn_scores", [q, k], n_heads=H, n_kv=Hkv, head_dim=dh)
+        if is_prefill:
+            s = g.add("causal_mask", [s], offset=0)
+        else:
+            # decode: the new token attends to cached positions ≤ its own
+            # absolute position, supplied at runtime (:cache_position)
+            s = g.add("causal_mask", [s], offset_name="cache_position")
+        p = g.add("softmax", [s])
+        o = g.add("attn_output", [p, v], n_heads=H, n_kv=Hkv)
+        o = g.add("merge_heads", [o])
+        o = g.add("linear", [o, f"o_weights_L{L}"], out_features=d)
+        x = g.add("add", [x, o], output=f"x_attn_res_L{L}")
+
+        xn = g.add("rmsnorm", [x, f"FFN_Norm_L{L}"], eps=spec.eps)
+        h1 = g.add("linear", [xn, f"GLU_W1_L{L}"], out_features=spec.d_ff)
+        h1 = g.add("silu", [h1])
+        h3 = g.add("linear", [xn, f"GLU_W3_L{L}"], out_features=spec.d_ff)
+        hg = g.add("mul", [h1, h3])
+        h2 = g.add("linear", [hg, f"GLU_W2_L{L}"], out_features=d)
+        x = g.add("add", [x, h2], output=f"x_mlp_res_L{L}")
+
+    g.initializers["Final_Norm"] = None
+    g.initializers["lm_head"] = None
+    g.annotate("Final_Norm", (("d", d),))
+    g.annotate("lm_head", (("j", spec.vocab), ("d", d)))
+    xf = g.add("rmsnorm", [x, "Final_Norm"], eps=spec.eps)
+    logits = g.add("linear", [xf, "lm_head"], out_features=spec.vocab,
+                   output="logits")
+    g.outputs = ["logits"]
+    return g
+
+
+def _layer_weight_dims(spec: LlamaSpec, L: int) -> Dict[str, tuple]:
+    d, dh, ff = spec.d_model, spec.head_dim, spec.d_ff
+    return {
+        f"Q_weights_L{L}": (("h", spec.n_heads), ("r", dh), ("d", d)),
+        f"K_weights_L{L}": (("hk", spec.n_kv), ("r", dh), ("d", d)),
+        f"V_weights_L{L}": (("hk", spec.n_kv), ("r", dh), ("d", d)),
+        f"o_weights_L{L}": (("j", d), ("d", d)),
+        f"GLU_W1_L{L}": (("j", ff), ("d", d)),
+        f"GLU_W2_L{L}": (("j", d), ("f", ff)),
+        f"GLU_W3_L{L}": (("j", ff), ("d", d)),
+        f"Attention_Norm_L{L}": (("d", d),),
+        f"FFN_Norm_L{L}": (("d", d),),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Data conversion (§3.1): weights → chunked relational tables
+# ---------------------------------------------------------------------------
+
+
+def init_llama_params(spec: LlamaSpec, seed: int = 0) -> Dict[str, np.ndarray]:
+    """Random (deterministic) Llama weights in the conventional dense layout."""
+    rng = np.random.default_rng(seed)
+    d, dh, ff = spec.d_model, spec.head_dim, spec.d_ff
+
+    def w(*shape, scale=None):
+        scale = scale if scale is not None else 1.0 / math.sqrt(shape[-1])
+        return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+    params = {
+        "vocabulary": w(spec.vocab, d, scale=0.02),
+        "Final_Norm": np.ones(d, np.float32),
+        "lm_head": w(spec.vocab, d),
+    }
+    for L in range(spec.n_layers):
+        params[f"Q_weights_L{L}"] = w(spec.n_heads, dh, d)
+        params[f"K_weights_L{L}"] = w(spec.n_kv, dh, d)
+        params[f"V_weights_L{L}"] = w(spec.n_kv, dh, d)
+        params[f"o_weights_L{L}"] = w(d, d)
+        params[f"GLU_W1_L{L}"] = w(ff, d)
+        params[f"GLU_W2_L{L}"] = w(d, ff)
+        params[f"GLU_W3_L{L}"] = w(ff, d)
+        params[f"Attention_Norm_L{L}"] = np.ones(d, np.float32)
+        params[f"FFN_Norm_L{L}"] = np.ones(d, np.float32)
+    return params
+
+
+def convert_weights(params: Dict[str, np.ndarray], chunk_size: int = 128
+                    ) -> Dict[str, DenseTable]:
+    """§3.1 data conversion: every weight → a chunked DenseTable keyed per
+    the Appendix-A schemas (trailing dim chunked, leading dims as keys)."""
+    env: Dict[str, DenseTable] = {}
+    for name, arr in params.items():
+        ct = ChunkedTensor.from_dense(name, arr, chunk_size=min(
+            chunk_size, arr.shape[-1]))
+        env[name] = table_from_chunked(ct)
+    return env
+
+
+def rope_freq_table(positions: np.ndarray, head_dim: int,
+                    theta: float = 500000.0) -> DenseTable:
+    """freq_each_token(token_id, freq_real, freq_img) for given positions."""
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (np.arange(half, dtype=np.float32) / half))
+    ang = positions[:, None].astype(np.float32) * inv[None, :]
+    return DenseTable(
+        keys=(("t", len(positions)),),
+        cols={"fr": jnp.asarray(np.cos(ang)), "fi": jnp.asarray(np.sin(ang))},
+        col_types={"fr": ra.VEC(half), "fi": ra.VEC(half)},
+    )
+
+
+def token_table(ids: np.ndarray) -> DenseTable:
+    return scalar_table("token_ids", (("t", len(ids)),),
+                        jnp.asarray(ids, jnp.int32))
+
+
+def empty_cache_tables(spec: LlamaSpec, cache_len: int, chunk_size: int = 128
+                       ) -> Dict[str, DenseTable]:
+    """Preallocated KV cache tables (tp, hk, c, v FLOAT[chunk])."""
+    dh = spec.head_dim
+    cs = min(chunk_size, dh)
+    nch = dh // cs
+    env = {}
+    for L in range(spec.n_layers):
+        for nm, cn in ((f"k_cache_L{L}", "kv"), (f"v_cache_L{L}", "vv")):
+            env[nm] = DenseTable(
+                keys=(("tp", cache_len), ("hk", spec.n_kv), ("c", nch)),
+                cols={cn: jnp.zeros((cache_len, spec.n_kv, nch, cs),
+                                    jnp.float32)},
+                col_types={cn: ra.VEC(cs)},
+            )
+    return env

@@ -1,0 +1,56 @@
+"""Pipeline runner: executes a compiled relational pipeline on the JAX
+columnar engine (bind steps) with KV-cache INSERT semantics (append steps).
+
+``run_pipeline`` is functional in ``env``: cache tables are returned updated
+so the whole decode step can sit under ``jax.jit`` with donated buffers.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.executor import DenseTable, execute
+from repro.core.opmap import RelPipeline
+
+
+def run_pipeline(
+    pipeline: RelPipeline,
+    env: Dict[str, DenseTable],
+    scalars: Optional[Dict[str, jnp.ndarray]] = None,
+) -> Tuple[Dict[str, DenseTable], Dict[str, DenseTable]]:
+    """Execute all steps. Returns (outputs, updated_env).
+
+    ``scalars`` supplies append offsets (e.g. ``cache_position``) as traced
+    int32 values so the same compiled pipeline serves every decode step.
+    """
+    scalars = scalars or {}
+    # .copy() (not dict(...)) so lazy paging environments keep their
+    # __missing__ weight-fetch behaviour (serving/engine.LazyEnv)
+    env = env.copy()
+    memo: Dict[int, DenseTable] = {}
+
+    for step in pipeline.steps:
+        if step.kind == "bind":
+            env[step.name] = execute(step.rel.plan, env, memo, scalars)
+        elif step.kind == "append":
+            new = execute(step.rel.plan, env, memo, scalars)
+            cache = env[step.name]
+            offset = scalars.get(step.offset_name, 0)
+            ax = cache.key_names.index(step.append_key)
+            assert ax == 0, "cache append key must be the leading key"
+            cols = {}
+            for cname, arr in cache.cols.items():
+                new_arr = new.cols[cname]
+                start = (offset,) + (0,) * (arr.ndim - 1)
+                cols[cname] = jax.lax.dynamic_update_slice(
+                    arr, new_arr.astype(arr.dtype), start)
+            env[step.name] = DenseTable(keys=cache.keys, cols=cols,
+                                        col_types=cache.col_types)
+        else:
+            raise ValueError(step.kind)
+
+    outputs = {o: env[o] for o in pipeline.outputs}
+    return outputs, env

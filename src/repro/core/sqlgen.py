@@ -1,0 +1,294 @@
+"""Stage 2 — SQL code generation (§2.3, §3.3).
+
+Turns the relational pipeline into executable SQL for a target dialect.
+Each bind step becomes a ``CREATE OR REPLACE VIEW`` (or a WITH-CTE chain for
+its interior nodes); KV-cache appends become ``INSERT INTO`` statements
+(§3.4).  Vector operations lower to the paper's Appendix-B UDF macros
+(``hadamard_prod``, ``element_sum``, ``sumForEach``, ``collect_as_array``,
+``view_as_real``) plus the engine's native list functions.
+
+Dialects: ``duckdb`` (list lambdas, ``range()`` table function, 1-based list
+slicing — the paper's evaluation engine) and ``ansi`` (plain UDF names, WITH
+ORDINALITY unnest) for portability.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+from repro.core.relational import (
+    BinOp, Call, Col, Collect, Const, Expr, Filter, GroupAgg, Join, Key,
+    Param, Project, RelNode, RelSchema, Scan, Unnest, expr_type, is_vec,
+    resolve, vec_width, SCALAR,
+)
+from repro.core.opmap import RelPipeline
+
+UDF_PRELUDE_DUCKDB = """\
+-- Appendix B vector UDF macros (DuckDB lambda syntax)
+CREATE OR REPLACE MACRO hadamard_prod(arr1, arr2) AS
+  (list_transform(list_zip(arr1, arr2), x -> x[1] * x[2]));
+CREATE OR REPLACE MACRO element_sum(arr1, arr2) AS
+  (list_transform(list_zip(arr1, arr2), x -> x[1] + x[2]));
+CREATE OR REPLACE MACRO element_neg_sum(arr1, arr2) AS
+  (list_transform(list_zip(arr1, arr2), x -> x[1] - x[2]));
+CREATE OR REPLACE MACRO element_div(arr1, arr2) AS
+  (list_transform(list_zip(arr1, arr2), x -> x[1] / x[2]));
+CREATE OR REPLACE MACRO view_as_real(arr1, arr2) AS (list_concat(arr1, arr2));
+CREATE OR REPLACE MACRO collect_as_array(idx, val) AS
+  (list_transform(list_sort(list_zip(idx, val)), x -> x[2]));
+CREATE OR REPLACE MACRO sumForEach(arrs) AS
+  (list_reduce(arrs, (acc, row) ->
+     list_transform(list_zip(acc, row), p -> p[1] + p[2])));
+"""
+
+
+def _sn(name: str) -> str:
+    """Sanitise a tensor name into a SQL identifier."""
+    return re.sub(r"[^A-Za-z0-9_]", "_", name)
+
+
+class SQLGenerator:
+    def __init__(self, pipeline: RelPipeline, dialect: str = "duckdb"):
+        assert dialect in ("duckdb", "ansi")
+        self.p = pipeline
+        self.dialect = dialect
+        # roots of earlier steps referenced by name
+        self.named_roots: Dict[int, str] = {}
+        self._cte_counter = 0
+
+    # -- expression rendering -------------------------------------------------
+
+    def _vec_lambda(self, arr: str, body: str) -> str:
+        if self.dialect == "duckdb":
+            return f"list_transform({arr}, x -> {body})"
+        return f"map_vec({arr}, '{body}')"
+
+    def render_expr(self, e: Expr, schema: RelSchema, qual: str = "") -> str:
+        q = f"{qual}." if qual else ""
+
+        def rec(e: Expr) -> Tuple[str, bool]:
+            if isinstance(e, Col):
+                return f"{q}{_sn(e.name)}", is_vec(schema.col_type(e.name))
+            if isinstance(e, Key):
+                return f"{q}{_sn(e.name)}", False
+            if isinstance(e, Const):
+                v = e.value
+                return (str(int(v)) if float(v).is_integer() and abs(v) < 2**31
+                        else f"{v!r}"), False
+            if isinstance(e, Param):
+                return f":{e.name}", False
+            if isinstance(e, BinOp):
+                (ls, lv), (rs, rv) = rec(e.lhs), rec(e.rhs)
+                if lv and rv:
+                    macro = {"*": "hadamard_prod", "+": "element_sum",
+                             "-": "element_neg_sum", "/": "element_div"}[e.op]
+                    return f"{macro}({ls}, {rs})", True
+                if lv != rv:  # vec ⊙ scalar broadcast
+                    arr, s = (ls, rs) if lv else (rs, ls)
+                    body = (f"x {e.op} ({s})" if lv or e.op in "+*"
+                            else f"({s}) {e.op} x")
+                    return self._vec_lambda(arr, body), True
+                op = {"//": "//" if self.dialect == "duckdb" else "/",
+                      "%": "%"}.get(e.op, e.op)
+                return f"({ls} {op} {rs})", False
+            if isinstance(e, Call):
+                args = [rec(a) for a in e.args]
+                return self._render_call(e.fn, e.args, args, schema)
+            raise TypeError(e)
+
+        return rec(e)[0]
+
+    def _render_call(self, fn: str, raw_args, args: List[Tuple[str, bool]],
+                     schema: RelSchema) -> Tuple[str, bool]:
+        a0, v0 = args[0]
+        if fn == "dot":
+            a1, _ = args[1]
+            if self.dialect == "duckdb":
+                return f"list_dot_product({a0}, {a1})", False
+            return f"dot({a0}, {a1})", False
+        if fn == "vsum":
+            return (f"list_sum({a0})" if self.dialect == "duckdb"
+                    else f"vsum({a0})"), False
+        if fn == "scale":
+            a1, _ = args[1]
+            if v0:
+                return self._vec_lambda(a0, f"x * ({a1})"), True
+            return f"({a0} * {a1})", False
+        if fn == "concat":
+            a1, _ = args[1]
+            return f"view_as_real({a0}, {a1})", True
+        if fn in ("first_half", "second_half"):
+            w = vec_width(expr_type(raw_args[0], schema))
+            if fn == "first_half":
+                return f"{a0}[1:{w // 2}]", True
+            return f"{a0}[{w // 2 + 1}:{w}]", True
+        scalar_bodies = {
+            "exp": "exp(x)", "neg": "-x", "sqrt": "sqrt(x)",
+            "rsqrt": "1.0 / sqrt(x)", "sigmoid": "1.0 / (1.0 + exp(-x))",
+            "silu": "x / (1.0 + exp(-x))", "square": "x * x",
+            "gelu": "0.5 * x * (1.0 + tanh(0.7978845608 * (x + 0.044715 * x * x * x)))",
+            "identity": "x",
+        }
+        if fn in scalar_bodies:
+            body = scalar_bodies[fn]
+            if v0:
+                return self._vec_lambda(a0, body), True
+            return f"({body.replace('x', f'({a0})')})", False
+        raise NotImplementedError(f"SQL for intrinsic {fn}")
+
+    # -- node rendering --------------------------------------------------------
+
+    def _ref(self, node: RelNode, ctes: List[Tuple[str, str]]) -> str:
+        """Render a node as a FROM-able reference (table, view or CTE)."""
+        if id(node) in self.named_roots:
+            return self.named_roots[id(node)]
+        if isinstance(node, Scan):
+            return _sn(node.table)
+        self._cte_counter += 1
+        name = f"t{self._cte_counter}"
+        ctes.append((name, self.render_select(node, ctes)))
+        return name
+
+    def render_select(self, node: RelNode, ctes: List[Tuple[str, str]]) -> str:
+        s = resolve(node)
+        if isinstance(node, Scan):
+            return f"SELECT * FROM {_sn(node.table)}"
+
+        if isinstance(node, Project):
+            src = self._ref(node.input, ctes)
+            in_s = resolve(node.input)
+            parts = []
+            if node.keys is None:
+                parts += [_sn(k) for k in in_s.key_names]
+            else:
+                for k, _, e in node.keys:
+                    parts.append(f"{self.render_expr(e, in_s)} AS {_sn(k)}")
+            for (c, _, e), (_, _t) in zip(node.exprs, s.cols):
+                parts.append(f"{self.render_expr(e, in_s)} AS {_sn(c)}")
+            return f"SELECT {', '.join(parts)} FROM {src}"
+
+        if isinstance(node, Join):
+            lsrc = self._ref(node.left, ctes)
+            rsrc = self._ref(node.right, ctes)
+            ls, rs = resolve(node.left), resolve(node.right)
+            conds = []
+            for rkey, e in node.on:
+                conds.append(
+                    f"R.{_sn(rkey)} = {self.render_expr(e, ls, qual='L')}")
+            joined = {k for k, _ in node.on}
+            parts = [f"L.{_sn(k)}" for k in ls.key_names]
+            parts += [f"R.{_sn(k)}" for k in rs.key_names if k not in joined]
+            parts += [f"L.{_sn(c)}" for c in ls.col_names]
+            lcols = set(ls.col_names)
+            for c in rs.col_names:
+                alias = c if c not in lcols else c + "_r"
+                parts.append(f"R.{_sn(c)} AS {_sn(alias)}")
+            return (f"SELECT {', '.join(parts)} FROM {lsrc} AS L "
+                    f"JOIN {rsrc} AS R ON {' AND '.join(conds)}")
+
+        if isinstance(node, GroupAgg):
+            src = self._ref(node.input, ctes)
+            in_s = resolve(node.input)
+            keys = [_sn(k) for k in node.group_keys]
+            parts = list(keys)
+            for out, fn, e in node.aggs:
+                body = self.render_expr(e, in_s)
+                if is_vec(expr_type(e, in_s)) and fn == "SUM":
+                    parts.append(f"sumForEach(LIST({body})) AS {_sn(out)}")
+                else:
+                    parts.append(f"{fn}({body}) AS {_sn(out)}")
+            gb = f" GROUP BY {', '.join(keys)}" if keys else ""
+            return f"SELECT {', '.join(parts)} FROM {src}{gb}"
+
+        if isinstance(node, Filter):
+            src = self._ref(node.input, ctes)
+            in_s = resolve(node.input)
+            op, lhs, rhs = node.predicate
+            pred = (f"{self.render_expr(lhs, in_s)} {op} "
+                    f"{self.render_expr(rhs, in_s)}")
+            return f"SELECT * FROM {src} WHERE {pred}"
+
+        if isinstance(node, Unnest):
+            src = self._ref(node.input, ctes)
+            in_s = resolve(node.input)
+            w = vec_width(in_s.col_type(node.vec_col))
+            keys = [f"S.{_sn(k)}" for k in in_s.key_names]
+            others = [f"S.{_sn(c)}" for c, t in in_s.cols if c != node.vec_col]
+            if self.dialect == "duckdb":
+                return (f"SELECT {', '.join(keys + others)}, E.{node.elem_key}, "
+                        f"S.{_sn(node.vec_col)}[E.{node.elem_key} + 1] AS "
+                        f"{node.elem_col} FROM {src} AS S, "
+                        f"(SELECT UNNEST(range({w})) AS {node.elem_key}) AS E")
+            return (f"SELECT {', '.join(keys + others)}, U.ord - 1 AS "
+                    f"{node.elem_key}, U.{node.elem_col} FROM {src} AS S, "
+                    f"UNNEST(S.{_sn(node.vec_col)}) WITH ORDINALITY AS "
+                    f"U({node.elem_col}, ord)")
+
+        if isinstance(node, Collect):
+            src = self._ref(node.input, ctes)
+            in_s = resolve(node.input)
+            keys = [_sn(k) for k in in_s.key_names if k != node.fold_key]
+            parts = list(keys)
+            parts.append(
+                f"collect_as_array(LIST({_sn(node.fold_key)}), "
+                f"LIST({_sn(node.scalar_col)})) AS {_sn(node.vec_col)}")
+            gb = f" GROUP BY {', '.join(keys)}" if keys else ""
+            return f"SELECT {', '.join(parts)} FROM {src}{gb}"
+
+        raise TypeError(node)
+
+    # -- pipeline rendering ----------------------------------------------------
+
+    def render_step_sql(self, name: str, plan: RelNode,
+                        create: str = "VIEW") -> str:
+        ctes: List[Tuple[str, str]] = []
+        body = self.render_select(plan, ctes)
+        if ctes:
+            with_clause = ",\n  ".join(f"{n} AS ({sql})" for n, sql in ctes)
+            body = f"WITH {with_clause}\n{body}"
+        return f"CREATE OR REPLACE {create} {_sn(name)} AS\n{body};"
+
+    def generate(self, include_ddl: bool = True) -> str:
+        """Emit the full SQL script for the pipeline."""
+        out: List[str] = []
+        if include_ddl:
+            if self.dialect == "duckdb":
+                out.append(UDF_PRELUDE_DUCKDB)
+            out.append("-- weight table DDL (paper §3.1 data conversion)")
+            for name, schema in self.p.weight_schemas.items():
+                out.append(self._ddl(name, schema))
+            out.append("-- input / cache table DDL")
+            for name, schema in self.p.input_schemas.items():
+                out.append(self._ddl(name, schema))
+        for step in self.p.steps:
+            root = step.rel.plan
+            if step.kind == "bind":
+                out.append(self.render_step_sql(step.name, root))
+                self.named_roots[id(root)] = _sn(step.name)
+            else:  # append — KV-cache INSERT (§3.4)
+                ctes: List[Tuple[str, str]] = []
+                sel = self.render_select(root, ctes)
+                if ctes:
+                    with_clause = ",\n  ".join(
+                        f"{n} AS ({sql})" for n, sql in ctes)
+                    sel = f"WITH {with_clause}\n{sel}"
+                out.append(
+                    f"-- KV-cache append (new rows at :{step.offset_name})\n"
+                    f"INSERT INTO {_sn(step.name)}\n{sel};")
+        return "\n\n".join(out)
+
+    @staticmethod
+    def _ddl(name: str, schema: RelSchema) -> str:
+        cols = [f"{_sn(k)} INT32" for k in schema.key_names]
+        for c, t in schema.cols:
+            if is_vec(t):
+                cols.append(f"{_sn(c)} FLOAT[{vec_width(t)}]")
+            else:
+                cols.append(f"{_sn(c)} FLOAT")
+        return f"CREATE TABLE {_sn(name)} ({', '.join(cols)});"
+
+
+def generate_sql(pipeline: RelPipeline, dialect: str = "duckdb",
+                 include_ddl: bool = True) -> str:
+    return SQLGenerator(pipeline, dialect=dialect).generate(include_ddl)

@@ -1,0 +1,72 @@
+"""Distributed-optimization collectives: gradient compression with error
+feedback and hierarchical (pod-aware) reduction helpers.
+
+Under pure pjit, gradient all-reduces are inserted by the partitioner from
+the shardings; these helpers are for the explicit shard_map paths and for
+the compression transform applied inside train_step.
+
+int8 error-feedback compression: g is quantised to int8 against a globally
+agreed scale (one extra scalar psum), summed in int32 (wraparound-safe for
+≤ 2^23 summands), and dequantised; the quantisation residual is carried to
+the next step (error feedback), which keeps SGD/Adam convergence unbiased
+in expectation.  Wire bytes drop 4× for the payload (fp32) or 2× (bf16);
+the scale exchange is O(1) per tensor.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(g: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    q = jnp.clip(jnp.round(g / scale), -127, 127)
+    return q.astype(jnp.int8)
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_int8_allreduce(g: jnp.ndarray, err: jnp.ndarray, axis_names
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Error-feedback int8 all-reduce over ``axis_names`` (inside shard_map).
+
+    Returns (mean gradient, new error state).
+    """
+    gf = g.astype(jnp.float32) + err
+    local_max = jnp.max(jnp.abs(gf))
+    global_max = jax.lax.pmax(local_max, axis_names)
+    scale = jnp.maximum(global_max / 127.0, 1e-12)
+    q = quantize_int8(gf, scale)
+    new_err = gf - dequantize_int8(q, scale)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_names)
+    n = 1
+    for a in ((axis_names,) if isinstance(axis_names, str) else axis_names):
+        n *= jax.lax.axis_size(a)
+    mean = dequantize_int8(total, scale) / n
+    return mean.astype(g.dtype), new_err
+
+
+def hierarchical_psum(x: jnp.ndarray, pod_axis: str = "pod",
+                      data_axis: str = "data") -> jnp.ndarray:
+    """Pod-aware all-reduce: reduce-scatter in-pod → cross-pod all-reduce on
+    the scattered shard → all-gather in-pod.  Moves only 1/data_size of the
+    payload over the (slow) cross-pod links instead of the whole tensor.
+    """
+    n_data = jax.lax.axis_size(data_axis)
+    if x.shape[0] % n_data != 0:
+        # fall back for indivisible leading dims
+        return jax.lax.psum(x, (pod_axis, data_axis))
+    shard = jax.lax.psum_scatter(x, data_axis, scatter_dimension=0,
+                                 tiled=True)
+    shard = jax.lax.psum(shard, pod_axis)
+    return jax.lax.all_gather(shard, data_axis, axis=0, tiled=True)
+
+
+def init_error_state(grads) -> Dict:
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads)

@@ -1,0 +1,151 @@
+"""Logical-axis sharding rules (MaxText-style) and activation constraints.
+
+Model code annotates tensors with *logical* axis names
+(``shard(x, "batch", "seq", "embed")``); the launcher installs a rule set
+mapping logical names to mesh axes.  Outside a mesh context annotations are
+no-ops, so the same model code runs in unit tests (1 CPU device), smoke
+tests, and the 512-chip dry-run.
+
+Default rules (single pod, mesh ("data", "model")):
+
+    batch   → ("data",)          DP over the batch
+    vocab   → ("model",)         TP over vocab rows (embed + lm head)
+    heads   → ("model",)         TP over attention heads
+    expert  → ("model",)         EP over routed experts
+    mlp     → ("model",)         TP over the FFN hidden dim
+    inner   → ("model",)         TP over SSM inner channels
+    kv_heads→ ("model",)         TP over KV heads (skipped if indivisible)
+    embed/seq/qk/stage/...       replicated by default
+
+Multi-pod prepends the "pod" axis to ``batch`` (hierarchical DP) unless the
+pipeline launcher reassigns it to stages.  ``fsdp=True`` additionally shards
+the *embed / contraction* dimension of weights over "data" (ZeRO-3 style),
+which is required to fit the larger assigned configs.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    "batch": ("data",),
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "expert": ("model",),
+    "mlp": ("model",),
+    "inner": ("model",),
+    "embed": (),
+    "embed_fsdp": (),      # weights' contraction dim; ("data",) under FSDP
+    "seq": (),
+    "kv_seq": (),
+    "qk": (),
+    "state": (),
+    "frames": (),
+    "image": (),
+    "layers": (),
+}
+
+
+def multi_pod_rules(fsdp: bool = False) -> Dict[str, Tuple[str, ...]]:
+    rules = dict(DEFAULT_RULES)
+    rules["batch"] = ("pod", "data")
+    if fsdp:
+        rules["embed_fsdp"] = ("data",)
+    return rules
+
+
+def single_pod_rules(fsdp: bool = False) -> Dict[str, Tuple[str, ...]]:
+    rules = dict(DEFAULT_RULES)
+    if fsdp:
+        rules["embed_fsdp"] = ("data",)
+    return rules
+
+
+@contextlib.contextmanager
+def sharding_rules(mesh: Optional[Mesh], rules: Dict[str, Tuple[str, ...]]):
+    """Install (mesh, rules) for `shard()` / `logical_spec()` lookups."""
+    prev = getattr(_state, "ctx", None)
+    _state.ctx = (mesh, rules)
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    ctx = getattr(_state, "ctx", None)
+    return ctx[0] if ctx else None
+
+
+def logical_spec(*logical: Optional[str]) -> P:
+    """Resolve logical axis names to a PartitionSpec under current rules.
+
+    An axis is dropped (replicated) when its rule is empty or the named
+    dimension is not divisible by the mesh extent — checked by callers that
+    know the dim size via ``logical_spec_for_shape``.
+    """
+    ctx = getattr(_state, "ctx", None)
+    if ctx is None:
+        return P()
+    _, rules = ctx
+    parts = []
+    for name in logical:
+        if name is None:
+            parts.append(None)
+            continue
+        axes = rules.get(name, ())
+        parts.append(tuple(axes) if len(axes) > 1 else (axes[0] if axes else None))
+    return P(*parts)
+
+
+def _mesh_extent(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def logical_spec_for_shape(shape: Sequence[int],
+                           *logical: Optional[str]) -> P:
+    """Like ``logical_spec`` but drops mesh axes that do not divide the
+    corresponding dimension (e.g. kv_heads=1 cannot shard over model=16)."""
+    ctx = getattr(_state, "ctx", None)
+    if ctx is None:
+        return P()
+    mesh, _ = ctx
+    spec = logical_spec(*logical)
+    if mesh is None:
+        return spec
+    parts = []
+    for dim, axes in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        ext = _mesh_extent(mesh, axes)
+        parts.append(axes if ext > 1 and dim % ext == 0 else None)
+    return P(*parts)
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Apply a logical-axis sharding constraint (no-op without a mesh)."""
+    ctx = getattr(_state, "ctx", None)
+    if ctx is None or ctx[0] is None:
+        return x
+    mesh, _ = ctx
+    spec = logical_spec_for_shape(x.shape, *logical)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec))
+
+
+def named_sharding(mesh: Mesh, *spec_parts) -> NamedSharding:
+    return NamedSharding(mesh, P(*spec_parts))

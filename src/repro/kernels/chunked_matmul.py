@@ -1,0 +1,65 @@
+"""Chunked relational GEMM on the MXU.
+
+The paper's MatMul (§2.1–2.2): chunk tables R_X(i, c, x_chunk) and
+R_W(j, c, w_chunk) are equi-joined on the chunk index c and γ-aggregated
+with SUM(dot(x_chunk, w_chunk)) grouped by (i, j).  On TPU, the join key
+*is* the grid's reduction dimension: grid step (i, j, c) streams the
+(bm × bk) X tile and (bn × bk) W tile whose chunk ranges match (the join),
+the MXU computes the per-chunk partial dot products, and a VMEM f32
+accumulator performs the γ-SUM.  BlockSpec index maps are the relational
+keys; tiles default to 128 to align chunk_size with the MXU systolic array.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref, *, n_chunks: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # join on chunk index (both tiles share chunk range c) + partial γ-SUM
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(c == n_chunks - 1)
+    def _emit():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def chunked_matmul(x: jnp.ndarray, w: jnp.ndarray, *, bm: int = 128,
+                   bn: int = 128, bk: int = 128, interpret: bool = False
+                   ) -> jnp.ndarray:
+    """C = X Wᵀ over chunked tables. x [M, K], w [N, K] → [M, N].
+
+    bk is the relational chunk_size; M, N, K must divide by the tiles.
+    """
+    M, K = x.shape
+    N, K2 = w.shape
+    assert K == K2 and M % bm == 0 and N % bn == 0 and K % bk == 0
+    n_chunks = K // bk
+    grid = (M // bm, N // bn, n_chunks)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_chunks=n_chunks),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, c: (i, c)),  # R_X key (i, c)
+            pl.BlockSpec((bn, bk), lambda i, j, c: (j, c)),  # R_W key (j, c)
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, c: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

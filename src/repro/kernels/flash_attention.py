@@ -1,0 +1,103 @@
+"""Causal flash attention (prefill/training) — tiled online softmax.
+
+Relational reading (DESIGN.md §6): this is the compiler's CTE-fusion
+post-optimisation taken to its TPU conclusion — the QKᵀ join, the row-max/
+row-sum γ aggregations and the V join are fused into one pass so the T×T
+score relation never materialises.  Running max/sum live in VMEM scratch
+(the γ accumulators); KV tiles stream block-by-block.
+
+Layout: q [B, H, T, d], k/v [B, H, S, d] (GQA folded by the caller).
+Grid (B·H, T/bq, S/bk), KV innermost; causal skipping keeps the lower
+triangle only.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, bq: int, bk: int, n_kv: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    should_run = True
+    if causal:
+        # lower-triangular tiles only: kv-block start ≤ q-block end
+        should_run = ki * bk <= qi * bq + (bq - 1)
+
+    @pl.when(should_run)
+    def _step():
+        q = q_ref[0]                       # [bq, d]
+        k = k_ref[0]                       # [bk, d]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale   # [bq, bk]
+        if causal:
+            rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            cols = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+
+        m_prev = m_ref[...]                # [bq, 1]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)             # [bq, bk] f32
+        alpha = jnp.exp(m_prev - m_new)    # rescale old mass
+        l_ref[...] = alpha * l_ref[...] + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = alpha * acc_ref[...] + jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _emit():
+        o_ref[0] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, bq: int = 128, bk: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    B, H, T, d = q.shape
+    S = k.shape[2]
+    bq = min(bq, T)
+    bk = min(bk, S)
+    assert T % bq == 0 and S % bk == 0
+    scale = 1.0 / (d ** 0.5)
+    grid = (B * H, T // bq, S // bk)
+    qf = q.reshape(B * H, T, d)
+    kf = k.reshape(B * H, S, d)
+    vf = v.reshape(B * H, S, d)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, bq=bq, bk=bk,
+                          n_kv=S // bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j: (h, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j: (h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, T, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max m
+            pltpu.VMEM((bq, 1), jnp.float32),   # running sum l
+            pltpu.VMEM((bq, d), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, T, d)

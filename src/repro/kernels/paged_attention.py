@@ -1,0 +1,118 @@
+"""Paged decode attention — the KV-cache-table join as a TPU kernel.
+
+The paper's decode query joins the new token against cache tables keyed by
+token index (§3.4).  In the paged layout (serving/kvcache.py) that join is
+a *page-table indirection*: for sequence b, page slot p, the rows live in
+pool page ``page_table[b, p]``.  Here the page table is a scalar-prefetch
+operand and the BlockSpec index map — the relational join key — resolves
+each grid step's pool page, so the gather happens in the DMA engine, not
+as a materialised relation.  Online softmax accumulates across pages in
+VMEM (the γ over the cache's chunk key).
+
+Layouts: q [B, H, d], pools [P, page, Hkv, d] → out [B, H, d].
+Grid (B, max_pages), pages innermost.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(pt_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, page: int, scale: float, n_groups: int):
+    b = pl.program_id(0)
+    p = pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = lens_ref[b]
+    mapped = pt_ref[b, p] >= 0
+
+    @pl.when((p * page < length) & mapped)
+    def _step():
+        q = q_ref[0]                      # [H, d]
+        k = k_ref[0]                      # [page, Hkv, d]
+        v = v_ref[0]
+        H, d = q.shape
+        hkv = k.shape[1]
+        qg = q.reshape(hkv, n_groups, d)
+        s = jax.lax.dot_general(          # join q rows ⋈ cached rows
+            qg, k, (((2,), (2,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32) * scale   # [hkv, g, page]
+        slot = p * page + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 2)
+        s = jnp.where(slot < length, s, NEG_INF)
+
+        m_prev = m_ref[...]               # [hkv, g, 1]... stored flat [H,1]
+        m_prev = m_prev.reshape(hkv, n_groups, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        pr = jnp.exp(s - m_new)           # [hkv, g, page]
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_ref[...].reshape(hkv, n_groups, 1) + jnp.sum(
+            pr, -1, keepdims=True)
+        acc = acc_ref[...].reshape(hkv, n_groups, -1)
+        acc = alpha * acc + jax.lax.dot_general(
+            pr.astype(v.dtype), v, (((2,), (0,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new.reshape(-1, 1)
+        l_ref[...] = l_new.reshape(-1, 1)
+        acc_ref[...] = acc.reshape(-1, acc.shape[-1])
+
+    @pl.when(p == pl.num_programs(1) - 1)
+    def _emit():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(
+            o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q: jnp.ndarray, k_pool: jnp.ndarray, v_pool: jnp.ndarray,
+                    page_table: jnp.ndarray, lengths: jnp.ndarray, *,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q [B,H,d], pools [P,page,Hkv,d], page_table [B,max_pages], lens [B]."""
+    B, H, d = q.shape
+    P, page, Hkv, _ = k_pool.shape
+    max_pages = page_table.shape[1]
+    n_groups = H // Hkv
+    scale = 1.0 / (d ** 0.5)
+    pt = jnp.asarray(page_table, jnp.int32)
+    safe_pt = jnp.where(pt < 0, 0, pt)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,            # page table + lengths
+        grid=(B, max_pages),
+        in_specs=[
+            pl.BlockSpec((1, H, d), lambda b, p, pt_s, lens_s: (b, 0, 0)),
+            # the join: pool page selected through the page table
+            pl.BlockSpec((1, page, Hkv, d),
+                         lambda b, p, pt_s, lens_s: (pt_s[b, p], 0, 0, 0)),
+            pl.BlockSpec((1, page, Hkv, d),
+                         lambda b, p, pt_s, lens_s: (pt_s[b, p], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, d),
+                               lambda b, p, pt_s, lens_s: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, 1), jnp.float32),
+            pltpu.VMEM((H, d), jnp.float32),
+        ],
+    )
+    kern = functools.partial(_kernel, page=page, scale=scale,
+                             n_groups=n_groups)
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, d), q.dtype),
+        interpret=interpret,
+    )(safe_pt, jnp.asarray(lengths, jnp.int32), q, k_pool, v_pool)

@@ -1,0 +1,61 @@
+"""Pure-jnp oracles for every kernel (the correctness contract).
+
+Each function is the mathematical definition the Pallas kernels must match
+(tests sweep shapes/dtypes and assert_allclose against these).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_matmul(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """C = X Wᵀ — the paper's MatMul-as-join+γ. x [M,K], w [N,K] → [M,N]."""
+    return jnp.dot(x, w.T, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, scale: float | None = None
+                    ) -> jnp.ndarray:
+    """q [B,H,T,d], k/v [B,H,S,d] → [B,H,T,d]."""
+    B, H, T, d = q.shape
+    S = k.shape[2]
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    s = jnp.einsum("bhtd,bhsd->bhts", q, k).astype(jnp.float32) * scale
+    if causal:
+        mask = jnp.arange(T)[:, None] >= jnp.arange(S)[None, :]
+        s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhts,bhsd->bhtd", p.astype(q.dtype), v)
+
+
+def paged_attention(q: jnp.ndarray, k_pool: jnp.ndarray, v_pool: jnp.ndarray,
+                    page_table: jnp.ndarray, lengths: jnp.ndarray
+                    ) -> jnp.ndarray:
+    """Decode attention over KV-cache tables (paper §3.4).
+
+    q          [B, H, d]           one query token per sequence
+    k/v_pool   [P, page, Hkv, d]   the pooled cache pages
+    page_table [B, max_pages]      per-sequence page ids (-1 unmapped)
+    lengths    [B]                 valid tokens per sequence
+    → [B, H, d]
+    """
+    B, H, d = q.shape
+    P, page, Hkv, _ = k_pool.shape
+    max_pages = page_table.shape[1]
+    g = H // Hkv
+    scale = 1.0 / (d ** 0.5)
+
+    pt = jnp.where(page_table < 0, 0, page_table)
+    k = k_pool[pt]              # [B, max_pages, page, Hkv, d]
+    v = v_pool[pt]
+    k = k.reshape(B, max_pages * page, Hkv, d)
+    v = v.reshape(B, max_pages * page, Hkv, d)
+    qg = q.reshape(B, Hkv, g, d)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k).astype(jnp.float32) * scale
+    valid = jnp.arange(max_pages * page)[None, :] < lengths[:, None]
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(q.dtype), v)
+    return out.reshape(B, H, d)

@@ -1,0 +1,258 @@
+"""Attention blocks: GQA/MQA (+qk-norm, sliding window), cross-attention,
+and DeepSeek-style MLA (multi-head latent attention) with compressed cache.
+
+A single code path serves training (no cache), prefill (cache write) and
+decode (cache append + single query): the query block always attends over a
+KV block whose positions are explicit, and masking is computed from
+positions, so ``jit`` specialises each case by shape only.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models.layers import dense_init, rope_apply, rope_table, \
+    vec_norm_apply
+
+NEG_INF = -1e30
+
+
+# -- masking -------------------------------------------------------------------
+
+
+def make_mask(q_pos: jnp.ndarray, kv_pos: jnp.ndarray, causal: bool,
+              window: int = 0, kv_valid: Optional[jnp.ndarray] = None
+              ) -> jnp.ndarray:
+    """Additive mask [Tq, Skv] from explicit positions."""
+    q = q_pos[:, None]
+    s = kv_pos[None, :]
+    ok = jnp.ones((q_pos.shape[0], kv_pos.shape[0]), bool)
+    if causal:
+        ok &= s <= q
+    if isinstance(window, int):
+        if window > 0:
+            ok &= s > q - window
+    else:  # traced per-layer window (0 disables)
+        ok &= jnp.where(window > 0, s > q - window, True)
+    if kv_valid is not None:
+        ok &= s < kv_valid
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+# -- grouped-query attention -----------------------------------------------------
+
+
+def attn_init(key, cfg: ModelConfig, cross: bool = False,
+              n_heads: Optional[int] = None,
+              n_kv: Optional[int] = None) -> Dict:
+    d, dh = cfg.d_model, cfg.head_dim
+    H = n_heads or cfg.n_heads
+    Hkv = n_kv or cfg.n_kv
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], d, (H, dh), cfg),
+        "wk": dense_init(ks[1], d, (Hkv, dh), cfg),
+        "wv": dense_init(ks[2], d, (Hkv, dh), cfg),
+        "wo": dense_init(ks[3], H * dh, d, cfg).reshape(H, dh, d),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((dh,), p["wq"].dtype)
+        p["k_norm"] = jnp.ones((dh,), p["wq"].dtype)
+    if cross:
+        p["gate"] = jnp.zeros((), p["wq"].dtype)  # llama-vision tanh gate
+    return p
+
+
+def _sdpa(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+          mask: jnp.ndarray, n_kv: int) -> jnp.ndarray:
+    """Grouped scaled-dot-product attention.
+
+    q [B,T,H,dh], k/v [B,S,Hkv,dh], mask [T,S] additive (f32).
+    """
+    B, T, H, dh = q.shape
+    S = k.shape[1]
+    g = H // n_kv
+    qg = q.reshape(B, T, n_kv, g, dh)
+    scores = jnp.einsum("btkgd,bskd->bkgts", qg, k) / jnp.sqrt(
+        jnp.asarray(dh, q.dtype))
+    scores = scores.astype(jnp.float32) + mask
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgts,bskd->btkgd", p, v)
+    return out.reshape(B, T, H, dh)
+
+
+def attn_apply(
+    p: Dict,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    q_pos: jnp.ndarray,
+    kv_x: Optional[jnp.ndarray] = None,
+    cache: Optional[Dict[str, jnp.ndarray]] = None,
+    cache_pos: Optional[jnp.ndarray] = None,
+    kv_valid: Optional[jnp.ndarray] = None,
+    causal: bool = True,
+    window: int = 0,
+    rope_cs: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+    kv_rope_cs: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+    meta_kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """Returns (output, updated_cache).
+
+    cache: {"k","v"} [B, S_max, Hkv, dh]; new K/V written at ``cache_pos``.
+    kv_x: source for K/V (cross-attention) — no cache write when given and
+    cache already holds the encoder projections.
+    """
+    B, T, _ = x.shape
+    H = p["wq"].shape[1]
+    Hkv = p["wk"].shape[1]
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    q = shard(q, "batch", None, "heads", None)
+    if cfg.qk_norm:
+        q = vec_norm_apply(p.get("q_norm"), q, cfg.eps)
+
+    if kv_x is None:
+        kv_src = x
+    else:
+        kv_src = kv_x
+    k = jnp.einsum("btd,dhk->bthk", kv_src, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", kv_src, p["wv"])
+    k = shard(k, "batch", None, "kv_heads", None)
+    v = shard(v, "batch", None, "kv_heads", None)
+    if cfg.qk_norm:
+        k = vec_norm_apply(p.get("k_norm"), k, cfg.eps)
+
+    if rope_cs is not None:
+        q = rope_apply(q, *rope_cs)
+        k = rope_apply(k, *(kv_rope_cs or rope_cs))
+
+    new_cache = cache
+    if cache is not None:
+        start = cache_pos if cache_pos is not None else 0
+        kk = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, start, 0, 0))
+        vv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, start, 0, 0))
+        new_cache = {"k": kk, "v": vv}
+        k, v = kk, vv
+        kv_pos = jnp.arange(kk.shape[1])
+    else:
+        kv_pos = q_pos if kv_x is None else jnp.arange(k.shape[1])
+
+    if meta_kv is not None:  # hymba meta tokens prepended to the KV block
+        mk, mv = meta_kv
+        k = jnp.concatenate([jnp.broadcast_to(mk, (B,) + mk.shape[-3:]), k], 1)
+        v = jnp.concatenate([jnp.broadcast_to(mv, (B,) + mv.shape[-3:]), v], 1)
+        n_meta = mk.shape[-3]
+        kv_pos = jnp.concatenate(
+            [jnp.full((n_meta,), -1, kv_pos.dtype), kv_pos])
+
+    mask = make_mask(q_pos, kv_pos, causal=causal and kv_x is None,
+                     window=window, kv_valid=kv_valid)
+    if meta_kv is not None:  # meta tokens always visible
+        mask = mask.at[:, : meta_kv[0].shape[-3]].set(0.0)
+
+    out = _sdpa(q, k, v, mask, Hkv)
+    y = jnp.einsum("bthd,hdD->btD", out, p["wo"])
+    if "gate" in p:
+        y = jnp.tanh(p["gate"]) * y
+    return y, new_cache
+
+
+# -- multi-head latent attention (DeepSeek-V3) ------------------------------------
+
+
+def mla_init(key, cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dq = cfg.nope_head_dim + cfg.rope_head_dim
+    H = cfg.n_heads
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": dense_init(ks[0], d, qr, cfg),
+        "q_norm": jnp.ones((qr,), jnp.dtype(cfg.param_dtype)),
+        "wq_b": dense_init(ks[1], qr, (H, dq), cfg),
+        "wkv_a": dense_init(ks[2], d, kvr + cfg.rope_head_dim, cfg),
+        "kv_norm": jnp.ones((kvr,), jnp.dtype(cfg.param_dtype)),
+        "wkv_b": dense_init(ks[3], kvr,
+                            (H, cfg.nope_head_dim + cfg.v_head_dim), cfg),
+        "wo": dense_init(ks[4], H * cfg.v_head_dim, d, cfg).reshape(
+            H, cfg.v_head_dim, d),
+    }
+
+
+def mla_apply(
+    p: Dict,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    q_pos: jnp.ndarray,
+    cache: Optional[Dict[str, jnp.ndarray]] = None,
+    cache_pos: Optional[jnp.ndarray] = None,
+    kv_valid: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Optional[Dict[str, jnp.ndarray]]]:
+    """MLA with the *compressed* KV cache: the cache stores the rank-
+    ``kv_lora_rank`` latent c_kv plus the shared rotary key — the paper's
+    chunked KV table with far smaller rows (DESIGN.md §4)."""
+    B, T, _ = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+
+    q = jnp.einsum("btd,dr->btr", x, p["wq_a"])
+    q = vec_norm_apply(p["q_norm"], q, cfg.eps)
+    q = jnp.einsum("btr,rhk->bthk", q, p["wq_b"])
+    q = shard(q, "batch", None, "heads", None)
+    q_nope, q_pe = q[..., :dn], q[..., dn:]
+
+    kv = jnp.einsum("btd,dr->btr", x, p["wkv_a"])
+    c_kv, k_pe = kv[..., : cfg.kv_lora_rank], kv[..., cfg.kv_lora_rank:]
+    c_kv = vec_norm_apply(p["kv_norm"], c_kv, cfg.eps)
+
+    cos, sin = rope_table(q_pos, dr, cfg.rope_theta)
+    q_pe = rope_apply(q_pe, cos[None], sin[None])
+    k_pe = rope_apply(k_pe[:, :, None, :], cos[None], sin[None])[:, :, 0]
+
+    new_cache = cache
+    if cache is not None:
+        start = cache_pos if cache_pos is not None else 0
+        ckv = jax.lax.dynamic_update_slice(
+            cache["ckv"], c_kv.astype(cache["ckv"].dtype), (0, start, 0))
+        kpe = jax.lax.dynamic_update_slice(
+            cache["kpe"], k_pe.astype(cache["kpe"].dtype), (0, start, 0))
+        new_cache = {"ckv": ckv, "kpe": kpe}
+        c_kv, k_pe = ckv, kpe
+        kv_pos = jnp.arange(ckv.shape[1])
+    else:
+        kv_pos = q_pos
+
+    kvb = jnp.einsum("bsr,rhk->bshk", c_kv, p["wkv_b"])
+    k_nope, v = kvb[..., :dn], kvb[..., dn:]
+
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dn + dr, jnp.float32)).astype(x.dtype)
+    scores = (jnp.einsum("bthk,bshk->bhts", q_nope, k_nope)
+              + jnp.einsum("bthk,bsk->bhts", q_pe, k_pe)) * scale
+    mask = make_mask(q_pos, kv_pos, causal=True, kv_valid=kv_valid)
+    scores = scores.astype(jnp.float32) + mask
+    pr = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhts,bshk->bthk", pr, v)
+    y = jnp.einsum("bthd,hdD->btD", out, p["wo"])
+    return y, new_cache
+
+
+def empty_cache(cfg: ModelConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16) -> Dict[str, jnp.ndarray]:
+    """Per-layer KV cache buffers (MLA: compressed latent)."""
+    if cfg.mla:
+        return {
+            "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+            "kpe": jnp.zeros((batch, max_len, cfg.rope_head_dim), dtype),
+        }
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.n_kv, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, cfg.n_kv, cfg.head_dim), dtype),
+    }

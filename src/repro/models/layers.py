@@ -1,0 +1,137 @@
+"""Shared building blocks: norms, rotary embedding, MLPs, embeddings.
+
+Every block follows the (init, apply) functional convention with plain-dict
+parameter pytrees so that ``jax.eval_shape`` gives abstract trees for the
+dry-run and sharding rules can match leaves by name.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def dense_init(key, in_dim: int, out_shape, cfg: ModelConfig, scale=None):
+    """Weight [in_dim, *out_shape] with fan-in init."""
+    out_shape = (out_shape,) if isinstance(out_shape, int) else tuple(out_shape)
+    scale = scale if scale is not None else in_dim ** -0.5
+    w = jax.random.normal(key, (in_dim,) + out_shape, dtype=jnp.float32)
+    return (w * scale).astype(_dtype(cfg))
+
+
+# -- norms ---------------------------------------------------------------------
+
+
+def norm_init(cfg: ModelConfig, d: Optional[int] = None) -> Dict:
+    d = d or cfg.d_model
+    if not cfg.parametric_norm:
+        return {}
+    p = {"scale": jnp.ones((d,), _dtype(cfg))}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), _dtype(cfg))
+    return p
+
+
+def norm_apply(p: Dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), -1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.eps)
+    else:  # rmsnorm
+        y = xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), -1,
+                                        keepdims=True) + cfg.eps)
+    if p:
+        y = y * p["scale"].astype(jnp.float32)
+        if "bias" in p:
+            y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def vec_norm_apply(scale: Optional[jnp.ndarray], x: jnp.ndarray,
+                   eps: float) -> jnp.ndarray:
+    """RMS-normalise the trailing dim (qk-norm / MLA latent norm)."""
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), -1, keepdims=True) + eps)
+    if scale is not None:
+        y = y * scale.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# -- rotary position embedding ---------------------------------------------------
+
+
+def rope_table(positions: jnp.ndarray, head_dim: int, theta: float
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """cos/sin tables [*, head_dim/2] for given (integer) positions."""
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def rope_apply(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray
+               ) -> jnp.ndarray:
+    """Half-split rotary: x [..., T, H, dh], cos/sin [..., T, half]."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(x.dtype)
+    s = sin[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+
+
+def sinusoidal_positions(n: int, d: int) -> jnp.ndarray:
+    """Whisper-style fixed sinusoidal embeddings [n, d]."""
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (2 * dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# -- MLPs ------------------------------------------------------------------------
+
+
+def mlp_init(key, cfg: ModelConfig, d_ff: Optional[int] = None) -> Dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act == "silu":  # SwiGLU
+        return {"w1": dense_init(ks[0], d, f, cfg),
+                "w3": dense_init(ks[1], d, f, cfg),
+                "w2": dense_init(ks[2], f, d, cfg)}
+    return {"w1": dense_init(ks[0], d, f, cfg),
+            "w2": dense_init(ks[2], f, d, cfg)}
+
+
+def mlp_apply(p: Dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    from repro.distributed.sharding import shard
+    if cfg.act == "silu":
+        h = jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])
+    else:
+        h = jax.nn.gelu(x @ p["w1"], approximate=True)
+    h = shard(h, "batch", None, "mlp")
+    return h @ p["w2"]
+
+
+# -- embeddings -------------------------------------------------------------------
+
+
+def embed_init(key, cfg: ModelConfig) -> Dict:
+    e = jax.random.normal(key, (cfg.vocab, cfg.d_model),
+                          jnp.float32) * 0.02
+    return {"embedding": e.astype(_dtype(cfg))}
+
+
+def embed_apply(p: Dict, ids: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    return jnp.take(p["embedding"], ids, axis=0)
+
+
+def unembed_apply(p: Dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    return x @ p["embedding"].T.astype(x.dtype)

@@ -1,0 +1,190 @@
+"""Mamba-2 SSD (state-space duality) block — chunked scan formulation.
+
+Training/prefill uses the SSD block decomposition (arXiv:2405.21060 §6):
+within a chunk the recurrence is evaluated as a masked attention-like
+contraction (intra-chunk), and chunk-granular states are carried by a short
+``lax.scan`` (inter-chunk).  Decode keeps a constant-size recurrent state
+[B, nh, hd, S] plus a depthwise-conv ring buffer — the paper's KV-cache
+table degenerates to a fixed-row *state table* (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models.layers import dense_init
+
+
+def ssm_init(key, cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    di = cfg.d_inner
+    G, S = cfg.ssm_ngroups, cfg.ssm_state
+    nh = cfg.ssm_heads
+    conv_ch = di + 2 * G * S
+    ks = jax.random.split(key, 4)
+    dt = jnp.exp(jax.random.uniform(ks[2], (nh,), jnp.float32,
+                                    jnp.log(1e-3), jnp.log(1e-1)))
+    pdt = jnp.dtype(cfg.param_dtype)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di + 2 * G * S + nh, cfg),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch),
+                                     jnp.float32) * 0.1).astype(pdt),
+        "conv_b": jnp.zeros((conv_ch,), pdt),
+        "A_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "dt_bias": (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm_scale": jnp.ones((di,), pdt),
+        "out_proj": dense_init(ks[3], di, d, cfg),
+    }
+
+
+def _causal_conv(xBC: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray
+                 ) -> jnp.ndarray:
+    """Depthwise causal conv over time. xBC [B,T,C], w [cw,C]."""
+    cw = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xBC)
+    for i in range(cw):  # cw is 4: unrolled taps fuse into one VPU loop
+        out = out + pad[:, i: i + xBC.shape[1], :] * w[i]
+    return out + b
+
+
+def _split_proj(p, x, cfg: ModelConfig):
+    di, G, S, nh = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = x @ p["in_proj"]
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di: 2 * di + 2 * G * S]
+    dt = zxbcdt[..., 2 * di + 2 * G * S:]
+    return z, xBC, dt
+
+
+def _gated_out(p, y, z, cfg: ModelConfig):
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = yf * jax.lax.rsqrt(jnp.mean(jnp.square(yf), -1, keepdims=True)
+                           + cfg.eps)
+    y = (y * p["norm_scale"].astype(jnp.float32)).astype(z.dtype)
+    return y @ p["out_proj"]
+
+
+def ssm_apply(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
+              initial_state: Optional[jnp.ndarray] = None
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence SSD. Returns (y [B,T,D], final_state [B,nh,hd,S])."""
+    B, T, _ = x.shape
+    di, G, S = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state
+    nh, hd = cfg.ssm_heads, cfg.ssm_head_dim
+    # largest chunk ≤ cfg.ssm_chunk that divides T exactly (keeps the
+    # boundary state at position T exact for prefill continuation)
+    Q = max(d for d in range(1, min(cfg.ssm_chunk, T) + 1) if T % d == 0)
+    NC = T // Q
+    hpg = nh // G
+
+    z, xBC, dt = _split_proj(p, x, cfg)
+    xBC = jax.nn.silu(_causal_conv(xBC, p["conv_w"], p["conv_b"]))
+    xs = xBC[..., :di].reshape(B, T, nh, hd)
+    B_ = xBC[..., di: di + G * S].reshape(B, T, G, S)
+    C_ = xBC[..., di + G * S:].reshape(B, T, G, S)
+    xs = shard(xs, "batch", None, "inner", None)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,T,nh]
+    A = -jnp.exp(p["A_log"])  # [nh]
+    dA = dt * A  # [B,T,nh] log-decay per step
+
+    # chunk views
+    dA_c = dA.reshape(B, NC, Q, nh)
+    seg = jnp.cumsum(dA_c, axis=2)                      # [B,NC,Q,nh]
+    x_c = xs.reshape(B, NC, Q, nh, hd)
+    Bh = jnp.repeat(B_.reshape(B, NC, Q, G, S), hpg, axis=3)  # [B,NC,Q,nh,S]
+    Ch = jnp.repeat(C_.reshape(B, NC, Q, G, S), hpg, axis=3)
+    dt_c = dt.reshape(B, NC, Q, nh)
+    xdt = x_c * dt_c[..., None].astype(x_c.dtype)
+
+    # ---- intra-chunk (the "duality": masked attention over the chunk) ------
+    dseg = seg[:, :, :, None, :] - seg[:, :, None, :, :]  # [B,NC,Q,Q,nh]
+    L = jnp.where(
+        (jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :])[None, None, :, :,
+                                                           None],
+        jnp.exp(dseg), 0.0)
+    CB = jnp.einsum("bcqhs,bckhs->bcqkh", Ch.astype(jnp.float32),
+                    Bh.astype(jnp.float32))
+    M = CB * L
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", M.astype(x.dtype), xdt)
+
+    # ---- chunk states + inter-chunk recurrence ------------------------------
+    decay_to_end = jnp.exp(seg[:, :, -1:, :] - seg)      # [B,NC,Q,nh]
+    states = jnp.einsum("bcqhs,bcqhp->bchps",
+                        (Bh.astype(jnp.float32)
+                         * decay_to_end[..., None]).astype(x.dtype), xdt)
+    chunk_decay = jnp.exp(seg[:, :, -1, :])              # [B,NC,nh]
+
+    def scan_fn(carry, inp):
+        st, dec = inp
+        new = carry * dec[:, :, None, None].astype(carry.dtype) + st
+        return new, carry  # emit the state *entering* this chunk
+
+    init = initial_state if initial_state is not None else jnp.zeros(
+        (B, nh, hd, S), x.dtype)
+    final, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)   # [B,NC,nh,hd,S]
+
+    y_inter = jnp.einsum("bcqhs,bchps->bcqhp",
+                         (Ch.astype(jnp.float32)
+                          * jnp.exp(seg)[..., None]).astype(x.dtype),
+                         prev_states)
+
+    y = (y_intra + y_inter).reshape(B, T, nh, hd)
+    y = y + x_c.reshape(B, T, nh, hd) * p["D"][:, None].astype(x.dtype)
+    y = y.reshape(B, T, di)
+    return _gated_out(p, y, z, cfg), final
+
+
+def ssm_decode_step(p: Dict, x: jnp.ndarray, state: Dict[str, jnp.ndarray],
+                    cfg: ModelConfig
+                    ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Single-token recurrent update.
+
+    state = {"ssm": [B,nh,hd,S], "conv": [B,cw-1,conv_ch]}.
+    x: [B, 1, D].
+    """
+    B = x.shape[0]
+    di, G, S = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state
+    nh, hd = cfg.ssm_heads, cfg.ssm_head_dim
+    hpg = nh // G
+
+    z, xBC, dt = _split_proj(p, x[:, 0], cfg)
+    window = jnp.concatenate([state["conv"], xBC[:, None, :]], axis=1)
+    xBC = jax.nn.silu(jnp.einsum("bwc,wc->bc", window, p["conv_w"])
+                      + p["conv_b"])
+    new_conv = window[:, 1:]
+
+    xs = xBC[..., :di].reshape(B, nh, hd)
+    B_ = jnp.repeat(xBC[..., di: di + G * S].reshape(B, G, S), hpg, axis=1)
+    C_ = jnp.repeat(xBC[..., di + G * S:].reshape(B, G, S), hpg, axis=1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,nh]
+    dA = jnp.exp(dt * -jnp.exp(p["A_log"]))                      # [B,nh]
+    upd = jnp.einsum("bhs,bhp->bhps", B_, xs * dt[..., None].astype(x.dtype))
+    new_state = state["ssm"] * dA[:, :, None, None].astype(x.dtype) + upd
+    y = jnp.einsum("bhs,bhps->bhp", C_, new_state)
+    y = y + xs * p["D"][:, None].astype(x.dtype)
+    y = y.reshape(B, 1, di)
+    out = _gated_out(p, y, z[:, None, :], cfg)
+    return out, {"ssm": new_state, "conv": new_conv}
+
+
+def empty_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16
+                    ) -> Dict[str, jnp.ndarray]:
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return {
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                          cfg.ssm_state), dtype),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+    }

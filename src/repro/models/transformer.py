@@ -1,0 +1,614 @@
+"""Model assembly: scan-over-layers transformer covering every assigned
+architecture family (dense / moe / mla-moe / ssm / hybrid / enc-dec / vlm).
+
+Layers are grouped into homogeneous *groups* (``group_plan``); each group's
+parameters are stacked along a leading layer axis and applied with
+``lax.scan`` so compiled HLO size is depth-independent.  Heterogeneous
+stacks (deepseek dense-prefix, vlm cross-attn interleave) become several
+groups.  Per-layer scalars that vary inside a group (hymba's sliding-window
+schedule) ride along as scanned arrays instead of splitting the group.
+
+API:
+    init_params(cfg, key)                          concrete params
+    abstract_params(cfg)                           ShapeDtypeStruct tree
+    forward(params, batch, cfg)                    logits (training path)
+    prefill(params, tokens, cfg, max_len, aux)     logits, caches
+    decode_step(params, token, caches, pos, cfg)   logits, caches
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models import attention as att
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (
+    embed_apply, embed_init, mlp_apply, mlp_init, norm_apply, norm_init,
+    rope_table, sinusoidal_positions, unembed_apply, dense_init,
+)
+
+# ---------------------------------------------------------------------------
+# Group plan
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Group:
+    name: str
+    kind: str       # dense | moe | mla_dense | mla_moe | ssm | hybrid |
+                    # enc | encdec_dec | vlm_group
+    n_layers: int   # scan length
+    inner: int = 1  # vlm_group: self-attn layers per cross-attn layer
+
+
+def group_plan(cfg: ModelConfig) -> List[Group]:
+    f = cfg.family
+    if f == "dense":
+        return [Group("g0", "dense", cfg.n_layers)]
+    if f == "moe":
+        if cfg.mla:
+            gs = []
+            if cfg.first_dense_layers:
+                gs.append(Group("g0", "mla_dense", cfg.first_dense_layers))
+            gs.append(Group("g1", "mla_moe",
+                            cfg.n_layers - cfg.first_dense_layers))
+            return gs
+        return [Group("g0", "moe", cfg.n_layers)]
+    if f == "ssm":
+        return [Group("g0", "ssm", cfg.n_layers)]
+    if f == "hybrid":
+        return [Group("g0", "hybrid", cfg.n_layers)]
+    if f == "encdec":
+        return [Group("enc", "enc", cfg.n_enc_layers),
+                Group("dec", "encdec_dec", cfg.n_layers)]
+    if f == "vlm":
+        k = cfg.cross_attn_every
+        assert cfg.n_layers % k == 0
+        return [Group("g0", "vlm_group", cfg.n_layers // k, inner=k - 1)]
+    raise ValueError(f"unknown family {f}")
+
+
+# ---------------------------------------------------------------------------
+# Per-layer block init / apply
+# ---------------------------------------------------------------------------
+
+
+def _attn_for(cfg: ModelConfig, key, cross=False):
+    if cfg.mla and not cross:
+        return att.mla_init(key, cfg)
+    return att.attn_init(key, cfg, cross=cross)
+
+
+def block_init(kind: str, key, cfg: ModelConfig) -> Dict:
+    ks = jax.random.split(key, 8)
+    p: Dict[str, Any] = {}
+    if kind in ("dense", "moe", "mla_dense", "mla_moe", "hybrid", "enc",
+                "encdec_dec"):
+        p["ln1"] = norm_init(cfg)
+        p["attn"] = _attn_for(cfg, ks[0])
+        p["ln2"] = norm_init(cfg)
+    if kind == "dense" or kind == "enc":
+        p["mlp"] = mlp_init(ks[1], cfg)
+    elif kind == "mla_dense":
+        p["mlp"] = mlp_init(ks[1], cfg, d_ff=cfg.dense_d_ff or cfg.d_ff)
+    elif kind in ("moe", "mla_moe"):
+        p["moe"] = moe_lib.moe_init(ks[1], cfg)
+    elif kind == "hybrid":
+        p["ssm"] = ssm_lib.ssm_init(ks[2], cfg)
+        p["ln_ssm"] = norm_init(cfg)
+        p["mlp"] = mlp_init(ks[1], cfg)
+    elif kind == "encdec_dec":
+        p["ln_x"] = norm_init(cfg)
+        p["xattn"] = att.attn_init(ks[3], cfg, cross=False)
+        p["mlp"] = mlp_init(ks[1], cfg)
+    elif kind == "ssm":
+        p["ln1"] = norm_init(cfg)
+        p["ssm"] = ssm_lib.ssm_init(ks[2], cfg)
+    elif kind == "vlm_group":
+        sub = jax.random.split(ks[4], cfg.cross_attn_every - 1)
+        p["self"] = jax.vmap(
+            lambda k: block_init("dense", k, cfg))(sub)
+        p["ln_c1"] = norm_init(cfg)
+        p["cross"] = att.attn_init(ks[5], cfg, cross=True)
+        p["ln_c2"] = norm_init(cfg)
+        p["cross_mlp"] = mlp_init(ks[6], cfg)
+        p["cross_gate_mlp"] = jnp.zeros((), jnp.dtype(cfg.param_dtype))
+    return p
+
+
+def block_apply(
+    kind: str,
+    p: Dict,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    q_pos: jnp.ndarray,
+    cache: Optional[Dict] = None,
+    cache_pos=None,
+    kv_valid=None,
+    rope_cs=None,
+    window=0,
+    causal: bool = True,
+    aux: Optional[jnp.ndarray] = None,        # encoder output / image tokens
+    aux_cache: Optional[Dict] = None,         # cross-attn KV cache
+) -> Tuple[jnp.ndarray, Optional[Dict], Optional[Dict]]:
+    """Returns (x, updated self cache, updated cross cache)."""
+    new_cache, new_aux_cache = cache, aux_cache
+
+    if kind == "ssm":
+        h = norm_apply(p["ln1"], x, cfg)
+        if cache is not None and x.shape[1] == 1:
+            y, new_cache = ssm_lib.ssm_decode_step(p["ssm"], h, cache, cfg)
+        else:
+            init = cache["ssm"] if cache is not None else None
+            y, final = ssm_lib.ssm_apply(p["ssm"], h, cfg)
+            if cache is not None:
+                conv_ch = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+                # stash the conv tail for decode continuation
+                zxb = h @ p["ssm"]["in_proj"]
+                xBC = zxb[..., cfg.d_inner: 2 * cfg.d_inner
+                          + 2 * cfg.ssm_ngroups * cfg.ssm_state]
+                tail = xBC[:, -(cfg.ssm_conv - 1):, :]
+                new_cache = {"ssm": final, "conv": tail.astype(
+                    cache["conv"].dtype)}
+        return x + y, new_cache, new_aux_cache
+
+    if kind == "hybrid":
+        h = norm_apply(p["ln1"], x, cfg)
+        if cfg.mla:
+            a, new_attn = att.mla_apply(p["attn"], h, cfg, q_pos=q_pos,
+                                        cache=(cache or {}).get("attn"),
+                                        cache_pos=cache_pos,
+                                        kv_valid=kv_valid)
+        else:
+            a, new_attn = att.attn_apply(
+                p["attn"], h, cfg, q_pos=q_pos,
+                cache=(cache or {}).get("attn"), cache_pos=cache_pos,
+                kv_valid=kv_valid, causal=causal, window=window,
+                rope_cs=rope_cs)
+        sc = (cache or {}).get("ssm")
+        if sc is not None and x.shape[1] == 1:
+            s, new_ssm = ssm_lib.ssm_decode_step(p["ssm"], h, sc, cfg)
+        else:
+            s, final = ssm_lib.ssm_apply(p["ssm"], h, cfg)
+            new_ssm = None
+            if sc is not None:
+                zxb = h @ p["ssm"]["in_proj"]
+                xBC = zxb[..., cfg.d_inner: 2 * cfg.d_inner
+                          + 2 * cfg.ssm_ngroups * cfg.ssm_state]
+                new_ssm = {"ssm": final,
+                           "conv": xBC[:, -(cfg.ssm_conv - 1):, :].astype(
+                               sc["conv"].dtype)}
+        # hymba: mean-fuse the two heads' outputs after per-branch norm
+        y = 0.5 * (a + norm_apply(p["ln_ssm"], s, cfg))
+        x = x + y
+        h2 = norm_apply(p["ln2"], x, cfg)
+        x = x + mlp_apply(p["mlp"], h2, cfg)
+        new_cache = None
+        if cache is not None:
+            new_cache = {"attn": new_attn, "ssm": new_ssm}
+        return x, new_cache, new_aux_cache
+
+    # attention-based blocks
+    h = norm_apply(p["ln1"], x, cfg)
+    if cfg.mla and kind in ("mla_dense", "mla_moe"):
+        a, new_cache = att.mla_apply(p["attn"], h, cfg, q_pos=q_pos,
+                                     cache=cache, cache_pos=cache_pos,
+                                     kv_valid=kv_valid)
+    else:
+        a, new_cache = att.attn_apply(p["attn"], h, cfg, q_pos=q_pos,
+                                      cache=cache, cache_pos=cache_pos,
+                                      kv_valid=kv_valid, causal=causal,
+                                      window=window, rope_cs=rope_cs)
+    x = x + a
+
+    if kind == "encdec_dec":
+        h = norm_apply(p["ln_x"], x, cfg)
+        c, new_aux_cache = _cross_from_cache(p["xattn"], h, cfg, q_pos,
+                                             aux, aux_cache)
+        x = x + c
+
+    h = norm_apply(p["ln2"], x, cfg)
+    if kind in ("moe", "mla_moe"):
+        moe_fn = (moe_lib.moe_apply_ep_local if cfg.moe_impl == "ep_local"
+                  else moe_lib.moe_apply)
+        x = x + moe_fn(p["moe"], h, cfg)
+    else:
+        x = x + mlp_apply(p["mlp"], h, cfg)
+    return x, new_cache, new_aux_cache
+
+
+def _cross_from_cache(pa, h, cfg, q_pos, aux, aux_cache):
+    """Cross-attention where encoder/image K/V are computed once and cached."""
+    if aux_cache is not None and aux is None:
+        # decode: reuse cached cross K/V
+        B, T, _ = h.shape
+        q = jnp.einsum("btd,dhk->bthk", h, pa["wq"])
+        if cfg.qk_norm:
+            q = att.vec_norm_apply(pa.get("q_norm"), q, cfg.eps)
+        k, v = aux_cache["k"], aux_cache["v"]
+        mask = jnp.zeros((T, k.shape[1]), jnp.float32)
+        out = att._sdpa(q, k, v, mask, k.shape[2])
+        y = jnp.einsum("bthd,hdD->btD", out, pa["wo"])
+        if "gate" in pa:
+            y = jnp.tanh(pa["gate"]) * y
+        return y, aux_cache
+    y, _ = att.attn_apply(pa, h, cfg, q_pos=q_pos, kv_x=aux, causal=False)
+    k = jnp.einsum("btd,dhk->bthk", aux, pa["wk"])
+    v = jnp.einsum("btd,dhk->bthk", aux, pa["wv"])
+    if cfg.qk_norm:
+        k = att.vec_norm_apply(pa.get("k_norm"), k, cfg.eps)
+    return y, {"k": k, "v": v}
+
+
+def vlm_group_apply(p, x, cfg, *, q_pos, cache=None, cache_pos=None,
+                    kv_valid=None, rope_cs=None, aux=None, aux_cache=None):
+    """One vlm super-block: (cross_attn_every - 1) self layers + 1 cross."""
+    inner = cfg.cross_attn_every - 1
+    new_self = []
+    for i in range(inner):
+        pi = jax.tree_util.tree_map(lambda a: a[i], p["self"])
+        ci = None if cache is None else jax.tree_util.tree_map(
+            lambda a: a[i], cache["self"])
+        x, ci, _ = block_apply("dense", pi, x, cfg, q_pos=q_pos, cache=ci,
+                               cache_pos=cache_pos, kv_valid=kv_valid,
+                               rope_cs=rope_cs)
+        new_self.append(ci)
+    h = norm_apply(p["ln_c1"], x, cfg)
+    c, new_aux = _cross_from_cache(p["cross"], h, cfg, q_pos, aux, aux_cache)
+    x = x + c
+    h = norm_apply(p["ln_c2"], x, cfg)
+    x = x + jnp.tanh(p["cross_gate_mlp"]) * mlp_apply(p["cross_mlp"], h, cfg)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"self": jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *new_self)}
+    return x, new_cache, new_aux
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init / apply
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, key) -> Dict:
+    ks = jax.random.split(key, 8)
+    params: Dict[str, Any] = {"embed": embed_init(ks[0], cfg)}
+    if not cfg.rope and cfg.family != "encdec":
+        params["pos_embed"] = (jax.random.normal(
+            ks[5], (cfg.max_positions, cfg.d_model), jnp.float32) * 0.02
+        ).astype(jnp.dtype(cfg.param_dtype))
+    if cfg.n_meta_tokens:
+        params["meta_tokens"] = (jax.random.normal(
+            ks[6], (cfg.n_meta_tokens, cfg.d_model), jnp.float32) * 0.02
+        ).astype(jnp.dtype(cfg.param_dtype))
+    for g in group_plan(cfg):
+        gks = jax.random.split(ks[1 if g.name != "enc" else 2], g.n_layers)
+        params[g.name] = jax.vmap(
+            functools.partial(block_init, g.kind, cfg=cfg))(gks)
+    params["final_norm"] = norm_init(cfg)
+    if cfg.family == "encdec":
+        params["enc_final_norm"] = norm_init(cfg)
+        params["dec_pos"] = (jax.random.normal(
+            ks[7], (cfg.max_positions, cfg.d_model), jnp.float32) * 0.02
+        ).astype(jnp.dtype(cfg.param_dtype))
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[3], cfg.d_model, cfg.vocab, cfg)
+    return params
+
+
+def abstract_params(cfg: ModelConfig) -> Dict:
+    return jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def _logits(params, x, cfg) -> jnp.ndarray:
+    x = norm_apply(params["final_norm"], x, cfg)
+    if cfg.tie_embeddings:
+        out = unembed_apply(params["embed"], x, cfg)
+    else:
+        out = x @ params["lm_head"]
+    return shard(out, "batch", None, "vocab")
+
+
+def _window_schedule(cfg: ModelConfig) -> jnp.ndarray:
+    """Per-layer sliding-window sizes (0 = global) for hybrid models."""
+    w = jnp.full((cfg.n_layers,), cfg.sliding_window, jnp.int32)
+    if cfg.global_attn_layers:
+        w = w.at[jnp.asarray(cfg.global_attn_layers)].set(0)
+    return w
+
+
+def _scan_group(g: Group, gp, x, cfg, apply_one, caches=None, extras=None):
+    """Scan a stacked group. ``apply_one(p_layer, x, cache, extra) ->
+    (x, new_cache)``."""
+    body = apply_one
+    if cfg.remat == "full":
+        body = jax.checkpoint(apply_one)
+
+    def step(carry, layer):
+        x = carry
+        p_l, cache_l, extra_l = layer
+        x, new_c = body(p_l, x, cache_l, extra_l)
+        # residual-stream constraint: no-op by default; mapping "seq" to a
+        # mesh axis turns the per-layer all-reduces into reduce-scatter /
+        # all-gather pairs (Megatron-style sequence parallelism, §Perf B)
+        x = shard(x, "batch", "seq", None)
+        return x, new_c
+
+    n = g.n_layers
+    xs = (gp,
+          caches if caches is not None else jnp.zeros((n,)),
+          extras if extras is not None else jnp.zeros((n,)))
+    unroll = min(cfg.scan_unroll, n) if cfg.scan_unroll else 1
+    x, new_caches = jax.lax.scan(step, x, xs, unroll=unroll)
+    return x, (new_caches if caches is not None else None)
+
+
+def _encode(params, frames, cfg: ModelConfig) -> jnp.ndarray:
+    """Whisper encoder over stub frame embeddings [B, n_frames, d]."""
+    x = frames + sinusoidal_positions(frames.shape[1], cfg.d_model).astype(
+        frames.dtype)
+    g = [gr for gr in group_plan(cfg) if gr.name == "enc"][0]
+    pos = jnp.arange(frames.shape[1])
+
+    def one(p_l, x, cache_l, extra_l):
+        x, _, _ = block_apply("enc", p_l, x, cfg, q_pos=pos, causal=False)
+        return x, 0.0
+
+    x, _ = _scan_group(g, params["enc"], x, cfg, one)
+    return norm_apply(params["enc_final_norm"], x, cfg)
+
+
+def forward(params: Dict, batch: Dict[str, jnp.ndarray], cfg: ModelConfig
+            ) -> jnp.ndarray:
+    """Training/eval forward over full sequences. batch: tokens [B,T]
+    (+ frames / images for encdec & vlm). Returns logits [B, T, V]."""
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    x = embed_apply(params["embed"], tokens, cfg).astype(jnp.dtype(cfg.dtype))
+    x = shard(x, "batch", "seq", None)
+
+    if cfg.n_meta_tokens:
+        meta = jnp.broadcast_to(params["meta_tokens"],
+                                (B, cfg.n_meta_tokens, cfg.d_model)
+                                ).astype(x.dtype)
+        x = jnp.concatenate([meta, x], axis=1)
+        T = T + cfg.n_meta_tokens
+
+    pos = jnp.arange(T)
+    rope_cs = None
+    if cfg.rope and not cfg.attention_free and not cfg.mla:
+        rope_cs = rope_table(pos[None], cfg.head_dim, cfg.rope_theta)
+    if not cfg.rope and "pos_embed" in params:
+        x = x + params["pos_embed"][:T][None].astype(x.dtype)
+    if cfg.family == "encdec":
+        x = x + params["dec_pos"][:T][None].astype(x.dtype)
+
+    aux = None
+    if cfg.family == "encdec":
+        aux = _encode(params, batch["frames"].astype(x.dtype), cfg)
+    elif cfg.family == "vlm":
+        aux = batch["images"].astype(x.dtype)
+
+    windows = _window_schedule(cfg) if cfg.family == "hybrid" else None
+
+    layer_offset = 0
+    for g in group_plan(cfg):
+        if g.name == "enc":
+            continue
+        if g.kind == "vlm_group":
+            def one(p_l, x, cache_l, extra_l):
+                x, _, _ = vlm_group_apply(p_l, x, cfg, q_pos=pos,
+                                          rope_cs=rope_cs, aux=aux)
+                return x, 0.0
+        else:
+            def one(p_l, x, cache_l, extra_l, kind=g.kind):
+                w = extra_l if windows is not None else 0
+                x, _, _ = block_apply(kind, p_l, x, cfg, q_pos=pos,
+                                      rope_cs=rope_cs, window=w, aux=aux)
+                return x, 0.0
+
+        extras = None
+        if windows is not None:
+            extras = jax.lax.dynamic_slice_in_dim(windows, layer_offset,
+                                                  g.n_layers)
+        x, _ = _scan_group(g, params[g.name], x, cfg, one, extras=extras)
+        layer_offset += g.n_layers
+
+    if cfg.n_meta_tokens:
+        x = x[:, cfg.n_meta_tokens:]
+    return _logits(params, x, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill / decode with caches
+# ---------------------------------------------------------------------------
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int,
+                dtype=jnp.bfloat16) -> Dict:
+    """Stacked per-group cache buffers."""
+    caches: Dict[str, Any] = {}
+    eff_len = max_len + cfg.n_meta_tokens
+
+    def stack(n, make):
+        return jax.tree_util.tree_map(
+            lambda l: jnp.broadcast_to(l, (n,) + l.shape), make())
+
+    for g in group_plan(cfg):
+        if g.kind == "enc":
+            continue
+        if g.kind == "ssm":
+            caches[g.name] = stack(
+                g.n_layers,
+                lambda: ssm_lib.empty_ssm_state(cfg, batch, dtype))
+        elif g.kind == "hybrid":
+            caches[g.name] = stack(
+                g.n_layers,
+                lambda: {"attn": att.empty_cache(cfg, batch, eff_len, dtype),
+                         "ssm": ssm_lib.empty_ssm_state(cfg, batch, dtype)})
+        elif g.kind == "vlm_group":
+            caches[g.name] = stack(
+                g.n_layers,
+                lambda: {"self": stack(
+                    cfg.cross_attn_every - 1,
+                    lambda: att.empty_cache(cfg, batch, eff_len, dtype))})
+        else:
+            caches[g.name] = stack(
+                g.n_layers,
+                lambda: att.empty_cache(cfg, batch, eff_len, dtype))
+    return caches
+
+
+def _decode_rope(cfg, positions):
+    if cfg.rope and not cfg.attention_free and not cfg.mla:
+        return rope_table(positions, cfg.head_dim, cfg.rope_theta)
+    return None
+
+
+def prefill(params: Dict, tokens: jnp.ndarray, cfg: ModelConfig,
+            caches: Dict, aux_input: Optional[jnp.ndarray] = None,
+            ) -> Tuple[jnp.ndarray, Dict, Dict]:
+    """Process the prompt, fill caches. Returns (last logits, caches,
+    aux_caches)."""
+    B, T = tokens.shape
+    x = embed_apply(params["embed"], tokens, cfg).astype(jnp.dtype(cfg.dtype))
+    if cfg.n_meta_tokens:
+        meta = jnp.broadcast_to(params["meta_tokens"],
+                                (B, cfg.n_meta_tokens, cfg.d_model)
+                                ).astype(x.dtype)
+        x = jnp.concatenate([meta, x], 1)
+        T = T + cfg.n_meta_tokens
+    pos = jnp.arange(T)
+    rope_cs = _decode_rope(cfg, pos[None])
+    if not cfg.rope and "pos_embed" in params:
+        x = x + params["pos_embed"][:T][None].astype(x.dtype)
+    if cfg.family == "encdec":
+        x = x + params["dec_pos"][:T][None].astype(x.dtype)
+
+    aux = None
+    if cfg.family == "encdec":
+        aux = _encode(params, aux_input.astype(x.dtype), cfg)
+    elif cfg.family == "vlm":
+        aux = aux_input.astype(x.dtype)
+
+    windows = _window_schedule(cfg) if cfg.family == "hybrid" else None
+    valid = jnp.asarray(T)
+    aux_caches: Dict[str, Any] = {}
+    new_caches: Dict[str, Any] = {}
+    layer_offset = 0
+    for g in group_plan(cfg):
+        if g.kind == "enc":
+            continue
+        if g.kind == "vlm_group":
+            def one(p_l, x, cache_l, extra_l):
+                x, c, a = vlm_group_apply(p_l, x, cfg, q_pos=pos, cache_pos=0,
+                                          kv_valid=valid, rope_cs=rope_cs,
+                                          cache=cache_l, aux=aux)
+                return x, (c, a)
+            x, out = _scan_group(g, params[g.name], x, cfg, one,
+                                 caches=caches[g.name])
+            new_caches[g.name], aux_caches[g.name] = out
+        elif g.kind == "encdec_dec":
+            def one(p_l, x, cache_l, extra_l):
+                x, c, a = block_apply(g.kind, p_l, x, cfg, q_pos=pos,
+                                      cache=cache_l, cache_pos=0,
+                                      kv_valid=valid, rope_cs=rope_cs,
+                                      aux=aux)
+                return x, (c, a)
+            x, out = _scan_group(g, params[g.name], x, cfg, one,
+                                 caches=caches[g.name])
+            new_caches[g.name], aux_caches[g.name] = out
+        else:
+            def one(p_l, x, cache_l, extra_l, kind=g.kind):
+                w = extra_l if windows is not None else 0
+                x, c, _ = block_apply(kind, p_l, x, cfg, q_pos=pos,
+                                      cache=cache_l, cache_pos=0,
+                                      kv_valid=valid, rope_cs=rope_cs,
+                                      window=w)
+                return x, c
+            extras = None
+            if windows is not None:
+                extras = jax.lax.dynamic_slice_in_dim(windows, layer_offset,
+                                                      g.n_layers)
+            x, new_caches[g.name] = _scan_group(
+                g, params[g.name], x, cfg, one, caches=caches[g.name],
+                extras=extras)
+        layer_offset += g.n_layers
+
+    logits = _logits(params, x[:, -1:], cfg)
+    return logits, new_caches, aux_caches
+
+
+def decode_step(params: Dict, token: jnp.ndarray, caches: Dict,
+                position: jnp.ndarray, cfg: ModelConfig,
+                aux_caches: Optional[Dict] = None
+                ) -> Tuple[jnp.ndarray, Dict]:
+    """One generation step. token [B,1]; position = absolute index of that
+    token (pre-meta offset applied internally)."""
+    B = token.shape[0]
+    x = embed_apply(params["embed"], token, cfg).astype(jnp.dtype(cfg.dtype))
+    eff_pos = jnp.asarray(position) + cfg.n_meta_tokens
+    pos = jnp.reshape(eff_pos, (1,))
+    rope_cs = _decode_rope(cfg, pos[None])
+    if not cfg.rope and "pos_embed" in params:
+        x = x + jnp.take(params["pos_embed"], pos, axis=0)[None].astype(x.dtype)
+    if cfg.family == "encdec":
+        x = x + jnp.take(params["dec_pos"], pos, axis=0)[None].astype(x.dtype)
+
+    windows = _window_schedule(cfg) if cfg.family == "hybrid" else None
+    valid = eff_pos + 1
+    new_caches: Dict[str, Any] = {}
+    layer_offset = 0
+    for g in group_plan(cfg):
+        if g.kind == "enc":
+            continue
+        if g.kind == "vlm_group":
+            def one(p_l, x, cache_l, extra_l):
+                cache_c, aux_c = cache_l
+                x, c, _ = vlm_group_apply(p_l, x, cfg, q_pos=pos,
+                                          cache=cache_c, cache_pos=eff_pos,
+                                          kv_valid=valid, rope_cs=rope_cs,
+                                          aux=None, aux_cache=aux_c)
+                return x, c
+            x, new_caches[g.name] = _scan_group(
+                g, params[g.name], x, cfg, one,
+                caches=(caches[g.name], aux_caches[g.name]))
+        elif g.kind == "encdec_dec":
+            def one(p_l, x, cache_l, extra_l):
+                cache_c, aux_c = cache_l
+                x, c, _ = block_apply(g.kind, p_l, x, cfg, q_pos=pos,
+                                      cache=cache_c, cache_pos=eff_pos,
+                                      kv_valid=valid, rope_cs=rope_cs,
+                                      aux=None, aux_cache=aux_c)
+                return x, c
+            x, new_caches[g.name] = _scan_group(
+                g, params[g.name], x, cfg, one,
+                caches=(caches[g.name], aux_caches[g.name]))
+        else:
+            def one(p_l, x, cache_l, extra_l, kind=g.kind):
+                w = extra_l if windows is not None else 0
+                x, c, _ = block_apply(kind, p_l, x, cfg, q_pos=pos,
+                                      cache=cache_l, cache_pos=eff_pos,
+                                      kv_valid=valid, rope_cs=rope_cs,
+                                      window=w)
+                return x, c
+            extras = None
+            if windows is not None:
+                extras = jax.lax.dynamic_slice_in_dim(windows, layer_offset,
+                                                      g.n_layers)
+            x, new_caches[g.name] = _scan_group(
+                g, params[g.name], x, cfg, one, caches=caches[g.name],
+                extras=extras)
+        layer_offset += g.n_layers
+
+    return _logits(params, x, cfg), new_caches

@@ -1,0 +1,120 @@
+"""Paged KV cache — the paper's KV-cache tables (§3.4) as fixed-size pages.
+
+The paper stores cached keys/values as relational rows keyed by token
+index; decode INSERTs the new row and joins against the table.  Physically
+that is a *paged* layout: fixed-size pages (= chunk tables) indexed through
+a per-sequence page table.  The join key (seq, token) → (page, slot) is the
+address split ``token // page ↦ page_id, token % page ↦ slot`` — exactly
+the paper's chunk-index projection.
+
+Pages are pooled across sequences (no per-sequence max-length allocation);
+``kernels/paged_attention`` consumes this layout directly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class PagedKVConfig:
+    n_layers: int
+    n_kv: int
+    head_dim: int
+    page_size: int = 64          # tokens per page (the chunk size)
+    n_pages: int = 256           # pool size (all sequences, per layer)
+    max_pages_per_seq: int = 64
+    dtype: str = "float32"
+
+
+class PagedKVCache:
+    """Host-managed page tables + device-resident page pool.
+
+    pool[layer]: k/v arrays [n_pages, page_size, n_kv, head_dim].
+    page_table: [max_seqs, max_pages_per_seq] int32 (-1 = unmapped).
+    """
+
+    def __init__(self, cfg: PagedKVConfig, max_seqs: int):
+        self.cfg = cfg
+        self.max_seqs = max_seqs
+        dt = jnp.dtype(cfg.dtype)
+        shape = (cfg.n_layers, cfg.n_pages, cfg.page_size, cfg.n_kv,
+                 cfg.head_dim)
+        self.k_pool = jnp.zeros(shape, dt)
+        self.v_pool = jnp.zeros(shape, dt)
+        self.page_table = np.full((max_seqs, cfg.max_pages_per_seq), -1,
+                                  np.int32)
+        self.seq_lens = np.zeros((max_seqs,), np.int32)
+        self._free: List[int] = list(range(cfg.n_pages))[::-1]
+        self._active: Dict[int, bool] = {}
+
+    # -- page-table management (host side, per scheduler tick) -----------------
+
+    def allocate_seq(self, seq_id: int) -> None:
+        assert not self._active.get(seq_id, False)
+        self._active[seq_id] = True
+        self.page_table[seq_id, :] = -1
+        self.seq_lens[seq_id] = 0
+
+    def free_seq(self, seq_id: int) -> None:
+        for p in self.page_table[seq_id]:
+            if p >= 0:
+                self._free.append(int(p))
+        self.page_table[seq_id, :] = -1
+        self.seq_lens[seq_id] = 0
+        self._active[seq_id] = False
+
+    def ensure_capacity(self, seq_id: int, new_len: int) -> None:
+        """Map enough pages for ``new_len`` tokens (INSERT pre-allocation)."""
+        need = -(-new_len // self.cfg.page_size)
+        have = int((self.page_table[seq_id] >= 0).sum())
+        if need > self.cfg.max_pages_per_seq:
+            raise RuntimeError("sequence exceeds max_pages_per_seq")
+        for i in range(have, need):
+            if not self._free:
+                raise RuntimeError("KV page pool exhausted (preemption "
+                                   "required — scheduler handles this)")
+            self.page_table[seq_id, i] = self._free.pop()
+
+    def free_page_count(self) -> int:
+        return len(self._free)
+
+    # -- device-side append / gather -------------------------------------------
+
+    def append(self, seq_id: int, layer_k: jnp.ndarray, layer_v: jnp.ndarray,
+               pos: int) -> None:
+        """Write one token's K/V (all layers) at absolute position ``pos``.
+
+        layer_k/v: [n_layers, n_kv, head_dim].  The (page, slot) address is
+        the chunk-key projection of ``pos``.
+        """
+        self.ensure_capacity(seq_id, pos + 1)
+        page = int(self.page_table[seq_id, pos // self.cfg.page_size])
+        slot = pos % self.cfg.page_size
+        self.k_pool = self.k_pool.at[:, page, slot].set(
+            layer_k.astype(self.k_pool.dtype))
+        self.v_pool = self.v_pool.at[:, page, slot].set(
+            layer_v.astype(self.v_pool.dtype))
+        self.seq_lens[seq_id] = max(int(self.seq_lens[seq_id]), pos + 1)
+
+    def gather(self, seq_id: int, layer: int) -> Tuple[jnp.ndarray,
+                                                       jnp.ndarray, int]:
+        """Materialise a sequence's K/V [T, n_kv, dh] (reference path)."""
+        T = int(self.seq_lens[seq_id])
+        pages = self.page_table[seq_id][: -(-T // self.cfg.page_size)]
+        k = self.k_pool[layer, pages].reshape(-1, self.cfg.n_kv,
+                                              self.cfg.head_dim)[:T]
+        v = self.v_pool[layer, pages].reshape(-1, self.cfg.n_kv,
+                                              self.cfg.head_dim)[:T]
+        return k, v, T
+
+    def batch_views(self, seq_ids: List[int]):
+        """Page tables + lengths for a decode batch (kernel inputs)."""
+        pt = jnp.asarray(self.page_table[seq_ids])
+        lens = jnp.asarray(self.seq_lens[seq_ids])
+        return pt, lens

@@ -1,0 +1,197 @@
+"""Training step: loss, gradients, optimizer update — pjit-ready.
+
+``make_train_step`` builds the jit-able pure function; shardings for params
+/ optimizer state / batch are derived from the logical-axis rules so the
+same step runs on 1 device, a 2×2 test mesh, or the 512-chip dry-run mesh.
+Gradient accumulation uses ``lax.scan`` over microbatches; the optional
+int8 error-feedback compression hooks the gradients before the (automatic)
+DP all-reduce.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models import transformer as tf
+from repro.training.optimizer import AdamW, AdamWState, clip_by_global_norm
+
+
+def cross_entropy_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+                       mask: Optional[jnp.ndarray] = None,
+                       impl: str = "gather") -> jnp.ndarray:
+    """Token-mean softmax cross entropy in f32.
+
+    impl="gather": take_along_axis — natural on one device, but a gather
+    along a model-sharded vocab axis makes SPMD replicate the full logits.
+    impl="onehot": gold logit via a masked reduction over the vocab axis —
+    each shard contributes its partial sum, so the [B,T,V] tensor stays
+    sharded end-to-end (§Perf hillclimb A).
+    """
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    if impl == "onehot":
+        V = logits.shape[-1]
+        onehot = (labels[..., None] == jnp.arange(V, dtype=labels.dtype)
+                  ).astype(logits.dtype)
+        gold = jnp.sum(logits * onehot, axis=-1)
+    else:
+        gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def loss_fn(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    logits = tf.forward(params, batch, cfg)
+    loss = cross_entropy_loss(logits, batch["labels"], batch.get("mask"),
+                              impl=cfg.ce_impl)
+    metrics = {"loss": loss}
+    return loss, metrics
+
+
+def make_train_step(cfg: ModelConfig, opt: AdamW,
+                    grad_accum: int = 1,
+                    clip_norm: float = 1.0) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). The batch's leading dim must divide by grad_accum."""
+
+    def single_grads(params, mb):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, mb, cfg)
+        return grads, metrics
+
+    def train_step(params, opt_state: AdamWState, batch):
+        if grad_accum == 1:
+            grads, metrics = single_grads(params, batch)
+        else:
+            def mb_slice(i, x):
+                size = x.shape[0] // grad_accum
+                return jax.lax.dynamic_slice_in_dim(x, i * size, size, 0)
+
+            def body(carry, i):
+                acc = carry
+                mb = {k: mb_slice(i, v) for k, v in batch.items()}
+                g, m = single_grads(params, mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(a.dtype), acc, g)
+                return acc, m
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, ms = jax.lax.scan(body, zeros, jnp.arange(grad_accum))
+            grads = jax.tree_util.tree_map(lambda g: g / grad_accum, grads)
+            metrics = jax.tree_util.tree_map(lambda x: x.mean(), ms)
+
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        new_params, new_state = opt.update(grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        metrics["lr"] = opt.schedule(new_state.step)
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Sharding trees for pjit
+# ---------------------------------------------------------------------------
+
+_RULES = [
+    # (path substrings, shape-rank) -> logical axes per dim
+    ("embedding", ("vocab", "embed_fsdp")),
+    ("lm_head", ("embed_fsdp", "vocab")),
+    ("pos_embed", (None, None)),
+    ("meta_tokens", (None, None)),
+    ("wq_a", ("embed_fsdp", None)),
+    ("wq_b", (None, "heads", None)),
+    ("wkv_a", ("embed_fsdp", None)),
+    ("wkv_b", (None, "heads", None)),
+    ("wq", ("embed_fsdp", "heads", None)),
+    ("wk", ("embed_fsdp", "kv_heads", None)),
+    ("wv", ("embed_fsdp", "kv_heads", None)),
+    ("wo", ("heads", None, "embed_fsdp")),
+    ("router", ("embed_fsdp", None)),
+    ("shared/w1", ("embed_fsdp", "mlp")),
+    ("shared/w3", ("embed_fsdp", "mlp")),
+    ("shared/w2", ("mlp", "embed_fsdp")),
+    ("w1", ("embed_fsdp", "mlp")),
+    ("w3", ("embed_fsdp", "mlp")),
+    ("w2", ("mlp", "embed_fsdp")),
+    ("in_proj", ("embed_fsdp", "inner")),
+    ("out_proj", ("inner", "embed_fsdp")),
+    ("conv_w", (None, "inner")),
+    ("conv_b", ("inner",)),
+    ("norm_scale", ("inner",)),
+]
+
+
+def _leaf_logical(path: str, shape) -> Tuple[Optional[str], ...]:
+    for sub, axes in _RULES:
+        if sub in path:
+            n = len(shape)
+            if len(axes) < n:  # stacked layer/expert leading dims
+                return (("layers",) * (n - len(axes))) + tuple(axes)
+            if len(axes) > n:
+                return tuple(axes[-n:])
+            return tuple(axes)
+    return (None,) * len(shape)
+
+
+def param_pspecs(abstract_tree, mesh, rule_overrides=None):
+    """PartitionSpec tree for a param/optimizer tree from logical rules.
+
+    MoE expert stacks: the leading expert dim maps to "expert"
+    (= model axis, EP); layer-stacked dims are replicated.
+    ``rule_overrides``: {leaf-path substring: logical axes tuple} — used by
+    the perf hillclimb to test alternative layouts without editing _RULES.
+    """
+    from repro.distributed.sharding import logical_spec_for_shape
+    rule_overrides = rule_overrides or {}
+
+    def one(path, leaf):
+        pstr = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in path)
+        for sub, ax in rule_overrides.items():
+            if sub in pstr:
+                n = len(leaf.shape)
+                ax = tuple(ax)
+                ax = (("layers",) * (n - len(ax)) + ax if len(ax) < n
+                      else ax[-n:])
+                return logical_spec_for_shape(leaf.shape, *ax)
+        axes = list(_leaf_logical(pstr, leaf.shape))
+        # expert stacks: routed-expert w1/w2/w3 carry [L, E, in, out] — the
+        # expert dim takes the model axis (EP); the hidden dim must then be
+        # released (it would double-map "model"); FSDP keeps the d_model dim.
+        if ("moe" in pstr and "shared" not in pstr
+                and pstr.rsplit("/", 1)[-1] in ("w1", "w2", "w3")
+                and len(leaf.shape) >= 4):
+            from repro.distributed.sharding import logical_spec
+            exp_axes = tuple(logical_spec("expert"))[0]
+            exp_set = {exp_axes} if isinstance(exp_axes, str) else                 set(exp_axes or ())
+            # contraction dims may keep FSDP only when it doesn't collide
+            # with the axes the expert dim takes (e.g. 2D "expert" EP)
+            tail = ["embed_fsdp" if (a == "embed_fsdp"
+                                     and "data" not in exp_set) else None
+                    for a in axes[2:]]
+            axes = [axes[0], "expert"] + tail
+        return logical_spec_for_shape(leaf.shape, *axes)
+
+    return jax.tree_util.tree_map_with_path(one, abstract_tree)
+
+
+def state_pspecs(abstract_state: AdamWState, params_specs) -> AdamWState:
+    from jax.sharding import PartitionSpec as P
+    return AdamWState(step=P(), m=params_specs, v=params_specs)
+
+
+def batch_pspec():
+    from repro.distributed.sharding import logical_spec
+    return logical_spec("batch")

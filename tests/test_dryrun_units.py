@@ -1,0 +1,110 @@
+"""Dry-run machinery units: HLO collective-byte parsing, roofline math,
+cell skip policy, input specs — no device mesh required."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis.roofline import (ICI_BW, PEAK_FLOPS, HBM_BW, Roofline,
+                                     collective_bytes, model_flops_for)
+from repro.configs import get_config
+from repro.launch.specs import SHAPES, batch_specs, cell_supported
+
+HLO_SAMPLE = """
+HloModule test
+ENTRY main {
+  %p0 = bf16[1024,512]{1,0} parameter(0)
+  %ar = bf16[1024,512]{1,0} all-reduce(bf16[1024,512]{1,0} %p0), replica_groups={}
+  %ag = f32[256,128]{1,0} all-gather(f32[64,128]{1,0} %x), dimensions={0}
+  %rs = f32[16,128]{1,0} reduce-scatter(f32[64,128]{1,0} %y), dimensions={0}
+  %cp = bf16[32,32]{1,0} collective-permute(bf16[32,32]{1,0} %z), source_target_pairs={{0,1}}
+  %dot = f32[64,64]{1,0} dot(f32[64,32]{1,0} %a, f32[32,64]{1,0} %b)
+}
+"""
+
+
+class TestCollectiveParser:
+    def test_counts_each_kind(self):
+        out = collective_bytes(HLO_SAMPLE)
+        assert out["all-reduce"] == 1024 * 512 * 2
+        assert out["all-gather"] == 64 * 128 * 4
+        assert out["reduce-scatter"] == 64 * 128 * 4
+        assert out["collective-permute"] == 32 * 32 * 2
+        assert out["total"] == sum(
+            out[k] for k in ("all-reduce", "all-gather", "reduce-scatter",
+                             "all-to-all", "collective-permute",
+                             "collective-broadcast"))
+
+    def test_ignores_non_collectives(self):
+        out = collective_bytes("%d = f32[8,8] dot(f32[8,8] %a, f32[8,8] %b)")
+        assert out["total"] == 0
+
+    def test_real_compiled_module(self):
+        """Parse the HLO of an actually-compiled psum."""
+        import jax.numpy as jnp
+        fn = jax.jit(lambda x: x @ x.T)
+        txt = fn.lower(jax.ShapeDtypeStruct((8, 8), jnp.float32)).compile()\
+            .as_text()
+        out = collective_bytes(txt)
+        assert out["total"] == 0  # single device: no collectives
+
+
+class TestRooflineMath:
+    def _rl(self, flops, bytes_, coll):
+        return Roofline(arch="a", shape="s", mesh="m", flops_per_dev=flops,
+                        bytes_per_dev=bytes_, coll_bytes_per_dev=coll,
+                        coll_breakdown={}, model_flops=flops / 2)
+
+    def test_terms(self):
+        rl = self._rl(PEAK_FLOPS, HBM_BW, ICI_BW)
+        assert rl.t_compute == pytest.approx(1.0)
+        assert rl.t_memory == pytest.approx(1.0)
+        assert rl.t_collective == pytest.approx(1.0)
+
+    def test_bottleneck_selection(self):
+        rl = self._rl(PEAK_FLOPS, 10 * HBM_BW, ICI_BW)
+        assert rl.bottleneck == "memory"
+        assert rl.bound_time == pytest.approx(10.0)
+        assert rl.roofline_fraction == pytest.approx(0.1)
+
+    def test_useful_ratio(self):
+        rl = self._rl(2e12, 1, 1)
+        assert rl.useful_flops_ratio == pytest.approx(0.5)
+
+    def test_model_flops_train_vs_decode(self):
+        cfg = get_config("qwen3-14b")
+        tr = model_flops_for(cfg, SHAPES["train_4k"], 256, "train")
+        de = model_flops_for(cfg, SHAPES["decode_32k"], 256, "decode")
+        # train: 6·N·(4096·256) / chips;  decode: 2·N·128 / chips
+        assert tr / de == pytest.approx(3 * 4096 * 256 / 128, rel=1e-6)
+
+
+class TestCellPolicy:
+    def test_long500k_skips_full_attention(self):
+        ok, why = cell_supported(get_config("qwen3-14b"), "long_500k")
+        assert not ok and "full-attention" in why
+
+    @pytest.mark.parametrize("arch", ["mamba2-2.7b", "hymba-1.5b"])
+    def test_long500k_runs_subquadratic(self, arch):
+        ok, _ = cell_supported(get_config(arch), "long_500k")
+        assert ok
+
+    def test_all_40_cells_accounted(self):
+        """10 archs × 4 shapes: every cell either supported or documented."""
+        from repro.configs.registry import ASSIGNED
+        total = supported = skipped = 0
+        for arch in ASSIGNED:
+            for shape in SHAPES:
+                total += 1
+                ok, why = cell_supported(get_config(arch), shape)
+                supported += ok
+                skipped += (not ok) and bool(why)
+        assert total == 40
+        assert supported + skipped == 40
+        assert skipped == 8  # long_500k × 8 full-attention archs
+
+    def test_batch_specs_stub_frontends(self):
+        wh = batch_specs(get_config("whisper-small"), 4096, 256)
+        assert wh["frames"].shape == (256, 1500, 768)
+        vl = batch_specs(get_config("llama-3.2-vision-90b"), 4096, 256)
+        assert vl["images"].shape == (256, 6404, 8192)

@@ -1,0 +1,133 @@
+"""Serving-layer units: pager behaviour, paged KV cache, continuous
+batching scheduler with preemption."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.serving.kvcache import PagedKVCache, PagedKVConfig
+from repro.serving.pager import WeightPager
+from repro.serving.scheduler import ContinuousBatcher, Request
+
+
+class TestPager:
+    def test_clock_eviction_and_reuse(self):
+        pager = WeightPager(budget_bytes=3 * 400)  # 3 × 100 f32
+        for i in range(6):
+            pager.add(f"w{i}", np.full(100, i, np.float32))
+        for i in range(6):
+            pager.get(f"w{i}")
+        assert pager.stats.evictions >= 3
+        assert pager.held_bytes <= 3 * 400
+        # re-access: values still correct after paging back in
+        arr = np.asarray(pager.get("w0"))
+        np.testing.assert_array_equal(arr, np.full(100, 0, np.float32))
+
+    def test_prefetch_counts_as_hit(self):
+        pager = WeightPager(budget_bytes=1 << 20)
+        pager.add("a", np.zeros(64, np.float32))
+        t = pager.prefetch(["a"])
+        t.join()
+        pager.get("a")
+        assert pager.stats.prefetch_hits == 1
+        assert pager.stats.misses == 0
+
+    def test_disk_tier_memmap(self, tmp_path):
+        pager = WeightPager(budget_bytes=1 << 20,
+                            disk_dir=str(tmp_path / "cold"))
+        x = np.arange(32, dtype=np.float32)
+        pager.add("w", x)
+        assert isinstance(pager._cold["w"], np.memmap)
+        np.testing.assert_array_equal(np.asarray(pager.get("w")), x)
+
+
+class TestPagedKV:
+    def _cache(self):
+        cfg = PagedKVConfig(n_layers=2, n_kv=2, head_dim=4, page_size=4,
+                            n_pages=8, max_pages_per_seq=4)
+        return PagedKVCache(cfg, max_seqs=3), cfg
+
+    def test_append_gather_roundtrip(self):
+        kv, cfg = self._cache()
+        kv.allocate_seq(0)
+        rng = np.random.default_rng(0)
+        ks = rng.standard_normal((6, cfg.n_layers, cfg.n_kv, cfg.head_dim)
+                                 ).astype(np.float32)
+        for pos in range(6):
+            kv.append(0, jnp.asarray(ks[pos]), jnp.asarray(ks[pos] * 2), pos)
+        k, v, T = kv.gather(0, layer=1)
+        assert T == 6
+        np.testing.assert_allclose(np.asarray(k), ks[:, 1], rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(v), ks[:, 1] * 2, rtol=1e-6)
+
+    def test_page_reuse_after_free(self):
+        kv, cfg = self._cache()
+        kv.allocate_seq(0)
+        kv.ensure_capacity(0, 16)  # all 4 pages
+        free_before = kv.free_page_count()
+        kv.free_seq(0)
+        assert kv.free_page_count() == free_before + 4
+
+    def test_pool_exhaustion_raises(self):
+        kv, cfg = self._cache()
+        for s in range(3):
+            kv.allocate_seq(s)
+        kv.ensure_capacity(0, 16)
+        kv.ensure_capacity(1, 16)
+        with pytest.raises(RuntimeError):
+            kv.ensure_capacity(2, 16)  # only 8 pages in the pool
+
+
+class TestScheduler:
+    def _mk(self, n_pages=16, max_batch=3):
+        cfg = PagedKVConfig(n_layers=1, n_kv=1, head_dim=4, page_size=4,
+                            n_pages=n_pages, max_pages_per_seq=8)
+        kv = PagedKVCache(cfg, max_seqs=8)
+
+        def prefill(req, seq_id):
+            kv.ensure_capacity(seq_id, len(req.prompt))
+            kv.seq_lens[seq_id] = len(req.prompt)
+            return req.prompt[-1] + 1
+
+        def decode(seq_ids, last):
+            for s in seq_ids:
+                kv.seq_lens[s] += 1
+            return [t + 1 for t in last]
+
+        return ContinuousBatcher(kv, prefill, decode, max_batch=max_batch), kv
+
+    def test_all_requests_complete(self):
+        sched, kv = self._mk()
+        for r in range(5):
+            sched.submit(Request(rid=r, prompt=[1, 2, 3], max_new_tokens=4))
+        done = sched.run()
+        assert len(done) == 5
+        for req in done:
+            assert len(req.generated) == 4
+            assert req.generated == [4, 5, 6, 7]
+            assert req.first_token_s is not None
+        # all pages returned
+        assert kv.free_page_count() == kv.cfg.n_pages
+
+    def test_continuous_admission(self):
+        """New requests join while others are mid-generation."""
+        sched, kv = self._mk(max_batch=2)
+        for r in range(4):
+            sched.submit(Request(rid=r, prompt=[1], max_new_tokens=6))
+        ticks = 0
+        while sched.tick():
+            ticks += 1
+            assert len(sched.active) <= 2
+        assert sched.stats.completed == 4
+        # iteration-level batching: far fewer ticks than sequential serving
+        assert sched.stats.decode_steps < 4 * 6
+
+    def test_preemption_on_pool_exhaustion(self):
+        sched, kv = self._mk(n_pages=6, max_batch=3)
+        for r in range(3):
+            sched.submit(Request(rid=r, prompt=[1, 2, 3, 4], max_new_tokens=8))
+        done = sched.run()
+        assert len(done) == 3
+        assert sched.stats.preemptions > 0
+        for req in done:  # preempted requests still finish correctly
+            assert len(req.generated) == 8
