@@ -27,15 +27,22 @@ def run(report):
         report(f"fig2/{size}/full_load/peak_bytes", rd.peak_working_set,
                f"model_bytes={full}")
 
+        # Both relational engines pin row2col="off": Fig. 2 measures the
+        # row-layout tables' footprint (in-memory planning keeps row+column
+        # copies resident; paged planning doubles the cold store).  Layout
+        # effects are the row2col ablation's concern, not this figure's;
+        # the latency benches (tab1/fig3/fig4) keep the default planner on,
+        # matching the paper's system which includes ROW2COL.
         r = RelationalEngine(spec, params, chunk_size=64,
-                             residency="in_memory", max_len=32)
+                             residency="in_memory", max_len=32,
+                             row2col="off")
         rr = r.generate(pr, 4)
         report(f"fig2/{size}/rel_in_memory/peak_bytes", rr.peak_working_set,
                f"overhead_vs_model={rr.peak_working_set / max(full, 1):.2f}x")
 
         budget = full // 4  # hold at most a quarter of the model
         p = RelationalEngine(spec, params, chunk_size=64, residency="paged",
-                             budget_bytes=budget, max_len=32)
+                             budget_bytes=budget, max_len=32, row2col="off")
         rp = p.generate(pr, 4)
         report(f"fig2/{size}/rel_disk_mem/peak_bytes", rp.peak_working_set,
                f"budget={budget} frac_of_model="

@@ -1,0 +1,141 @@
+"""ROW2COL ablation — the paper's row- vs column-layout comparison.
+
+Executes the same relational prefill/decode pipelines with the layout
+planner off (pure ROW_CHUNK) and forced to COL_CHUNK across a seq-len ×
+chunk-size grid, timing the JAX columnar executor directly (no engine
+overhead).  Results go to ``BENCH_row2col.json`` and the CSV reporter.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from repro.core.graph import infer_shapes
+from repro.core.llama_graph import (LlamaSpec, build_decode_graph,
+                                    build_prefill_graph, convert_weights,
+                                    empty_cache_tables, init_llama_params,
+                                    rope_freq_table, token_table)
+from repro.core.opmap import op_map
+from repro.core.passes import postoptimize, preoptimize
+from repro.core.pipeline import run_pipeline
+
+SPEC = LlamaSpec(vocab=256, d_model=128, n_layers=2, n_heads=4, n_kv=2,
+                 d_ff=256, rope_theta=10000.0)
+SEQ_LENS = (8, 32, 64)
+CHUNK_SIZES = (16, 32)
+MODES = ("off", "col")
+OUT_JSON = "BENCH_row2col.json"
+ITERS = 3
+
+
+def _build(kind: str, T: int, cs: int, mode: str, cache_len: int):
+    g = (build_prefill_graph(SPEC, T, cache_len=cache_len) if kind == "prefill"
+         else build_decode_graph(SPEC, cache_len=cache_len))
+    infer_shapes(g)
+    preoptimize(g)
+    pipe = op_map(g, chunk_size=cs)
+    postoptimize(pipe, layout_mode=mode)
+    return pipe
+
+
+def _env(params, cs: int, cache_len: int):
+    env = convert_weights(params, chunk_size=cs)
+    env.update(empty_cache_tables(SPEC, cache_len, chunk_size=cs))
+    return env
+
+
+def _feed(env, ids, pos0: int):
+    env["token_ids"] = token_table(np.asarray(ids, np.int32))
+    env["freq_each_token"] = rope_freq_table(
+        np.arange(pos0, pos0 + len(ids)), SPEC.head_dim, SPEC.rope_theta)
+
+
+def _time_prefill(pipe, params, ids, cs, cache_len) -> float:
+    # weight conversion (incl. ROW2COL transposes) happens once, outside
+    # the timed region — the ablation times query execution, not data load
+    base = convert_weights(params, chunk_size=cs)
+    if pipe.layout_plan is not None:
+        pipe.layout_plan.ensure_env(base)
+
+    def once():
+        env = dict(base)
+        env.update(empty_cache_tables(SPEC, cache_len, chunk_size=cs))
+        _feed(env, ids, 0)
+        outs, _ = run_pipeline(pipe, env, scalars={"cache_position": 0})
+        np.asarray(outs["logits"].cols["v"])  # block on device work
+    once()  # warm: XLA compile cache
+    t0 = time.perf_counter()
+    for _ in range(ITERS):
+        once()
+    return (time.perf_counter() - t0) / ITERS
+
+
+def _time_decode(pipe, params, ids, cs, cache_len, steps=4) -> float:
+    prefill = _build("prefill", len(ids), cs, pipe.layout_plan.mode
+                     if pipe.layout_plan else "off", cache_len)
+    env = _env(params, cs, cache_len)
+    if pipe.layout_plan is not None:
+        pipe.layout_plan.ensure_env(env)  # convert weights outside timing
+    _feed(env, ids, 0)
+    _, env = run_pipeline(prefill, env, scalars={"cache_position": 0})
+
+    def step(pos):
+        _feed(env, [1], pos)
+        outs, e = run_pipeline(pipe, env, scalars={"cache_position": pos})
+        np.asarray(outs["logits"].cols["v"])
+        return e
+
+    env = step(len(ids))  # warm
+    t0 = time.perf_counter()
+    pos = len(ids) + 1
+    for _ in range(steps):
+        env = step(pos)
+        pos += 1
+    return (time.perf_counter() - t0) / steps
+
+
+def run(report):
+    params = init_llama_params(SPEC, seed=0)
+    results = []
+    for cs in CHUNK_SIZES:
+        for T in SEQ_LENS:
+            cache_len = T + 8
+            ids = list(np.random.default_rng(0).integers(0, SPEC.vocab, T))
+            row = {"seq_len": T, "chunk_size": cs}
+            for mode in MODES:
+                pipe = _build("prefill", T, cs, mode, cache_len)
+                s = _time_prefill(pipe, params, ids, cs, cache_len)
+                row[f"prefill_{mode}_us"] = s * 1e6
+            dec = {"seq_len": T, "chunk_size": cs}
+            for mode in MODES:
+                pipe = _build("decode", 1, cs, mode, cache_len)
+                s = _time_decode(pipe, params, ids, cs, cache_len)
+                dec[f"decode_{mode}_us"] = s * 1e6
+            row.update({k: v for k, v in dec.items() if k not in row})
+            row["prefill_speedup"] = (row["prefill_off_us"]
+                                      / row["prefill_col_us"])
+            row["decode_speedup"] = row["decode_off_us"] / row["decode_col_us"]
+            results.append(row)
+            report(f"row2col/T{T}/cs{cs}/prefill", row["prefill_col_us"],
+                   f"row_us={row['prefill_off_us']:.0f};"
+                   f"speedup={row['prefill_speedup']:.2f}")
+            report(f"row2col/T{T}/cs{cs}/decode", row["decode_col_us"],
+                   f"row_us={row['decode_off_us']:.0f};"
+                   f"speedup={row['decode_speedup']:.2f}")
+    payload = {
+        "spec": {"d_model": SPEC.d_model, "n_layers": SPEC.n_layers,
+                 "d_ff": SPEC.d_ff, "vocab": SPEC.vocab},
+        "seq_lens": list(SEQ_LENS),
+        "chunk_sizes": list(CHUNK_SIZES),
+        "results": results,
+    }
+    with open(OUT_JSON, "w") as f:
+        json.dump(payload, f, indent=2)
+    report("row2col/json", 0.0, OUT_JSON)
+
+
+if __name__ == "__main__":
+    run(lambda n, us, d="": print(f"{n},{us:.1f},{d}"))

@@ -12,7 +12,7 @@ import sys
 import traceback
 
 from benchmarks import (fig2_memory, fig3_capped, fig4_methods,
-                        roofline_bench, tab1_chunk_size)
+                        roofline_bench, row2col_bench, tab1_chunk_size)
 
 BENCHES = {
     "tab1": tab1_chunk_size,
@@ -20,6 +20,7 @@ BENCHES = {
     "fig3": fig3_capped,
     "fig4": fig4_methods,
     "roofline": roofline_bench,
+    "row2col": row2col_bench,
 }
 
 

@@ -28,6 +28,10 @@ def main():
     ap.add_argument("--chunk-size", type=int, default=64)
     ap.add_argument("--full", action="store_true",
                     help="dump every weight INSERT (large!)")
+    ap.add_argument("--row2col", default="off",
+                    choices=["off", "auto", "col"],
+                    help="physical-layout planner mode (ROW2COL); emits "
+                         "column-table DDL + conversion SQL when enabled")
     args = ap.parse_args()
 
     spec = LlamaSpec(vocab=256, d_model=64, n_layers=2, n_heads=4, n_kv=2,
@@ -40,16 +44,18 @@ def main():
     infer_shapes(gp)
     preoptimize(gp)
     pipe_p = op_map(gp, chunk_size=args.chunk_size)
-    postoptimize(pipe_p)
+    postoptimize(pipe_p, layout_mode=args.row2col)
     parts.append("-- ---- prefill pipeline (prompt length "
                  f"{args.prompt_len}) ----")
+    # the ROW2COL conversion is emitted after the weight INSERTs below, so
+    # the column tables are built from populated row tables
     parts.append(generate_sql(pipe_p, dialect="duckdb", include_ddl=True))
 
     gd = build_decode_graph(spec, cache_len=args.max_len)
     infer_shapes(gd)
     preoptimize(gd)
     pipe_d = op_map(gd, chunk_size=args.chunk_size)
-    postoptimize(pipe_d)
+    postoptimize(pipe_d, layout_mode=args.row2col)
     parts.append("\n-- ---- decode pipeline (:cache_position parameter) ----")
     parts.append(generate_sql(pipe_d, dialect="duckdb", include_ddl=False))
 
@@ -62,6 +68,15 @@ def main():
         parts.append(ct.insert_sql(limit=limit))
         if limit is not None:
             parts.append(f"-- ... truncated (use --full for all rows)")
+
+    # ROW2COL conversions after the data load; prefill and decode pipelines
+    # are planned independently, so union their column-table choices
+    from repro.planner import union_conversion_sql
+    conv = union_conversion_sql((pipe_p, pipe_d), dialect="duckdb")
+    if conv:
+        parts.append("\n-- ---- ROW2COL data conversion (row tables -> "
+                     "column tables) ----")
+        parts.append(conv)
 
     parts.append("\n-- ---- final sampling query (greedy) ----")
     parts.append(

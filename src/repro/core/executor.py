@@ -82,6 +82,42 @@ def scalar_table(name: str, key_cols, array, col="s") -> DenseTable:
                       col_types={col: SCALAR})
 
 
+def col_table_from_dense(arr, col_chunk: int, d_key: str = "d",
+                         chunk_key: str = "c", vec_col: str = "chunk"
+                         ) -> DenseTable:
+    """Build a COL_CHUNK weight table from a dense matrix ``W ∈ R^{m×n}``:
+    transposed keys ``(d ∈ [n), c ∈ [m/cs'))`` with the vector chunking the
+    *output* dimension (planner ROW2COL physical layout)."""
+    arr = jnp.asarray(arr)
+    m, n = arr.shape
+    if m % col_chunk != 0:
+        raise ValueError(f"output dim {m} not divisible by chunk {col_chunk}")
+    data = arr.T.reshape(n, m // col_chunk, col_chunk)
+    return DenseTable(
+        keys=((d_key, n), (chunk_key, m // col_chunk)),
+        cols={vec_col: data},
+        col_types={vec_col: ra.VEC(col_chunk)},
+    )
+
+
+def transpose_chunked_table(table: DenseTable, col_chunk: int,
+                            d_key: str = "d", chunk_key: str = "c"
+                            ) -> DenseTable:
+    """ROW_CHUNK → COL_CHUNK: re-express a row-chunked weight table
+    ``(j, c, chunk[cs])`` as its transposed column-layout twin.  This is the
+    executor-side realisation of the planner's ROW2COL data conversion (the
+    SQL side is ``LayoutPlan.conversion_sql``)."""
+    if len(table.keys) != 2 or len(table.cols) != 1:
+        raise ValueError(f"not a 2-key chunked weight table: {table.keys}")
+    (jname, m), (cname, nch) = table.keys
+    vec_col, arr = next(iter(table.cols.items()))
+    if not is_vec(table.col_types[vec_col]):
+        raise ValueError(f"column {vec_col} is not a vector column")
+    dense = arr.reshape(m, nch * arr.shape[-1])
+    return col_table_from_dense(dense, col_chunk, d_key=d_key,
+                                chunk_key=chunk_key, vec_col=vec_col)
+
+
 # ---------------------------------------------------------------------------
 # Expression evaluation
 # ---------------------------------------------------------------------------

@@ -71,6 +71,10 @@ class RelPipeline:
     input_schemas: Dict[str, RelSchema]
     bindings: Dict[str, Rel]
     chunk_size: int
+    # physical-layout planning results (filled by repro.planner.plan_layouts):
+    # table name -> "row_chunk" | "col_chunk", plus the full LayoutPlan
+    layouts: Dict[str, str] = dataclasses.field(default_factory=dict)
+    layout_plan: Optional[object] = None
 
 
 def _scan(name: str, keys, cols) -> Scan:

@@ -158,16 +158,30 @@ def fuse_projections(root: RelNode, memo: Dict[int, RelNode] | None = None
     return node
 
 
-def postoptimize(pipeline: RelPipeline) -> Dict[str, int]:
-    """Apply relational post-optimisations in place across all steps."""
+def postoptimize(pipeline: RelPipeline, layout_mode: str = "off",
+                 cost_params=None) -> Dict[str, int]:
+    """Apply relational post-optimisations in place across all steps.
+
+    ``layout_mode`` invokes the physical-layout planner (ROW2COL) as a
+    standard post-optimisation stage: ``"off"`` keeps the seed ROW_CHUNK
+    plans, ``"auto"`` rewrites matmul sites where the cost model prefers
+    the column layout, ``"col"`` forces it wherever legal.  The resulting
+    ``LayoutPlan`` is recorded on ``pipeline.layout_plan``.
+    """
     before = count_nodes(pipeline)
     memo: Dict[int, RelNode] = {}
     for step in pipeline.steps:
         step.rel.plan = fuse_projections(step.rel.plan, memo)
     for name, rel in pipeline.bindings.items():
         rel.plan = fuse_projections(rel.plan, memo)
-    after = count_nodes(pipeline)
-    return {"rel_nodes_before": before, "rel_nodes_after": after}
+    stats = {"rel_nodes_before": before}
+    if layout_mode != "off":
+        from repro.planner import plan_layouts
+        plan = plan_layouts(pipeline, mode=layout_mode, params=cost_params)
+        stats["row2col_sites"] = len(plan.decisions)
+        stats["row2col_rewrites"] = len(plan.col_decisions)
+    stats["rel_nodes_after"] = count_nodes(pipeline)
+    return stats
 
 
 def count_nodes(pipeline: RelPipeline) -> int:

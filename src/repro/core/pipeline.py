@@ -20,16 +20,25 @@ def run_pipeline(
     pipeline: RelPipeline,
     env: Dict[str, DenseTable],
     scalars: Optional[Dict[str, jnp.ndarray]] = None,
+    layout_plan=None,
 ) -> Tuple[Dict[str, DenseTable], Dict[str, DenseTable]]:
     """Execute all steps. Returns (outputs, updated_env).
 
     ``scalars`` supplies append offsets (e.g. ``cache_position``) as traced
     int32 values so the same compiled pipeline serves every decode step.
+
+    If the pipeline was layout-planned (``repro.planner.plan_layouts``),
+    the plan's COL_CHUNK tables are materialised into ``env`` on first use
+    (transposed from the resident row-layout tables); pass ``layout_plan``
+    to override the plan recorded on the pipeline.
     """
     scalars = scalars or {}
     # .copy() (not dict(...)) so lazy paging environments keep their
     # __missing__ weight-fetch behaviour (serving/engine.LazyEnv)
     env = env.copy()
+    layout_plan = layout_plan or getattr(pipeline, "layout_plan", None)
+    if layout_plan is not None:
+        env = layout_plan.ensure_env(env)
     memo: Dict[int, DenseTable] = {}
 
     for step in pipeline.steps:

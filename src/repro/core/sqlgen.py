@@ -249,18 +249,44 @@ class SQLGenerator:
             body = f"WITH {with_clause}\n{body}"
         return f"CREATE OR REPLACE {create} {_sn(name)} AS\n{body};"
 
-    def generate(self, include_ddl: bool = True) -> str:
-        """Emit the full SQL script for the pipeline."""
+    def generate(self, include_ddl: bool = True,
+                 include_conversion: bool = False) -> str:
+        """Emit the full SQL script for the pipeline.
+
+        The ROW2COL conversion (``CREATE OR REPLACE TABLE W__col AS
+        SELECT ... FROM W``) must run *after* the row tables are populated,
+        which this script cannot know about — so it is omitted by default.
+        Pass ``include_conversion=True`` for a script targeting an
+        already-loaded row-layout database, or emit
+        ``LayoutPlan.conversion_sql`` / ``planner.union_conversion_sql``
+        after your data-load step (see ``examples/sql_dump.py``).
+        """
         out: List[str] = []
+        layouts = getattr(self.p, "layouts", {}) or {}
+        plan = getattr(self.p, "layout_plan", None)
         if include_ddl:
             if self.dialect == "duckdb":
                 out.append(UDF_PRELUDE_DUCKDB)
             out.append("-- weight table DDL (paper §3.1 data conversion)")
             for name, schema in self.p.weight_schemas.items():
-                out.append(self._ddl(name, schema))
+                ddl = self._ddl(name, schema)
+                if name in layouts:
+                    ddl = f"-- layout: {layouts[name]}\n{ddl}"
+                out.append(ddl)
+            if plan is not None and plan.col_decisions:
+                # the rewritten pipeline no longer scans the row-layout
+                # sources, but the conversion reads them — keep their DDL
+                out.append("-- ROW2COL source tables (row_chunk; load "
+                           "weights here, then run the conversion)")
+                for d in plan.col_decisions:
+                    out.append(self._ddl(d.table, d.row_schema))
             out.append("-- input / cache table DDL")
             for name, schema in self.p.input_schemas.items():
                 out.append(self._ddl(name, schema))
+        if include_conversion and plan is not None and plan.col_decisions:
+            out.append("-- ROW2COL data conversion (planner layout "
+                       "choices; run after loading the row tables)")
+            out.append(plan.conversion_sql(self.dialect))
         for step in self.p.steps:
             root = step.rel.plan
             if step.kind == "bind":
@@ -290,5 +316,7 @@ class SQLGenerator:
 
 
 def generate_sql(pipeline: RelPipeline, dialect: str = "duckdb",
-                 include_ddl: bool = True) -> str:
-    return SQLGenerator(pipeline, dialect=dialect).generate(include_ddl)
+                 include_ddl: bool = True,
+                 include_conversion: bool = False) -> str:
+    return SQLGenerator(pipeline, dialect=dialect).generate(
+        include_ddl, include_conversion=include_conversion)

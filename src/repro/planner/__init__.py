@@ -1,0 +1,67 @@
+"""Physical-layout planner — the ROW2COL subsystem (paper §ROW2COL).
+
+The relational compiler (``core/opmap``) always emits matmuls against
+*row-chunked* weight tables: ``W(j, c, chunk FLOAT[cs])``, joined on the
+input-chunk key ``c`` and grouped by the output row ``j``.  That shape
+explodes the reduction key into the GROUP BY (``T·m`` groups) and pays a
+re-chunk tail (π key-split + ``collect_as_array``) to get back to chunked
+vectors.  The paper's ROW2COL optimisation stores the transposed,
+column-major table ``W__col(d, c, chunk FLOAT[cs'])`` instead and groups by
+the *output chunk*: ``T·m/cs'`` groups, no re-chunk tail, and the join
+touches far fewer distinct group keys.
+
+This package makes that a proper cost-based planning stage rather than a
+flag:
+
+  ``planner.layout``   the layout IR: ``ROW_CHUNK`` / ``COL_CHUNK``
+                       constants, transposed-schema builders, and the
+                       legality rules (which plan shapes admit which
+                       layout) via :func:`match_matmul_site` /
+                       :func:`admissible_layouts`.
+  ``planner.cost``     the cost model: rows scanned + join fan-out +
+                       GROUP BY cardinality per operator, parameterised by
+                       seq-len and chunk size — prefill (large T) and
+                       decode (T = 1) pipelines price layouts
+                       independently.
+  ``planner.row2col``  the rewrite pass: :func:`plan_layouts` matches the
+                       matmul sites, prices both layouts, rewrites the
+                       winners in place, and returns a :class:`LayoutPlan`
+                       that materialises transposed tables into executor
+                       environments and emits the SQL conversion script.
+
+Integration points
+------------------
+* ``core/passes.postoptimize(pipe, layout_mode=...)`` runs the planner as a
+  standard post-optimisation stage.
+* ``core/pipeline.run_pipeline`` consults ``pipe.layout_plan`` to
+  materialise ``W__col`` tables into the environment on first use.
+* ``core/sqlgen`` emits the column-table DDL (annotated with the chosen
+  layout) and the transposed join/aggregate SQL for both dialects;
+  :meth:`LayoutPlan.conversion_sql` produces the row→column data-conversion
+  script.
+* ``serving/engine.RelationalEngine(row2col=...)`` is the user-facing knob:
+  ``"auto"`` (cost-based, default), ``"off"``, or ``"col"`` (force).
+
+Legality summary: plain two-key matmul weights (``map_linear`` — o-proj,
+GLU W1/W2/W3, lm_head) admit both layouts; per-head projection weights
+(``map_linear_heads`` — Q/K/V) and non-matmul tables (norms, vocabulary
+value-joins, RoPE frequency tables) stay ROW_CHUNK.
+"""
+
+from repro.planner.cost import (CostParams, MatmulCost, choose_layout,
+                                col_chunk_cost, row_chunk_cost, site_costs)
+from repro.planner.layout import (COL_CHUNK, ROW_CHUNK, MatmulSite,
+                                  admissible_layouts, col_schema,
+                                  col_table_name, match_matmul_site)
+from repro.planner.row2col import (LayoutDecision, LayoutPlan, MODES,
+                                   conversion_sql, plan_layouts,
+                                   union_conversion_sql)
+
+__all__ = [
+    "COL_CHUNK", "ROW_CHUNK", "MODES",
+    "CostParams", "MatmulCost", "MatmulSite",
+    "LayoutDecision", "LayoutPlan",
+    "admissible_layouts", "choose_layout", "col_chunk_cost",
+    "col_schema", "col_table_name", "conversion_sql", "match_matmul_site",
+    "plan_layouts", "row_chunk_cost", "site_costs", "union_conversion_sql",
+]

@@ -1,0 +1,104 @@
+"""Cost model for physical-layout selection (rows scanned + join fan-out).
+
+The unit of cost is "relational rows touched": every physical operator in
+the columnar engine (and in DuckDB) does work proportional to the number of
+rows it scans, emits, or groups.  For a matmul ``X[T, n] · Wᵀ[n, m]`` with
+input chunk size ``cs`` (ROW_CHUNK) / output chunk size ``cs'``
+(COL_CHUNK):
+
+  ROW_CHUNK   scan W          m · n/cs
+              scan X          T · n/cs
+              join output     T · n/cs · m      (each X chunk meets m rows)
+              agg groups      T · m             (reduction key j explodes
+                                                 into the GROUP BY)
+              re-chunk tail   2 · T · m         (π key-split + collect)
+
+  COL_CHUNK   scan W__col     n · m/cs'
+              unnest X        T · n             (chunk → scalar rows)
+              join output     T · n · m/cs'     (each scalar row meets m/cs'
+                                                 rows)
+              agg groups      T · m/cs'         (groups BY output chunk —
+                                                 already chunked, no tail)
+
+Join fan-out (rows emitted by the join) is identical up to chunking
+(``T·n·m/cs``), so the decision is driven by the GROUP BY cardinality and
+the re-chunk tail that ROW_CHUNK pays versus the UNNEST that COL_CHUNK
+pays.  Both are parameterised by the seq-len ``T`` and the chunk sizes, so
+prefill (large T) and decode (T = 1) pipelines price the same weight table
+independently and may pick different layouts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, TYPE_CHECKING
+
+from repro.planner.layout import COL_CHUNK, ROW_CHUNK
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.planner.layout import MatmulSite
+
+
+@dataclasses.dataclass(frozen=True)
+class CostParams:
+    """Knobs the planner prices a pipeline under."""
+
+    seq_len: int = 1          # T: new tokens per pipeline invocation
+    group_weight: float = 1.0  # relative cost of producing one GROUP BY group
+    row_weight: float = 1.0    # relative cost of touching one row
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulCost:
+    """Row-level cost breakdown of one matmul under one layout."""
+
+    layout: str
+    scan_rows: int      # weight + activation base-table rows
+    join_rows: int      # rows emitted by the join (fan-out)
+    agg_groups: int     # GROUP BY output cardinality
+    aux_rows: int       # re-chunk tail (row) / unnest (col) rows
+
+    def total(self, params: CostParams) -> float:
+        rows = self.scan_rows + self.join_rows + self.aux_rows
+        return (params.row_weight * rows
+                + params.group_weight * self.agg_groups)
+
+
+def row_chunk_cost(T: int, in_f: int, out_f: int, cs: int) -> MatmulCost:
+    n_chunks = in_f // cs
+    return MatmulCost(
+        layout=ROW_CHUNK,
+        scan_rows=out_f * n_chunks + T * n_chunks,
+        join_rows=T * n_chunks * out_f,
+        agg_groups=T * out_f,
+        aux_rows=2 * T * out_f,
+    )
+
+
+def col_chunk_cost(T: int, in_f: int, out_f: int, cs_out: int) -> MatmulCost:
+    n_out_chunks = out_f // cs_out
+    return MatmulCost(
+        layout=COL_CHUNK,
+        scan_rows=in_f * n_out_chunks + T * in_f,
+        join_rows=T * in_f * n_out_chunks,
+        agg_groups=T * n_out_chunks,
+        aux_rows=T * in_f,  # UNNEST of the activation chunks
+    )
+
+
+def site_costs(site: "MatmulSite", params: CostParams):
+    """(row_cost, col_cost) totals for a matched matmul site."""
+    T = params.seq_len
+    row = row_chunk_cost(T, site.in_features, site.out_features,
+                         site.row_chunk)
+    col = col_chunk_cost(T, site.in_features, site.out_features,
+                         site.col_chunk)
+    return row.total(params), col.total(params)
+
+
+def choose_layout(site: "MatmulSite", params: Optional[CostParams] = None
+                  ) -> str:
+    """Cost-based layout choice for one matmul site."""
+    params = params or CostParams()
+    row, col = site_costs(site, params)
+    return COL_CHUNK if col < row else ROW_CHUNK

@@ -1,0 +1,193 @@
+"""Physical-layout IR for weight tables (the planner's vocabulary).
+
+A chunked weight matrix ``W ∈ R^{m×n}`` admits two physical layouts:
+
+  ROW_CHUNK  — the seed layout: table ``W(j, c, chunk FLOAT[cs])`` with
+               ``j ∈ [m)`` indexing output rows and ``c`` chunking the
+               *input* dimension; data array ``[m, n/cs, cs]``.  A matmul
+               joins on the input-chunk key ``c`` and groups by the output
+               row ``j`` (exploding the reduction key into the GROUP BY).
+  COL_CHUNK  — the paper's ROW2COL layout: transposed table
+               ``W__col(d, c, chunk FLOAT[cs'])`` with ``d ∈ [n)`` indexing
+               input features and ``c`` chunking the *output* dimension;
+               data array ``[n, m/cs', cs']``.  A matmul joins on the input
+               feature ``d`` and groups by the output chunk ``c`` — the
+               aggregate is an elementwise vector SUM (``sumForEach``) whose
+               result is already chunked, so the ROW_CHUNK plan's re-chunk
+               tail (π key-split + collect_as_array) disappears.
+
+Legality (encoded by :func:`admissible_layouts`): COL_CHUNK applies to the
+canonical two-key matmul weights (``W(j, c, chunk)`` consumed by a
+``GroupAgg(Join(x, Scan(W)))`` with a single ``SUM(dot)`` aggregate — the
+``map_linear`` shape).  Per-head projection weights (``W(h, r, c, chunk)``,
+the ``map_linear_heads`` shape) keep ROW_CHUNK: their re-chunk folds the
+per-head row key ``r``, which the column layout does not expose.  Value
+joins (embedding lookups) and norm vectors are not matmuls and keep
+ROW_CHUNK as well.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.core import relational as ra
+from repro.core.relational import (
+    Call, Col, Collect, GroupAgg, Join, Key, Project, RelNode, RelSchema,
+    Scan, resolve, VEC,
+)
+
+ROW_CHUNK = "row_chunk"
+COL_CHUNK = "col_chunk"
+
+COL_SUFFIX = "__col"
+
+
+def col_table_name(row_table: str) -> str:
+    return row_table + COL_SUFFIX
+
+
+def col_schema(in_features: int, out_features: int, col_chunk: int,
+               d_key: str = "d", chunk_key: str = "c",
+               vec_col: str = "chunk") -> RelSchema:
+    """Schema of the COL_CHUNK table: (d, c, chunk FLOAT[col_chunk])."""
+    assert out_features % col_chunk == 0, (out_features, col_chunk)
+    return RelSchema(
+        keys=((d_key, in_features), (chunk_key, out_features // col_chunk)),
+        cols=((vec_col, VEC(col_chunk)),),
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulSite:
+    """A matched ``GroupAgg(Join(x, Scan(W)))`` matmul site in a pipeline.
+
+    ``root`` is the bind-step plan root (the ROW_CHUNK plan's trailing
+    ``Collect``); the remaining fields are everything the rewrite and the
+    cost model need.
+    """
+
+    step_name: str          # bind step producing this matmul
+    root: RelNode           # Collect node: plan root of the bind
+    rechunk_proj: Project   # π splitting j -> (c, e)
+    agg: GroupAgg           # γ_{(..., j), SUM(dot)}
+    join: Join              # x ⋈ W ON c
+    weight_scan: Scan       # Scan(W) — ROW_CHUNK
+    x_plan: RelNode         # left (activation) input, chunked (..., c)
+    x_col: str              # activation vector column name
+    base_keys: Tuple[Tuple[str, int], ...]  # x keys excluding the chunk key
+    in_features: int
+    out_features: int
+    row_chunk: int          # cs of the input-dim chunking (ROW_CHUNK vec)
+    col_chunk: int          # cs of the output-dim chunking (COL_CHUNK vec)
+    out_col: str            # output vector column name (Collect.vec_col)
+
+    @property
+    def table(self) -> str:
+        return self.weight_scan.table
+
+    @property
+    def n_in_chunks(self) -> int:
+        return self.in_features // self.row_chunk
+
+    @property
+    def n_out_chunks(self) -> int:
+        return self.out_features // self.col_chunk
+
+
+def _dot_cols(expr) -> Optional[Tuple[str, str]]:
+    if isinstance(expr, Call) and expr.fn == "dot" and all(
+            isinstance(a, Col) for a in expr.args):
+        return expr.args[0].name, expr.args[1].name
+    return None
+
+
+def match_matmul_site(step_name: str, root: RelNode) -> Optional[MatmulSite]:
+    """Match the ``map_linear`` plan shape rooted at a bind step:
+
+        Collect(Project(GroupAgg(Join(x, Scan(W)))))
+
+    with the GroupAgg a single ``SUM(dot(x_col, chunk_col))`` grouped by the
+    weight's row key, the Join an equi-join on the shared chunk key, and the
+    Project the re-chunk split ``j -> (c, e)``.  Returns None when the plan
+    has any other shape (per-head projections, attention, embeddings, …).
+    """
+    if not isinstance(root, Collect):
+        return None
+    proj = root.input
+    if not isinstance(proj, Project) or proj.keys is None:
+        return None
+    agg = proj.input
+    if not isinstance(agg, GroupAgg) or len(agg.aggs) != 1:
+        return None
+    out, fn, expr = agg.aggs[0]
+    if fn != "SUM":
+        return None
+    dot = _dot_cols(expr)
+    if dot is None:
+        return None
+    join = agg.input
+    if not isinstance(join, Join) or not isinstance(join.right, Scan):
+        return None
+    scan = join.right
+    ws = scan.table_schema
+    # two-key row-chunked weight: (j, out_f), (c, n_chunks) + one vec column
+    if len(ws.keys) != 2 or len(ws.cols) != 1:
+        return None
+    (jname, out_f), (cname, _) = ws.keys
+    wcol, wtype = ws.cols[0]
+    if not ra.is_vec(wtype):
+        return None
+    # join must bind the weight's chunk key to the activation's chunk key
+    if len(join.on) != 1:
+        return None
+    on_key, on_expr = join.on[0]
+    if on_key != cname or not isinstance(on_expr, Key):
+        return None
+    # the dot must pair the activation column with the weight column
+    a, b = dot
+    if b == wcol:
+        x_col = a
+    elif a == wcol:
+        x_col = b
+    else:
+        return None
+    xs = resolve(join.left)
+    if x_col not in xs.col_names or on_expr.name not in xs.key_names:
+        return None
+    # group keys: all activation keys except the chunk key, plus j
+    if jname not in agg.group_keys:
+        return None
+    base_keys = tuple((k, s) for k, s in xs.keys if k != on_expr.name)
+    if set(agg.group_keys) != {k for k, _ in base_keys} | {jname}:
+        return None
+    # the re-chunk projection splits j into (chunk, elem)
+    if len(proj.keys) != len(base_keys) + 2:
+        return None
+    (ck, n_out_chunks, _), (ek, cs_out, _) = proj.keys[-2:]
+    if root.fold_key != ek or cs_out * n_out_chunks != out_f:
+        return None
+    return MatmulSite(
+        step_name=step_name,
+        root=root,
+        rechunk_proj=proj,
+        agg=agg,
+        join=join,
+        weight_scan=scan,
+        x_plan=join.left,
+        x_col=x_col,
+        base_keys=base_keys,
+        in_features=xs.key_size(on_expr.name) * ra.vec_width(
+            xs.col_type(x_col)),
+        out_features=out_f,
+        row_chunk=ra.vec_width(wtype),
+        col_chunk=cs_out,
+        out_col=root.vec_col,
+    )
+
+
+def admissible_layouts(site: Optional[MatmulSite]) -> Tuple[str, ...]:
+    """Physical layouts legal for a (candidate) weight scan."""
+    if site is None:
+        return (ROW_CHUNK,)
+    return (ROW_CHUNK, COL_CHUNK)

@@ -1,0 +1,297 @@
+"""ROW2COL rewrite pass — cost-based physical layout planning (tentpole).
+
+``plan_layouts(pipeline, mode)`` walks a compiled ``RelPipeline``, matches
+every ``map_linear``-shaped matmul bind (``Collect(π(γ(x ⋈ Scan(W))))``),
+prices both physical layouts with the :mod:`repro.planner.cost` model, and
+rewrites the winners in place to the column-layout plan:
+
+    ROW_CHUNK                               COL_CHUNK (ROW2COL)
+    ---------                               -------------------
+    γ_{(t,j), SUM(dot(v, chunk))}           γ_{(t,c), sumForEach(x·chunk)}
+        (x ⋈_c W(j, c, chunk))                  (unnest(x) ⋈_d W__col(d, c,
+    → π split j → (c, e) → collect               chunk))
+
+The column plan joins on the input feature ``d``, groups by the *output
+chunk* ``c`` instead of exploding the reduction key ``j`` into the GROUP
+BY, and produces already-chunked vectors — the ROW_CHUNK plan's re-chunk
+tail disappears.  Decisions, costs, and the table conversions they imply
+are returned as a :class:`LayoutPlan`, which also knows how to materialise
+the transposed tables into an executor environment (:meth:`ensure_env`)
+and how to emit the SQL data-conversion script (:meth:`conversion_sql`).
+
+Modes: ``"off"`` (no rewrites), ``"auto"`` (cost-based, the default knob
+position), ``"col"`` (force COL_CHUNK wherever legal — used by equivalence
+tests and ablations).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+from repro.core.opmap import RelPipeline
+from repro.core.relational import (
+    GroupAgg, Join, Project, RelNode, Scan, Unnest, add, col, const, key,
+    mul,
+)
+from repro.planner import cost as cost_mod
+from repro.planner.cost import CostParams
+from repro.planner.layout import (
+    COL_CHUNK, ROW_CHUNK, MatmulSite, col_schema, col_table_name,
+    match_matmul_site,
+)
+
+MODES = ("off", "auto", "col")
+
+
+@dataclasses.dataclass(frozen=True)
+class LayoutDecision:
+    """One priced matmul site and the layout chosen for its weight table."""
+
+    table: str
+    col_table: str
+    layout: str
+    step_name: str
+    in_features: int
+    out_features: int
+    row_chunk: int
+    col_chunk: int
+    row_cost: float
+    col_cost: float
+    row_keys: tuple  # (j_key, c_key) names of the ROW_CHUNK schema
+    vec_col: str
+    row_schema: object = None  # RelSchema of the ROW_CHUNK source table
+
+
+@dataclasses.dataclass
+class LayoutPlan:
+    """Outcome of layout planning over one pipeline."""
+
+    mode: str
+    decisions: List[LayoutDecision] = dataclasses.field(default_factory=list)
+
+    @property
+    def col_decisions(self) -> List[LayoutDecision]:
+        return [d for d in self.decisions if d.layout == COL_CHUNK]
+
+    def layout_of(self, table: str) -> str:
+        for d in self.decisions:
+            if d.table == table:
+                return d.layout
+        return ROW_CHUNK
+
+    def ensure_env(self, env):
+        """Materialise COL_CHUNK tables into an executor environment.
+
+        Row-layout tables stay untouched (other pipelines over the same
+        environment may still scan them).  Environments that resolve
+        layouts themselves (e.g. the paged ``LazyEnv``) are left alone.
+        """
+        if getattr(env, "resolves_layouts", False):
+            return env
+        from repro.core.executor import transpose_chunked_table
+        for d in self.col_decisions:
+            if d.col_table in env:
+                continue
+            env[d.col_table] = transpose_chunked_table(
+                env[d.table], d.col_chunk)
+        return env
+
+    def conversion_sql(self, dialect: str = "duckdb") -> str:
+        """SQL data-conversion script: row tables → column tables (§3.1
+        conversion re-run under the new physical layout).  Must run *after*
+        the row tables are populated — ``CREATE OR REPLACE TABLE ... AS``
+        both creates and fills each column table."""
+        return conversion_sql(self.col_decisions, dialect)
+
+
+def conversion_sql(decisions, dialect: str = "duckdb") -> str:
+    """ROW2COL conversion statements for a set of COL_CHUNK decisions."""
+    assert dialect in ("duckdb", "ansi")
+    stmts = []
+    for d in decisions:
+        jk, ck = d.row_keys
+        cs_in, cs_out = d.row_chunk, d.col_chunk
+        if dialect == "duckdb":
+            flat = (f"SELECT {jk}, {ck} * {cs_in} + e.e AS d, "
+                    f"{d.vec_col}[e.e + 1] AS x FROM {d.table}, "
+                    f"(SELECT UNNEST(range({cs_in})) AS e) AS e")
+            intdiv = "//"
+        else:
+            flat = (f"SELECT {jk}, {ck} * {cs_in} + u.ord - 1 AS d, "
+                    f"u.x AS x FROM {d.table}, "
+                    f"UNNEST({d.vec_col}) WITH ORDINALITY AS u(x, ord)")
+            intdiv = "/"
+        stmts.append(
+            f"-- ROW2COL: {d.table} -> {d.col_table}\n"
+            f"CREATE OR REPLACE TABLE {d.col_table} AS\n"
+            f"WITH flat AS ({flat})\n"
+            f"SELECT d, {jk} {intdiv} {cs_out} AS c, "
+            f"collect_as_array(LIST({jk} % {cs_out}), LIST(x)) "
+            f"AS {d.vec_col}\n"
+            f"FROM flat GROUP BY d, {jk} {intdiv} {cs_out};")
+    return "\n\n".join(stmts)
+
+
+def union_conversion_sql(pipelines, dialect: str = "duckdb") -> str:
+    """One conversion script covering several planned pipelines (e.g.
+    prefill + decode, which are planned independently), deduplicated by
+    column table."""
+    seen, fresh = set(), []
+    for pipe in pipelines:
+        plan = getattr(pipe, "layout_plan", None)
+        if plan is None:
+            continue
+        for d in plan.col_decisions:
+            if d.col_table not in seen:
+                seen.add(d.col_table)
+                fresh.append(d)
+    return conversion_sql(fresh, dialect)
+
+
+# ---------------------------------------------------------------------------
+# Rewrite
+# ---------------------------------------------------------------------------
+
+
+def _fresh(name: str, taken) -> str:
+    while name in taken:
+        name += "_"
+    return name
+
+
+def _build_col_plan(site: MatmulSite) -> RelNode:
+    """Construct the COL_CHUNK plan for a matched matmul site.
+
+    Output schema is identical to the ROW_CHUNK plan's (same keys, same
+    chunked vector column), so downstream consumers are unaffected.
+    """
+    base = site.base_keys
+    xs_keys = {k for k, _ in base} | {site.join.on[0][1].name}
+    e_name = _fresh("e", xs_keys)
+    d_name = _fresh("d", xs_keys)
+    c_in = site.join.on[0][1].name  # activation chunk key
+    cs_in = site.row_chunk
+    out_chunk_key = site.rechunk_proj.keys[-2][0]  # usually "c"
+
+    u = Unnest(input=site.x_plan, vec_col=site.x_col, elem_key=e_name,
+               elem_col="x")
+    p = Project(
+        input=u,
+        keys=[(k, s, key(k)) for k, s in base]
+        + [(d_name, site.in_features,
+            add(mul(key(c_in), const(cs_in)), key(e_name)))],
+        exprs=[("xs", None, col("x"))],
+    )
+    scan = Scan(
+        table=col_table_name(site.table),
+        table_schema=col_schema(site.in_features, site.out_features,
+                                site.col_chunk, d_key="d",
+                                chunk_key=out_chunk_key),
+    )
+    j = Join(left=p, right=scan, on=[("d", key(d_name))])
+    return GroupAgg(
+        input=j,
+        group_keys=[k for k, _ in base] + [out_chunk_key],
+        aggs=[(site.out_col, "SUM", mul(col("xs"), col("chunk")))],
+    )
+
+
+def _replace_nodes(pipeline: RelPipeline, mapping: Dict[int, RelNode]):
+    """Swap rewritten plan roots everywhere they appear (plans are shared
+    DAGs: downstream steps embed upstream bind roots by reference)."""
+    seen = set()
+
+    def fix(node: RelNode):
+        if id(node) in seen:
+            return
+        seen.add(id(node))
+        if isinstance(node, Scan):
+            return
+        for f in dataclasses.fields(node):
+            v = getattr(node, f.name)
+            if isinstance(v, RelNode):
+                nv = mapping.get(id(v), v)
+                if nv is not v:
+                    setattr(node, f.name, nv)
+                fix(nv)
+
+    def fix_rel(rel):
+        rel.plan = mapping.get(id(rel.plan), rel.plan)
+        fix(rel.plan)
+
+    for step in pipeline.steps:
+        fix_rel(step.rel)
+    for rel in pipeline.bindings.values():
+        fix_rel(rel)
+
+
+def _site_seq_len(site: MatmulSite) -> int:
+    t = 1
+    for _, s in site.base_keys:
+        t *= s
+    return t
+
+
+def plan_layouts(pipeline: RelPipeline, mode: str = "auto",
+                 params: Optional[CostParams] = None) -> LayoutPlan:
+    """Run the layout planner over a compiled pipeline (in place).
+
+    Returns the :class:`LayoutPlan`; also records it on
+    ``pipeline.layout_plan`` and the per-table choices on
+    ``pipeline.layouts`` so downstream stages (``run_pipeline``,
+    ``sqlgen``) can act on it without re-planning.
+    """
+    if mode not in MODES:
+        raise ValueError(f"layout mode {mode!r} not in {MODES}")
+    plan = LayoutPlan(mode=mode)
+    if mode == "off":
+        pipeline.layout_plan = plan
+        return plan
+
+    sites: List[MatmulSite] = []
+    for step in pipeline.steps:
+        if step.kind != "bind":
+            continue
+        site = match_matmul_site(step.name, step.rel.plan)
+        if site is not None:
+            sites.append(site)
+
+    mapping: Dict[int, RelNode] = {}
+    for site in sites:
+        p = params or CostParams(seq_len=_site_seq_len(site))
+        row_cost, col_cost = cost_mod.site_costs(site, p)
+        layout = (COL_CHUNK if mode == "col"
+                  else cost_mod.choose_layout(site, p))
+        jk, ck = (k for k, _ in site.weight_scan.table_schema.keys)
+        decision = LayoutDecision(
+            table=site.table,
+            col_table=col_table_name(site.table),
+            layout=layout,
+            step_name=site.step_name,
+            in_features=site.in_features,
+            out_features=site.out_features,
+            row_chunk=site.row_chunk,
+            col_chunk=site.col_chunk,
+            row_cost=row_cost,
+            col_cost=col_cost,
+            row_keys=(jk, ck),
+            vec_col=site.weight_scan.table_schema.cols[0][0],
+            row_schema=site.weight_scan.table_schema,
+        )
+        plan.decisions.append(decision)
+        if layout != COL_CHUNK:
+            pipeline.layouts[site.table] = ROW_CHUNK
+            continue
+        new_root = _build_col_plan(site)
+        mapping[id(site.root)] = new_root
+        # the pipeline now scans the transposed table instead
+        pipeline.weight_schemas.pop(site.table, None)
+        pipeline.weight_schemas[decision.col_table] = (
+            new_root.input.right.table_schema)
+        pipeline.layouts[decision.col_table] = COL_CHUNK
+
+    if mapping:
+        _replace_nodes(pipeline, mapping)
+    pipeline.layout_plan = plan
+    return plan

@@ -44,7 +44,16 @@ class GenerationResult:
 
 
 class LazyEnv(dict):
-    """Environment that pages weight tables in on first Scan."""
+    """Environment that pages weight tables in on first Scan.
+
+    COL_CHUNK tables introduced by the layout planner are converted
+    *offline* into the pager's cold store (``RelationalEngine.
+    _register_layouts``), so they page through the same working-set budget
+    as every other weight — ``resolves_layouts`` tells
+    ``LayoutPlan.ensure_env`` not to materialise resident copies here.
+    """
+
+    resolves_layouts = True
 
     def __init__(self, pager: WeightPager, chunk_size: int, make_table):
         super().__init__()
@@ -81,18 +90,21 @@ class RelationalEngine:
                  chunk_size: int = 64, residency: str = "in_memory",
                  budget_bytes: Optional[int] = None,
                  disk_dir: Optional[str] = None, max_len: int = 1024,
-                 pager_policy: str = "pin"):
+                 pager_policy: str = "pin", row2col: str = "auto"):
+        from repro.planner import MODES
+        assert row2col in MODES, f"row2col must be one of {MODES}"
         self.spec = spec
         self.cs = chunk_size
         self.max_len = max_len
         self.residency = residency
+        self.row2col = row2col
         self._prefill_pipes: Dict[int, object] = {}
 
         g = lg.build_decode_graph(spec, cache_len=max_len)
         infer_shapes(g)
         preoptimize(g)
         self.decode_pipe = op_map(g, chunk_size=chunk_size)
-        postoptimize(self.decode_pipe)
+        postoptimize(self.decode_pipe, layout_mode=row2col)
 
         if residency == "in_memory":
             self.env_base = lg.convert_weights(params, chunk_size=chunk_size)
@@ -103,6 +115,24 @@ class RelationalEngine:
             for k, v in params.items():
                 self.pager.add(k, v)
             self.env_base = LazyEnv(self.pager, chunk_size, _chunked_table)
+        self._register_layouts(self.decode_pipe)
+
+    def _register_layouts(self, pipe) -> None:
+        """Make a pipeline's COL_CHUNK tables resolvable: materialised into
+        the resident env (in-memory), or converted once into the pager's
+        cold store (paged) — the offline ROW2COL data conversion, so paged
+        accesses stay zero-copy wraps under the same working-set budget."""
+        plan = getattr(pipe, "layout_plan", None)
+        if plan is None:
+            return
+        if self.residency == "in_memory":
+            plan.ensure_env(self.env_base)
+            return
+        for d in plan.col_decisions:
+            if d.col_table in self.pager._cold:
+                continue
+            dense = np.asarray(self.pager._cold[d.table])
+            self.pager.add(d.col_table, np.ascontiguousarray(dense.T))
 
     def _prefill_pipe(self, T: int):
         if T not in self._prefill_pipes:
@@ -110,7 +140,8 @@ class RelationalEngine:
             infer_shapes(g)
             preoptimize(g)
             pipe = op_map(g, chunk_size=self.cs)
-            postoptimize(pipe)
+            postoptimize(pipe, layout_mode=self.row2col)
+            self._register_layouts(pipe)
             self._prefill_pipes[T] = pipe
         return self._prefill_pipes[T]
 
