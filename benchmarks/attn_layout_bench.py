@@ -1,0 +1,113 @@
+"""KV-cache layout ablation — decode-step attention joins across the
+planner's cache layouts (row_chunk vs head_major vs pos_major).
+
+Runs the same relational decode pipeline with the cache tables re-keyed to
+each physical layout (weights stay layout-planned "auto"), timing the JAX
+columnar executor directly, and reports the cost model's locality totals
+alongside the measured times.  Results go to ``BENCH_attn_layout.json``
+and the CSV reporter.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from repro.core.graph import infer_shapes
+from repro.core.llama_graph import (LlamaSpec, build_decode_graph,
+                                    build_prefill_graph, convert_weights,
+                                    empty_cache_tables, init_llama_params,
+                                    rope_freq_table, token_table)
+from repro.core.opmap import op_map
+from repro.core.passes import postoptimize, preoptimize
+from repro.core.pipeline import run_pipeline
+from repro.planner import CACHE_LAYOUTS, CostParams, cache_layout_cost
+
+SPEC = LlamaSpec(vocab=256, d_model=128, n_layers=2, n_heads=8, n_kv=4,
+                 d_ff=256, rope_theta=10000.0)
+CACHE_LENS = (64, 256)
+CHUNK_SIZE = 16
+PROMPT = 8
+STEPS = 4
+OUT_JSON = "BENCH_attn_layout.json"
+
+
+def _build(kind: str, T: int, cache_len: int, layout: str):
+    g = (build_prefill_graph(SPEC, T, cache_len=cache_len)
+         if kind == "prefill" else build_decode_graph(SPEC, cache_len))
+    infer_shapes(g)
+    preoptimize(g)
+    pipe = op_map(g, chunk_size=CHUNK_SIZE)
+    postoptimize(pipe, layout_mode="auto", cache_mode=layout)
+    return pipe
+
+
+def _time_decode(params, ids, cache_len: int, layout: str) -> float:
+    prefill = _build("prefill", len(ids), cache_len, layout)
+    decode = _build("decode", 1, cache_len, layout)
+    env = convert_weights(params, chunk_size=CHUNK_SIZE)
+    env.update(empty_cache_tables(SPEC, cache_len, chunk_size=CHUNK_SIZE,
+                                  layout=layout))
+    for pipe in (prefill, decode):  # conversions outside the timed region
+        pipe.layout_plan.ensure_env(env)
+    env["token_ids"] = token_table(np.asarray(ids, np.int32))
+    env["freq_each_token"] = rope_freq_table(
+        np.arange(len(ids)), SPEC.head_dim, SPEC.rope_theta)
+    _, env = run_pipeline(prefill, env, scalars={"cache_position": 0})
+
+    def step(pos):
+        env["token_ids"] = token_table(np.asarray([1], np.int32))
+        env["freq_each_token"] = rope_freq_table(
+            np.asarray([pos]), SPEC.head_dim, SPEC.rope_theta)
+        outs, e = run_pipeline(decode, env, scalars={"cache_position": pos})
+        np.asarray(outs["logits"].cols["v"])  # block on device work
+        return e
+
+    env = step(len(ids))  # warm: XLA compile cache
+    t0 = time.perf_counter()
+    pos = len(ids) + 1
+    for _ in range(STEPS):
+        env = step(pos)
+        pos += 1
+    return (time.perf_counter() - t0) / STEPS
+
+
+def run(report):
+    params = init_llama_params(SPEC, seed=0)
+    ids = list(np.random.default_rng(0).integers(0, SPEC.vocab, PROMPT))
+    dh_chunks = SPEC.head_dim // min(CHUNK_SIZE, SPEC.head_dim)
+    results = []
+    for cache_len in CACHE_LENS:
+        row = {"cache_len": cache_len, "chunk_size": CHUNK_SIZE}
+        for layout in CACHE_LAYOUTS:
+            s = _time_decode(params, ids, cache_len, layout)
+            model = cache_layout_cost(layout, cache_len, SPEC.n_kv,
+                                      dh_chunks)
+            row[f"decode_{layout}_us"] = s * 1e6
+            row[f"cost_{layout}"] = model.total(CostParams())
+            row[f"read_segments_{layout}"] = model.read_segments
+        base = row["decode_row_chunk_us"]
+        for layout in CACHE_LAYOUTS:
+            row[f"speedup_{layout}"] = base / row[f"decode_{layout}_us"]
+            report(f"attn_layout/S{cache_len}/{layout}",
+                   row[f"decode_{layout}_us"],
+                   f"cost={row[f'cost_{layout}']:.0f};"
+                   f"speedup_vs_row={row[f'speedup_{layout}']:.2f}")
+        results.append(row)
+    payload = {
+        "spec": {"d_model": SPEC.d_model, "n_layers": SPEC.n_layers,
+                 "n_heads": SPEC.n_heads, "n_kv": SPEC.n_kv,
+                 "vocab": SPEC.vocab},
+        "cache_lens": list(CACHE_LENS),
+        "layouts": list(CACHE_LAYOUTS),
+        "results": results,
+    }
+    with open(OUT_JSON, "w") as f:
+        json.dump(payload, f, indent=2)
+    report("attn_layout/json", 0.0, OUT_JSON)
+
+
+if __name__ == "__main__":
+    run(lambda n, us, d="": print(f"{n},{us:.1f},{d}"))

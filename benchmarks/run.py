@@ -11,8 +11,9 @@ from __future__ import annotations
 import sys
 import traceback
 
-from benchmarks import (fig2_memory, fig3_capped, fig4_methods,
-                        roofline_bench, row2col_bench, tab1_chunk_size)
+from benchmarks import (attn_layout_bench, fig2_memory, fig3_capped,
+                        fig4_methods, roofline_bench, row2col_bench,
+                        tab1_chunk_size)
 
 BENCHES = {
     "tab1": tab1_chunk_size,
@@ -21,6 +22,7 @@ BENCHES = {
     "fig4": fig4_methods,
     "roofline": roofline_bench,
     "row2col": row2col_bench,
+    "attn_layout": attn_layout_bench,
 }
 
 

@@ -32,6 +32,11 @@ def main():
                     choices=["off", "auto", "col"],
                     help="physical-layout planner mode (ROW2COL); emits "
                          "column-table DDL + conversion SQL when enabled")
+    ap.add_argument("--cache-layout", default="off",
+                    choices=["off", "auto", "row_chunk", "head_major",
+                             "pos_major"],
+                    help="KV-cache physical key order (planner cache "
+                         "layouts); annotates the cache DDL")
     args = ap.parse_args()
 
     spec = LlamaSpec(vocab=256, d_model=64, n_layers=2, n_heads=4, n_kv=2,
@@ -40,22 +45,30 @@ def main():
 
     parts = ["-- ============ TranSQL+ compiled pipeline ============"]
 
+    # plan decode first: its cost-chosen cache layout binds the prefill
+    # pipeline too (both read/write the same cache tables)
+    gd = build_decode_graph(spec, cache_len=args.max_len)
+    infer_shapes(gd)
+    preoptimize(gd)
+    pipe_d = op_map(gd, chunk_size=args.chunk_size)
+    postoptimize(pipe_d, layout_mode=args.row2col,
+                 cache_mode=args.cache_layout)
+    plan_d = pipe_d.layout_plan
+    cache_layout = (plan_d.cache_decisions[0].layout
+                    if plan_d is not None and plan_d.cache_decisions
+                    else "off")
+
     gp = build_prefill_graph(spec, args.prompt_len, cache_len=args.max_len)
     infer_shapes(gp)
     preoptimize(gp)
     pipe_p = op_map(gp, chunk_size=args.chunk_size)
-    postoptimize(pipe_p, layout_mode=args.row2col)
+    postoptimize(pipe_p, layout_mode=args.row2col, cache_mode=cache_layout)
     parts.append("-- ---- prefill pipeline (prompt length "
                  f"{args.prompt_len}) ----")
     # the ROW2COL conversion is emitted after the weight INSERTs below, so
     # the column tables are built from populated row tables
     parts.append(generate_sql(pipe_p, dialect="duckdb", include_ddl=True))
 
-    gd = build_decode_graph(spec, cache_len=args.max_len)
-    infer_shapes(gd)
-    preoptimize(gd)
-    pipe_d = op_map(gd, chunk_size=args.chunk_size)
-    postoptimize(pipe_d, layout_mode=args.row2col)
     parts.append("\n-- ---- decode pipeline (:cache_position parameter) ----")
     parts.append(generate_sql(pipe_d, dialect="duckdb", include_ddl=False))
 

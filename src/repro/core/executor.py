@@ -118,6 +118,66 @@ def transpose_chunked_table(table: DenseTable, col_chunk: int,
                                 chunk_key=chunk_key, vec_col=vec_col)
 
 
+def colh_table_from_dense(arr, col_chunk: int, head_key: str = "h",
+                          d_key: str = "d", chunk_key: str = "c",
+                          vec_col: str = "chunk") -> DenseTable:
+    """Build a COL_CHUNK_HEADS weight table from a dense per-head projection
+    ``W ∈ R^{H×dh×n}``: the head key stays a block key, the per-head output
+    (head_dim) is transposed against the input features and chunked —
+    keys ``(h ∈ [H), d ∈ [n), c ∈ [dh/cs'))``, data ``[H, n, dh/cs', cs']``.
+    """
+    arr = jnp.asarray(arr)
+    H, dh, n = arr.shape
+    if dh % col_chunk != 0:
+        raise ValueError(f"head dim {dh} not divisible by chunk {col_chunk}")
+    data = arr.transpose(0, 2, 1).reshape(H, n, dh // col_chunk, col_chunk)
+    return DenseTable(
+        keys=((head_key, H), (d_key, n), (chunk_key, dh // col_chunk)),
+        cols={vec_col: data},
+        col_types={vec_col: ra.VEC(col_chunk)},
+    )
+
+
+def transpose_head_chunked_table(table: DenseTable, col_chunk: int,
+                                 d_key: str = "d", chunk_key: str = "c"
+                                 ) -> DenseTable:
+    """ROW_CHUNK → COL_CHUNK_HEADS: re-express a per-head row-chunked weight
+    table ``(h, r, c, chunk[cs])`` as its head-blocked column twin
+    ``(h, d, c', chunk[cs'])`` — the executor side of the planner's
+    head-blocked ROW2COL conversion."""
+    if len(table.keys) != 3 or len(table.cols) != 1:
+        raise ValueError(f"not a 3-key per-head weight table: {table.keys}")
+    (hname, H), (rname, dh), (cname, nch) = table.keys
+    vec_col, arr = next(iter(table.cols.items()))
+    if not is_vec(table.col_types[vec_col]):
+        raise ValueError(f"column {vec_col} is not a vector column")
+    dense = arr.reshape(H, dh, nch * arr.shape[-1])
+    return colh_table_from_dense(dense, col_chunk, head_key=hname,
+                                 d_key=d_key, chunk_key=chunk_key,
+                                 vec_col=vec_col)
+
+
+def permute_table_keys(table: DenseTable, key_order) -> DenseTable:
+    """Re-key a DenseTable to a new physical key order (name-based axis
+    transpose) — the executor realisation of a planner cache-layout choice.
+    Vector columns keep their trailing payload axis."""
+    key_order = tuple(key_order)
+    if key_order == table.key_names:
+        return table
+    if set(key_order) != set(table.key_names):
+        raise ValueError(f"key order {key_order} does not permute "
+                         f"{table.key_names}")
+    perm = [table.key_names.index(k) for k in key_order]
+    sizes = dict(table.keys)
+    cols, col_types = {}, {}
+    for c, arr in table.cols.items():
+        axes = perm + ([len(perm)] if is_vec(table.col_types[c]) else [])
+        cols[c] = jnp.transpose(arr, axes)
+        col_types[c] = table.col_types[c]
+    return DenseTable(keys=tuple((k, sizes[k]) for k in key_order),
+                      cols=cols, col_types=col_types)
+
+
 # ---------------------------------------------------------------------------
 # Expression evaluation
 # ---------------------------------------------------------------------------

@@ -209,19 +209,28 @@ def token_table(ids: np.ndarray) -> DenseTable:
                         jnp.asarray(ids, jnp.int32))
 
 
-def empty_cache_tables(spec: LlamaSpec, cache_len: int, chunk_size: int = 128
-                       ) -> Dict[str, DenseTable]:
-    """Preallocated KV cache tables (tp, hk, c, v FLOAT[chunk])."""
+def empty_cache_tables(spec: LlamaSpec, cache_len: int, chunk_size: int = 128,
+                       layout: str = "row_chunk") -> Dict[str, DenseTable]:
+    """Preallocated KV cache tables.
+
+    ``layout`` picks the physical key order (planner cache layouts):
+    ``"row_chunk"`` (seed ``(tp, hk, c)``), ``"head_major"``
+    (``(hk, tp, c)``) or ``"pos_major"`` (``(tp, c, hk)``); the payload is
+    always ``FLOAT[chunk]`` over head-dim chunks.
+    """
+    from repro.core.opmap import CACHE_KEY_ORDERS
     dh = spec.head_dim
     cs = min(chunk_size, dh)
     nch = dh // cs
+    seed_keys = (("tp", cache_len), ("hk", spec.n_kv), ("c", nch))
+    keys = tuple(seed_keys[i] for i in CACHE_KEY_ORDERS[layout])
+    shape = tuple(s for _, s in keys) + (cs,)
     env = {}
     for L in range(spec.n_layers):
         for nm, cn in ((f"k_cache_L{L}", "kv"), (f"v_cache_L{L}", "vv")):
             env[nm] = DenseTable(
-                keys=(("tp", cache_len), ("hk", spec.n_kv), ("c", nch)),
-                cols={cn: jnp.zeros((cache_len, spec.n_kv, nch, cs),
-                                    jnp.float32)},
+                keys=keys,
+                cols={cn: jnp.zeros(shape, jnp.float32)},
                 col_types={cn: ra.VEC(cs)},
             )
     return env

@@ -36,6 +36,16 @@ from repro.core.relational import (
 
 NEG_INF = -1e30
 
+# Physical key orders a KV-cache table ``(pos, head, chunk)`` may be stored
+# in — the cache-layout vocabulary shared by the compiler (which owns the
+# cache-table convention) and the layout planner (which picks among them):
+# each entry permutes the seed key order (pos, head, chunk).
+CACHE_KEY_ORDERS: Dict[str, Tuple[int, int, int]] = {
+    "row_chunk": (0, 1, 2),   # (tp, hk, c) — seed, append-contiguous
+    "head_major": (1, 0, 2),  # (hk, tp, c) — per-head history contiguous
+    "pos_major": (0, 2, 1),   # (tp, c, hk) — head-innermost (GQA gather)
+}
+
 
 @dataclasses.dataclass
 class Rel:
@@ -72,9 +82,14 @@ class RelPipeline:
     bindings: Dict[str, Rel]
     chunk_size: int
     # physical-layout planning results (filled by repro.planner.plan_layouts):
-    # table name -> "row_chunk" | "col_chunk", plus the full LayoutPlan
+    # table name -> "row_chunk" | "col_chunk" | "col_chunk_heads" | a cache
+    # layout name, plus the full LayoutPlan
     layouts: Dict[str, str] = dataclasses.field(default_factory=dict)
     layout_plan: Optional[object] = None
+    # append-target cache tables: name -> append (position) key.  Filled by
+    # map_concat_rows so the layout planner can find cache sites without
+    # re-deriving them from the step list.
+    cache_tables: Dict[str, str] = dataclasses.field(default_factory=dict)
 
 
 def _scan(name: str, keys, cols) -> Scan:
@@ -96,6 +111,7 @@ class RelCompiler:
         self.steps: List[Step] = []
         self.weight_schemas: Dict[str, RelSchema] = {}
         self.input_schemas: Dict[str, RelSchema] = {}
+        self.cache_tables: Dict[str, str] = {}
 
     # -- helpers ------------------------------------------------------------
 
@@ -443,6 +459,7 @@ class RelCompiler:
                    tuple(cache_keys) + (("c", new.n_chunks),),
                    ((new.col, VEC(new.chunk)),))
         self.input_schemas[cache_name] = sc.table_schema
+        self.cache_tables[cache_name] = cache_keys[0][0]
         self.steps.append(Step(kind="append", name=cache_name, rel=new,
                                offset_name=node.attrs.get("offset_name",
                                                           "cache_position"),
@@ -491,6 +508,7 @@ class RelCompiler:
             input_schemas=self.input_schemas,
             bindings=self.bind,
             chunk_size=self.cs,
+            cache_tables=self.cache_tables,
         )
 
 

@@ -159,14 +159,20 @@ def fuse_projections(root: RelNode, memo: Dict[int, RelNode] | None = None
 
 
 def postoptimize(pipeline: RelPipeline, layout_mode: str = "off",
-                 cost_params=None) -> Dict[str, int]:
+                 cost_params=None, cache_mode: str = "off",
+                 budget_bytes=None) -> Dict[str, int]:
     """Apply relational post-optimisations in place across all steps.
 
     ``layout_mode`` invokes the physical-layout planner (ROW2COL) as a
     standard post-optimisation stage: ``"off"`` keeps the seed ROW_CHUNK
     plans, ``"auto"`` rewrites matmul sites where the cost model prefers
-    the column layout, ``"col"`` forces it wherever legal.  The resulting
-    ``LayoutPlan`` is recorded on ``pipeline.layout_plan``.
+    the column layout (COL_CHUNK, or head-blocked COL_CHUNK_HEADS for the
+    Q/K/V projections), ``"col"`` forces it wherever legal.
+    ``cache_mode`` re-keys the KV-cache tables (``"off"`` keeps the seed
+    ``(tp, hk, c)`` order, ``"auto"`` is cost-based, or a layout name to
+    force); ``budget_bytes`` bounds the duplicate residency of column
+    copies (the global residency pass).  The resulting ``LayoutPlan`` is
+    recorded on ``pipeline.layout_plan``.
     """
     before = count_nodes(pipeline)
     memo: Dict[int, RelNode] = {}
@@ -175,11 +181,14 @@ def postoptimize(pipeline: RelPipeline, layout_mode: str = "off",
     for name, rel in pipeline.bindings.items():
         rel.plan = fuse_projections(rel.plan, memo)
     stats = {"rel_nodes_before": before}
-    if layout_mode != "off":
+    if layout_mode != "off" or cache_mode != "off":
         from repro.planner import plan_layouts
-        plan = plan_layouts(pipeline, mode=layout_mode, params=cost_params)
+        plan = plan_layouts(pipeline, mode=layout_mode, params=cost_params,
+                            budget_bytes=budget_bytes, cache_mode=cache_mode)
         stats["row2col_sites"] = len(plan.decisions)
         stats["row2col_rewrites"] = len(plan.col_decisions)
+        stats["cache_relayouts"] = sum(
+            1 for d in plan.cache_decisions if d.layout != "row_chunk")
     stats["rel_nodes_after"] = count_nodes(pipeline)
     return stats
 

@@ -49,11 +49,18 @@ def run_pipeline(
             cache = env[step.name]
             offset = scalars.get(step.offset_name, 0)
             ax = cache.key_names.index(step.append_key)
-            assert ax == 0, "cache append key must be the leading key"
+            # the cache table's physical key order is planner-chosen
+            # (row_chunk / head_major / pos_major); align the new rows'
+            # axes by key name and insert at the append key's axis
+            perm = [new.key_names.index(k) for k in cache.key_names]
             cols = {}
             for cname, arr in cache.cols.items():
                 new_arr = new.cols[cname]
-                start = (offset,) + (0,) * (arr.ndim - 1)
+                vec = new_arr.ndim > len(perm)
+                new_arr = jnp.transpose(
+                    new_arr, perm + ([len(perm)] if vec else []))
+                start = tuple(offset if i == ax else 0
+                              for i in range(arr.ndim))
                 cols[cname] = jax.lax.dynamic_update_slice(
                     arr, new_arr.astype(arr.dtype), start)
             env[step.name] = DenseTable(keys=cache.keys, cols=cols,

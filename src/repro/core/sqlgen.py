@@ -282,7 +282,12 @@ class SQLGenerator:
                     out.append(self._ddl(d.table, d.row_schema))
             out.append("-- input / cache table DDL")
             for name, schema in self.p.input_schemas.items():
-                out.append(self._ddl(name, schema))
+                ddl = self._ddl(name, schema)
+                if name in layouts:
+                    # planner-chosen cache layout: the key-column order IS
+                    # the physical clustering (row_chunk / head_major / …)
+                    ddl = f"-- layout: {layouts[name]}\n{ddl}"
+                out.append(ddl)
         if include_conversion and plan is not None and plan.col_decisions:
             out.append("-- ROW2COL data conversion (planner layout "
                        "choices; run after loading the row tables)")
@@ -299,9 +304,14 @@ class SQLGenerator:
                     with_clause = ",\n  ".join(
                         f"{n} AS ({sql})" for n, sql in ctes)
                     sel = f"WITH {with_clause}\n{sel}"
+                # name the target columns: the cache table's physical key
+                # order is planner-chosen and need not match the SELECT's
+                sel_s = resolve(root)
+                collist = ", ".join(
+                    _sn(c) for c in sel_s.key_names + sel_s.col_names)
                 out.append(
                     f"-- KV-cache append (new rows at :{step.offset_name})\n"
-                    f"INSERT INTO {_sn(step.name)}\n{sel};")
+                    f"INSERT INTO {_sn(step.name)} ({collist})\n{sel};")
         return "\n\n".join(out)
 
     @staticmethod

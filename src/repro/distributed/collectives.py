@@ -22,6 +22,17 @@ import jax
 import jax.numpy as jnp
 
 
+def axis_size(name: str) -> int:
+    """Size of a named mapped axis, portable across jax versions.
+
+    ``jax.lax.axis_size`` only exists in newer jax; ``psum(1, name)`` is
+    constant-folded to the axis size on every version that has shard_map.
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)
+
+
 def quantize_int8(g: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
     q = jnp.clip(jnp.round(g / scale), -127, 127)
     return q.astype(jnp.int8)
@@ -46,7 +57,7 @@ def ef_int8_allreduce(g: jnp.ndarray, err: jnp.ndarray, axis_names
     total = jax.lax.psum(q.astype(jnp.int32), axis_names)
     n = 1
     for a in ((axis_names,) if isinstance(axis_names, str) else axis_names):
-        n *= jax.lax.axis_size(a)
+        n *= axis_size(a)
     mean = dequantize_int8(total, scale) / n
     return mean.astype(g.dtype), new_err
 
@@ -57,7 +68,7 @@ def hierarchical_psum(x: jnp.ndarray, pod_axis: str = "pod",
     the scattered shard → all-gather in-pod.  Moves only 1/data_size of the
     payload over the (slow) cross-pod links instead of the whole tensor.
     """
-    n_data = jax.lax.axis_size(data_axis)
+    n_data = axis_size(data_axis)
     if x.shape[0] % n_data != 0:
         # fall back for indivisible leading dims
         return jax.lax.psum(x, (pod_axis, data_axis))

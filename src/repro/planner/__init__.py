@@ -10,58 +10,83 @@ column-major table ``W__col(d, c, chunk FLOAT[cs'])`` instead and groups by
 the *output chunk*: ``T·m/cs'`` groups, no re-chunk tail, and the join
 touches far fewer distinct group keys.
 
-This package makes that a proper cost-based planning stage rather than a
-flag:
+This package makes that a proper whole-model cost-based planning stage:
 
-  ``planner.layout``   the layout IR: ``ROW_CHUNK`` / ``COL_CHUNK``
-                       constants, transposed-schema builders, and the
-                       legality rules (which plan shapes admit which
-                       layout) via :func:`match_matmul_site` /
-                       :func:`admissible_layouts`.
+  ``planner.layout``   the layout IR: ``ROW_CHUNK`` / ``COL_CHUNK`` /
+                       ``COL_CHUNK_HEADS`` weight layouts, the cache-layout
+                       vocabulary (``row_chunk`` / ``head_major`` /
+                       ``pos_major`` key orders), transposed-schema
+                       builders, and the legality rules via
+                       :func:`match_matmul_site` /
+                       :func:`admissible_layouts` /
+                       :func:`match_cache_sites`.
   ``planner.cost``     the cost model: rows scanned + join fan-out +
-                       GROUP BY cardinality per operator, parameterised by
-                       seq-len and chunk size — prefill (large T) and
-                       decode (T = 1) pipelines price layouts
-                       independently.
-  ``planner.row2col``  the rewrite pass: :func:`plan_layouts` matches the
-                       matmul sites, prices both layouts, rewrites the
-                       winners in place, and returns a :class:`LayoutPlan`
-                       that materialises transposed tables into executor
-                       environments and emits the SQL conversion script.
+                       GROUP BY cardinality per matmul, parameterised by
+                       seq-len and chunk size, plus the decode-attention
+                       locality model for cache layouts (contiguous-run
+                       counts weighted by ``seek_weight``).
+  ``planner.row2col``  the planning pass: :func:`plan_layouts` matches the
+                       matmul and cache sites, prices the layouts, runs the
+                       *global residency pass* (duplicate column copies are
+                       admitted by benefit-per-byte within the pager
+                       budget), rewrites the winners in place, and returns
+                       a :class:`LayoutPlan` that materialises transposed
+                       tables into executor environments and emits the SQL
+                       conversion script.
 
 Integration points
 ------------------
-* ``core/passes.postoptimize(pipe, layout_mode=...)`` runs the planner as a
-  standard post-optimisation stage.
+* ``core/passes.postoptimize(pipe, layout_mode=..., cache_mode=...,
+  budget_bytes=...)`` runs the planner as a standard post-optimisation
+  stage.
 * ``core/pipeline.run_pipeline`` consults ``pipe.layout_plan`` to
-  materialise ``W__col`` tables into the environment on first use.
-* ``core/sqlgen`` emits the column-table DDL (annotated with the chosen
-  layout) and the transposed join/aggregate SQL for both dialects;
-  :meth:`LayoutPlan.conversion_sql` produces the row→column data-conversion
-  script.
-* ``serving/engine.RelationalEngine(row2col=...)`` is the user-facing knob:
-  ``"auto"`` (cost-based, default), ``"off"``, or ``"col"`` (force).
+  materialise column tables (and align cache key orders) in the
+  environment on first use; the append step inserts at the cache's
+  planner-chosen key axis.
+* ``core/sqlgen`` emits layout-annotated DDL (weights *and* caches), the
+  transposed join/aggregate SQL for both dialects, and column-listed cache
+  INSERTs; :meth:`LayoutPlan.conversion_sql` produces the row→column
+  data-conversion script (head-blocked variant included).
+* ``serving/engine.RelationalEngine(row2col=..., cache_layout=...)`` are
+  the user-facing knobs; in paged residency the pager budget bounds the
+  residency pass.
 
 Legality summary: plain two-key matmul weights (``map_linear`` — o-proj,
-GLU W1/W2/W3, lm_head) admit both layouts; per-head projection weights
-(``map_linear_heads`` — Q/K/V) and non-matmul tables (norms, vocabulary
-value-joins, RoPE frequency tables) stay ROW_CHUNK.
+GLU W1/W2/W3, lm_head) admit ``COL_CHUNK``; per-head projection weights
+(``map_linear_heads`` — Q/K/V) admit the head-blocked ``COL_CHUNK_HEADS``;
+non-matmul tables (norms, vocabulary value-joins, RoPE frequency tables)
+stay ``ROW_CHUNK``.  KV-cache tables admit any of the three cache key
+orders.
 """
 
-from repro.planner.cost import (CostParams, MatmulCost, choose_layout,
-                                col_chunk_cost, row_chunk_cost, site_costs)
-from repro.planner.layout import (COL_CHUNK, ROW_CHUNK, MatmulSite,
-                                  admissible_layouts, col_schema,
-                                  col_table_name, match_matmul_site)
-from repro.planner.row2col import (LayoutDecision, LayoutPlan, MODES,
+from repro.planner.cost import (CacheCost, CostParams, MatmulCost,
+                                cache_layout_cost, cache_site_costs,
+                                choose_cache_layout, choose_layout,
+                                col_chunk_cost, colh_chunk_cost,
+                                row_chunk_cost, site_costs)
+from repro.planner.layout import (CACHE_HEAD_MAJOR, CACHE_KEY_ORDERS,
+                                  CACHE_LAYOUTS, CACHE_POS_MAJOR,
+                                  CACHE_ROW_CHUNK, COL_CHUNK,
+                                  COL_CHUNK_HEADS, ROW_CHUNK, CacheSite,
+                                  MatmulSite, admissible_layouts,
+                                  cache_schema, col_schema, col_table_name,
+                                  colh_schema, colh_table_name,
+                                  match_cache_sites, match_matmul_site)
+from repro.planner.row2col import (CACHE_MODES, CacheDecision,
+                                   LayoutDecision, LayoutPlan, MODES,
                                    conversion_sql, plan_layouts,
                                    union_conversion_sql)
 
 __all__ = [
-    "COL_CHUNK", "ROW_CHUNK", "MODES",
-    "CostParams", "MatmulCost", "MatmulSite",
-    "LayoutDecision", "LayoutPlan",
-    "admissible_layouts", "choose_layout", "col_chunk_cost",
-    "col_schema", "col_table_name", "conversion_sql", "match_matmul_site",
-    "plan_layouts", "row_chunk_cost", "site_costs", "union_conversion_sql",
+    "CACHE_HEAD_MAJOR", "CACHE_KEY_ORDERS", "CACHE_LAYOUTS", "CACHE_MODES",
+    "CACHE_POS_MAJOR", "CACHE_ROW_CHUNK", "COL_CHUNK", "COL_CHUNK_HEADS",
+    "MODES", "ROW_CHUNK",
+    "CacheCost", "CacheDecision", "CacheSite", "CostParams", "MatmulCost",
+    "MatmulSite", "LayoutDecision", "LayoutPlan",
+    "admissible_layouts", "cache_layout_cost", "cache_schema",
+    "cache_site_costs", "choose_cache_layout", "choose_layout",
+    "col_chunk_cost", "col_schema", "col_table_name", "colh_chunk_cost",
+    "colh_schema", "colh_table_name", "conversion_sql", "match_cache_sites",
+    "match_matmul_site", "plan_layouts", "row_chunk_cost", "site_costs",
+    "union_conversion_sql",
 ]

@@ -26,6 +26,17 @@ the re-chunk tail that ROW_CHUNK pays versus the UNNEST that COL_CHUNK
 pays.  Both are parameterised by the seq-len ``T`` and the chunk sizes, so
 prefill (large T) and decode (T = 1) pipelines price the same weight table
 independently and may pick different layouts.
+
+Per-head projections (``map_linear_heads``, total output m = H · dh) price
+identically with the head key as a block dimension: COL_CHUNK_HEADS is the
+column cost with ``m = H · dh`` output features chunked per head
+(:func:`colh_chunk_cost`).
+
+Cache layouts price the *decode attention* access pattern instead of a
+matmul: every layout scans the same ``S · H_kv · n_chunks`` cache rows per
+join, so the decision is driven by *locality* — the number of contiguous
+row segments the per-head history scan and the per-token INSERT touch
+(:func:`cache_layout_cost`), weighted by ``CostParams.seek_weight``.
 """
 
 from __future__ import annotations
@@ -33,10 +44,13 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, TYPE_CHECKING
 
-from repro.planner.layout import COL_CHUNK, ROW_CHUNK
+from repro.planner.layout import (
+    CACHE_HEAD_MAJOR, CACHE_POS_MAJOR, CACHE_ROW_CHUNK, COL_CHUNK,
+    COL_CHUNK_HEADS, ROW_CHUNK,
+)
 
 if TYPE_CHECKING:  # pragma: no cover
-    from repro.planner.layout import MatmulSite
+    from repro.planner.layout import CacheSite, MatmulSite
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,6 +60,8 @@ class CostParams:
     seq_len: int = 1          # T: new tokens per pipeline invocation
     group_weight: float = 1.0  # relative cost of producing one GROUP BY group
     row_weight: float = 1.0    # relative cost of touching one row
+    seek_weight: float = 4.0   # relative cost of starting a new contiguous
+    #                            row segment (cache-layout locality term)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -86,13 +102,29 @@ def col_chunk_cost(T: int, in_f: int, out_f: int, cs_out: int) -> MatmulCost:
     )
 
 
+def colh_chunk_cost(T: int, n_heads: int, in_f: int, head_dim: int,
+                    cs_out: int) -> MatmulCost:
+    """Head-blocked column cost: the head key is a pure block dimension, so
+    the shape is the plain column cost over ``m = H · dh`` total output
+    features chunked per head (H · dh/cs' output chunks)."""
+    c = col_chunk_cost(T, in_f, n_heads * head_dim, cs_out)
+    return dataclasses.replace(c, layout=COL_CHUNK_HEADS)
+
+
 def site_costs(site: "MatmulSite", params: CostParams):
-    """(row_cost, col_cost) totals for a matched matmul site."""
+    """(row_cost, col_cost) totals for a matched matmul site.
+
+    For head sites the column cost is the head-blocked COL_CHUNK_HEADS
+    variant; the row cost prices the full ``H · dh`` output either way.
+    """
     T = params.seq_len
-    row = row_chunk_cost(T, site.in_features, site.out_features,
-                         site.row_chunk)
-    col = col_chunk_cost(T, site.in_features, site.out_features,
-                         site.col_chunk)
+    out_total = site.n_heads * site.out_features
+    row = row_chunk_cost(T, site.in_features, out_total, site.row_chunk)
+    if site.is_head_site:
+        col = colh_chunk_cost(T, site.n_heads, site.in_features,
+                              site.out_features, site.col_chunk)
+    else:
+        col = col_chunk_cost(T, site.in_features, out_total, site.col_chunk)
     return row.total(params), col.total(params)
 
 
@@ -101,4 +133,89 @@ def choose_layout(site: "MatmulSite", params: Optional[CostParams] = None
     """Cost-based layout choice for one matmul site."""
     params = params or CostParams()
     row, col = site_costs(site, params)
-    return COL_CHUNK if col < row else ROW_CHUNK
+    return site.col_layout if col < row else ROW_CHUNK
+
+
+# ---------------------------------------------------------------------------
+# Cache layouts — decode-attention locality model
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheCost:
+    """Locality breakdown of one decode step against one cache layout.
+
+    ``scan_rows`` is layout-invariant (both attention joins touch every
+    cached row); ``read_segments`` counts the contiguous runs the per-head
+    history scans start, ``write_segments`` the runs the INSERT of the new
+    token's rows starts.  Seeks are what the layout moves.
+    """
+
+    layout: str
+    scan_rows: int
+    read_segments: int
+    write_segments: int
+
+    def total(self, params: CostParams) -> float:
+        return (params.row_weight * self.scan_rows
+                + params.seek_weight * (self.read_segments
+                                        + self.write_segments))
+
+
+def cache_layout_cost(layout: str, cache_len: int, n_heads: int,
+                      n_chunks: int, new_tokens: int = 1) -> CacheCost:
+    """Price one pipeline invocation (``new_tokens`` appended, then two
+    attention joins scanning all ``cache_len`` positions).
+
+    Contiguous-run lengths per layout (keys in physical order):
+
+      row_chunk  (tp, hk, c): per-head read runs of ``n_chunks`` (one
+                 position's chunks) → S runs/head; append writes one
+                 contiguous ``H·n_chunks`` block per token.
+      head_major (hk, tp, c): per-head history is one run of
+                 ``S·n_chunks`` → 1 run/head; append scatters one
+                 ``n_chunks`` run per head per token.
+      pos_major  (tp, c, hk): heads are innermost — per-head reads are
+                 fully strided (``S·n_chunks`` runs/head); append writes
+                 one contiguous block per token.
+    """
+    S, H, C, T = cache_len, n_heads, n_chunks, new_tokens
+    scan_rows = 2 * S * H * C  # score join + attn-output join
+    if layout == CACHE_ROW_CHUNK:
+        read_seg, write_seg = 2 * H * S, T
+    elif layout == CACHE_HEAD_MAJOR:
+        read_seg, write_seg = 2 * H, T * H
+    elif layout == CACHE_POS_MAJOR:
+        read_seg, write_seg = 2 * H * S * C, T
+    else:
+        raise ValueError(f"unknown cache layout {layout!r}")
+    return CacheCost(layout=layout, scan_rows=scan_rows,
+                     read_segments=read_seg, write_segments=write_seg)
+
+
+def cache_site_costs(site: "CacheSite", params: CostParams):
+    """{layout: total} for every cache layout of a matched cache site."""
+    from repro.planner.layout import CACHE_LAYOUTS
+    return {
+        layout: cache_layout_cost(layout, site.n_pos, site.n_heads,
+                                  site.n_chunks,
+                                  new_tokens=params.seq_len).total(params)
+        for layout in CACHE_LAYOUTS
+    }
+
+
+def choose_cache_layout(site: "CacheSite",
+                        params: Optional[CostParams] = None,
+                        costs: Optional[dict] = None) -> str:
+    """Cost-based cache-layout choice (ties keep the seed row_chunk).
+
+    Pass ``costs`` (from :func:`cache_site_costs`) to reuse already-priced
+    totals — the planner records them on the decision it returns.
+    """
+    params = params or CostParams()
+    if costs is None:
+        costs = cache_site_costs(site, params)
+    best = min(costs.values())
+    if costs[CACHE_ROW_CHUNK] == best:
+        return CACHE_ROW_CHUNK
+    return min(costs, key=costs.get)

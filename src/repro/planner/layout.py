@@ -1,5 +1,7 @@
-"""Physical-layout IR for weight tables (the planner's vocabulary).
+"""Physical-layout IR for weight and cache tables (the planner's vocabulary).
 
+Weight layouts
+--------------
 A chunked weight matrix ``W ∈ R^{m×n}`` admits two physical layouts:
 
   ROW_CHUNK  — the seed layout: table ``W(j, c, chunk FLOAT[cs])`` with
@@ -16,35 +18,81 @@ A chunked weight matrix ``W ∈ R^{m×n}`` admits two physical layouts:
                result is already chunked, so the ROW_CHUNK plan's re-chunk
                tail (π key-split + collect_as_array) disappears.
 
+Per-head projection weights ``W(h, r, c, chunk)`` (the ``map_linear_heads``
+shape — Q/K/V) additionally admit
+
+  COL_CHUNK_HEADS — the head-blocked column layout: ``W__colh(h, d, c,
+               chunk FLOAT[cs'])`` with the head key ``h`` carried through as
+               a *block* key, ``d ∈ [n)`` indexing input features and ``c``
+               chunking the per-head output (head_dim).  The re-chunk of the
+               ROW_CHUNK plan folds the per-head row key ``r``; the
+               head-blocked layout keeps ``h`` outside the fold, so the
+               column rewrite (join on ``d``, group by ``(h, c)``, vector
+               SUM) stays legal.  Data array ``[H, n, dh/cs', cs']``.
+
 Legality (encoded by :func:`admissible_layouts`): COL_CHUNK applies to the
-canonical two-key matmul weights (``W(j, c, chunk)`` consumed by a
-``GroupAgg(Join(x, Scan(W)))`` with a single ``SUM(dot)`` aggregate — the
-``map_linear`` shape).  Per-head projection weights (``W(h, r, c, chunk)``,
-the ``map_linear_heads`` shape) keep ROW_CHUNK: their re-chunk folds the
-per-head row key ``r``, which the column layout does not expose.  Value
-joins (embedding lookups) and norm vectors are not matmuls and keep
-ROW_CHUNK as well.
+canonical two-key matmul weights (``map_linear``); COL_CHUNK_HEADS to the
+three-key per-head weights (``map_linear_heads``).  Value joins (embedding
+lookups) and norm vectors are not matmuls and keep ROW_CHUNK.
+
+Cache layouts
+-------------
+KV-cache tables (``k_cache_L*``/``v_cache_L*``) are planner-managed too.  A
+cache layout descriptor is a named permutation of the cache's key order —
+the physical clustering of its rows:
+
+  CACHE_ROW_CHUNK  — seed ``(tp, hk, c)``: position-outer.  The decode
+                     INSERT writes one contiguous row block; the attention
+                     join's per-head scan is strided by position.
+  CACHE_HEAD_MAJOR — ``(hk, tp, c)``: head-outer.  The decode attention
+                     join scans each KV head's history as one contiguous
+                     run; the INSERT scatters one slot per head.
+  CACHE_POS_MAJOR  — ``(tp, c, hk)``: position/chunk-outer, head-inner.
+                     The GQA head-group gather is contiguous per (position,
+                     chunk); reads for a single head are fully strided.
+
+The executor's joins are key-*name* based, so any permutation is
+semantically transparent — the choice only moves bytes (§4's layout
+co-design lever for the decode-dominant attention joins).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 from repro.core import relational as ra
+from repro.core.opmap import CACHE_KEY_ORDERS
 from repro.core.relational import (
-    Call, Col, Collect, GroupAgg, Join, Key, Project, RelNode, RelSchema,
-    Scan, resolve, VEC,
+    BinOp, Call, Col, Collect, Const, GroupAgg, Join, Key, Project, RelNode,
+    RelSchema, Scan, resolve, VEC,
 )
 
 ROW_CHUNK = "row_chunk"
 COL_CHUNK = "col_chunk"
+COL_CHUNK_HEADS = "col_chunk_heads"
 
 COL_SUFFIX = "__col"
+COLH_SUFFIX = "__colh"
+
+# -- cache layouts ----------------------------------------------------------
+# The layout-name -> key-order table (CACHE_KEY_ORDERS) lives in core — the
+# compiler owns the cache-table convention; the planner picks among its
+# entries.
+
+CACHE_ROW_CHUNK = "row_chunk"
+CACHE_HEAD_MAJOR = "head_major"
+CACHE_POS_MAJOR = "pos_major"
+
+CACHE_LAYOUTS = tuple(CACHE_KEY_ORDERS)
 
 
 def col_table_name(row_table: str) -> str:
     return row_table + COL_SUFFIX
+
+
+def colh_table_name(row_table: str) -> str:
+    return row_table + COLH_SUFFIX
 
 
 def col_schema(in_features: int, out_features: int, col_chunk: int,
@@ -58,13 +106,39 @@ def col_schema(in_features: int, out_features: int, col_chunk: int,
     )
 
 
+def colh_schema(n_heads: int, in_features: int, head_dim: int,
+                col_chunk: int, head_key: str = "h", d_key: str = "d",
+                chunk_key: str = "c", vec_col: str = "chunk") -> RelSchema:
+    """Schema of the COL_CHUNK_HEADS table: (h, d, c, chunk FLOAT[cs']).
+
+    The head key stays a block key outside the transposed (d, c) pair, so
+    the per-head output chunking never folds it.
+    """
+    assert head_dim % col_chunk == 0, (head_dim, col_chunk)
+    return RelSchema(
+        keys=((head_key, n_heads), (d_key, in_features),
+              (chunk_key, head_dim // col_chunk)),
+        cols=((vec_col, VEC(col_chunk)),),
+    )
+
+
+def cache_schema(seed_schema: RelSchema, layout: str) -> RelSchema:
+    """Permute a seed ``(tp, hk, c)`` cache schema into ``layout``'s order."""
+    perm = CACHE_KEY_ORDERS[layout]
+    return RelSchema(keys=tuple(seed_schema.keys[i] for i in perm),
+                     cols=seed_schema.cols)
+
+
 @dataclasses.dataclass(frozen=True)
 class MatmulSite:
-    """A matched ``GroupAgg(Join(x, Scan(W)))`` matmul site in a pipeline.
+    """A matched matmul site (``map_linear`` or ``map_linear_heads`` shape).
 
     ``root`` is the bind-step plan root (the ROW_CHUNK plan's trailing
     ``Collect``); the remaining fields are everything the rewrite and the
-    cost model need.
+    cost model need.  ``head_key`` is None for the two-key ``map_linear``
+    shape; for the per-head shape it names the head block key and
+    ``n_heads``/``out_features`` describe one head block (out_features =
+    head_dim).
     """
 
     step_name: str          # bind step producing this matmul
@@ -77,14 +151,20 @@ class MatmulSite:
     x_col: str              # activation vector column name
     base_keys: Tuple[Tuple[str, int], ...]  # x keys excluding the chunk key
     in_features: int
-    out_features: int
+    out_features: int       # per head block when head_key is not None
     row_chunk: int          # cs of the input-dim chunking (ROW_CHUNK vec)
     col_chunk: int          # cs of the output-dim chunking (COL_CHUNK vec)
     out_col: str            # output vector column name (Collect.vec_col)
+    head_key: Optional[str] = None  # per-head block key (map_linear_heads)
+    n_heads: int = 1
 
     @property
     def table(self) -> str:
         return self.weight_scan.table
+
+    @property
+    def is_head_site(self) -> bool:
+        return self.head_key is not None
 
     @property
     def n_in_chunks(self) -> int:
@@ -94,6 +174,21 @@ class MatmulSite:
     def n_out_chunks(self) -> int:
         return self.out_features // self.col_chunk
 
+    @property
+    def col_layout(self) -> str:
+        """The column layout this site admits."""
+        return COL_CHUNK_HEADS if self.is_head_site else COL_CHUNK
+
+    @property
+    def col_table(self) -> str:
+        return (colh_table_name(self.table) if self.is_head_site
+                else col_table_name(self.table))
+
+    @property
+    def weight_bytes(self) -> int:
+        """f32 bytes of one physical copy of this weight (either layout)."""
+        return 4 * self.n_heads * self.out_features * self.in_features
+
 
 def _dot_cols(expr) -> Optional[Tuple[str, str]]:
     if isinstance(expr, Call) and expr.fn == "dot" and all(
@@ -102,15 +197,31 @@ def _dot_cols(expr) -> Optional[Tuple[str, str]]:
     return None
 
 
+def _split_source(proj_keys) -> Optional[str]:
+    """Name of the key split into (chunk, elem) by the re-chunk projection:
+    the trailing two key defs must be ``Key(r) // cs`` and ``Key(r) % cs``
+    over the same source key."""
+    (_, _, e_hi), (_, _, e_lo) = proj_keys[-2:]
+    if (isinstance(e_hi, BinOp) and e_hi.op == "//"
+            and isinstance(e_hi.lhs, Key) and isinstance(e_hi.rhs, Const)
+            and isinstance(e_lo, BinOp) and e_lo.op == "%"
+            and isinstance(e_lo.lhs, Key) and e_lo.lhs.name == e_hi.lhs.name):
+        return e_hi.lhs.name
+    return None
+
+
 def match_matmul_site(step_name: str, root: RelNode) -> Optional[MatmulSite]:
-    """Match the ``map_linear`` plan shape rooted at a bind step:
+    """Match a matmul plan shape rooted at a bind step:
 
         Collect(Project(GroupAgg(Join(x, Scan(W)))))
 
     with the GroupAgg a single ``SUM(dot(x_col, chunk_col))`` grouped by the
-    weight's row key, the Join an equi-join on the shared chunk key, and the
-    Project the re-chunk split ``j -> (c, e)``.  Returns None when the plan
-    has any other shape (per-head projections, attention, embeddings, …).
+    weight's row key(s), the Join an equi-join on the shared chunk key, and
+    the Project the re-chunk split ``j -> (c, e)``.  Matches both the
+    two-key ``map_linear`` weights ``W(j, c, chunk)`` and the three-key
+    per-head ``map_linear_heads`` weights ``W(h, r, c, chunk)`` (the head
+    key is carried through as a block key).  Returns None for any other
+    shape (attention, embeddings, norms, …).
     """
     if not isinstance(root, Collect):
         return None
@@ -131,13 +242,13 @@ def match_matmul_site(step_name: str, root: RelNode) -> Optional[MatmulSite]:
         return None
     scan = join.right
     ws = scan.table_schema
-    # two-key row-chunked weight: (j, out_f), (c, n_chunks) + one vec column
-    if len(ws.keys) != 2 or len(ws.cols) != 1:
+    # two-key (j, c) or three-key (h, r, c) row-chunked weight + one vec col
+    if len(ws.keys) not in (2, 3) or len(ws.cols) != 1:
         return None
-    (jname, out_f), (cname, _) = ws.keys
     wcol, wtype = ws.cols[0]
     if not ra.is_vec(wtype):
         return None
+    cname, _ = ws.keys[-1]
     # join must bind the weight's chunk key to the activation's chunk key
     if len(join.on) != 1:
         return None
@@ -155,14 +266,36 @@ def match_matmul_site(step_name: str, root: RelNode) -> Optional[MatmulSite]:
     xs = resolve(join.left)
     if x_col not in xs.col_names or on_expr.name not in xs.key_names:
         return None
-    # group keys: all activation keys except the chunk key, plus j
-    if jname not in agg.group_keys:
-        return None
     base_keys = tuple((k, s) for k, s in xs.keys if k != on_expr.name)
-    if set(agg.group_keys) != {k for k, _ in base_keys} | {jname}:
+    # the re-chunk projection splits the weight's row key into (chunk, elem)
+    if len(proj.keys) < 2:
         return None
-    # the re-chunk projection splits j into (chunk, elem)
-    if len(proj.keys) != len(base_keys) + 2:
+    fold = _split_source(proj.keys)
+    if fold is None:
+        return None
+    head_key: Optional[str] = None
+    n_heads = 1
+    if len(ws.keys) == 2:
+        (jname, out_f), _ = ws.keys
+        if jname != fold:
+            return None
+        if len(proj.keys) != len(base_keys) + 2:
+            return None
+    else:
+        (hname, n_heads), (rname, out_f), _ = ws.keys
+        if rname != fold:
+            return None
+        if hname not in agg.group_keys:
+            return None
+        if len(proj.keys) != len(base_keys) + 3:
+            return None
+        head_key = hname
+    # group keys: all activation keys except the chunk key, plus the
+    # weight's row key(s)
+    row_keys = {fold} | ({head_key} if head_key else set())
+    if fold not in agg.group_keys:
+        return None
+    if set(agg.group_keys) != {k for k, _ in base_keys} | row_keys:
         return None
     (ck, n_out_chunks, _), (ek, cs_out, _) = proj.keys[-2:]
     if root.fold_key != ek or cs_out * n_out_chunks != out_f:
@@ -183,6 +316,8 @@ def match_matmul_site(step_name: str, root: RelNode) -> Optional[MatmulSite]:
         row_chunk=ra.vec_width(wtype),
         col_chunk=cs_out,
         out_col=root.vec_col,
+        head_key=head_key,
+        n_heads=n_heads,
     )
 
 
@@ -190,4 +325,87 @@ def admissible_layouts(site: Optional[MatmulSite]) -> Tuple[str, ...]:
     """Physical layouts legal for a (candidate) weight scan."""
     if site is None:
         return (ROW_CHUNK,)
+    if site.is_head_site:
+        return (ROW_CHUNK, COL_CHUNK_HEADS)
     return (ROW_CHUNK, COL_CHUNK)
+
+
+# ---------------------------------------------------------------------------
+# Cache sites
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheSite:
+    """A planner-managed KV-cache table: its append step + every Scan of it.
+
+    ``scans`` share one mutable ``RelSchema`` by reference through the
+    pipeline DAG, so re-laying the table out rewrites every consumer at
+    once.  ``pos_key``/``head_key``/``chunk_key`` name the seed key roles;
+    ``n_pos``/``n_heads``/``n_chunks``/``chunk`` size the cost model.
+    """
+
+    table: str
+    scans: Tuple[Scan, ...]
+    pos_key: str
+    head_key: str
+    chunk_key: str
+    n_pos: int
+    n_heads: int
+    n_chunks: int
+    chunk: int
+
+    @property
+    def seed_schema(self) -> RelSchema:
+        """The seed (tp, hk, c) schema regardless of current key order."""
+        s = self.scans[0].table_schema
+        order = {self.pos_key: 0, self.head_key: 1, self.chunk_key: 2}
+        keys = tuple(sorted(s.keys, key=lambda k: order[k[0]]))
+        return RelSchema(keys=keys, cols=s.cols)
+
+
+def match_cache_sites(pipeline) -> Tuple[CacheSite, ...]:
+    """Find every append-target cache table and all Scans referencing it.
+
+    Cache tables are the targets of ``append`` steps; their seed schema is
+    ``(pos, head, chunk) + one vec column`` (``opmap.map_concat_rows``).
+    """
+    from repro.core.relational import walk
+    append_keys = dict(getattr(pipeline, "cache_tables", {}) or {})
+    if not append_keys:  # pipelines from older compilers: derive from steps
+        append_keys = {s.name: s.append_key for s in pipeline.steps
+                       if s.kind == "append"}
+    scans: Dict[str, list] = {}
+    seen: set = set()
+    for step in pipeline.steps:
+        for node in walk(step.rel.plan):
+            if (isinstance(node, Scan) and node.table in append_keys
+                    and id(node) not in seen):
+                seen.add(id(node))
+                scans.setdefault(node.table, []).append(node)
+    sites = []
+    for table, table_scans in scans.items():
+        schema = table_scans[0].table_schema
+        if len(schema.keys) != 3 or len(schema.cols) != 1:
+            continue
+        pos_key = append_keys[table]
+        names = dict(schema.keys)
+        if pos_key not in names:
+            continue
+        # the chunk key is "c" by construction; the head key is the third
+        others = [k for k in schema.key_names if k not in (pos_key, "c")]
+        if "c" not in names or len(others) != 1:
+            continue
+        head_key = others[0]
+        sites.append(CacheSite(
+            table=table,
+            scans=tuple(table_scans),
+            pos_key=pos_key,
+            head_key=head_key,
+            chunk_key="c",
+            n_pos=names[pos_key],
+            n_heads=names[head_key],
+            n_chunks=names["c"],
+            chunk=ra.vec_width(schema.cols[0][1]),
+        ))
+    return tuple(sites)

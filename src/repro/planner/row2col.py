@@ -1,9 +1,11 @@
-"""ROW2COL rewrite pass — cost-based physical layout planning (tentpole).
+"""ROW2COL rewrite pass — whole-model cost-based physical layout planning.
 
 ``plan_layouts(pipeline, mode)`` walks a compiled ``RelPipeline``, matches
-every ``map_linear``-shaped matmul bind (``Collect(π(γ(x ⋈ Scan(W))))``),
-prices both physical layouts with the :mod:`repro.planner.cost` model, and
-rewrites the winners in place to the column-layout plan:
+every matmul bind (``Collect(π(γ(x ⋈ Scan(W))))`` — both the two-key
+``map_linear`` shape and the three-key per-head ``map_linear_heads``
+shape), prices the admissible physical layouts with the
+:mod:`repro.planner.cost` model, and rewrites the winners in place to the
+column-layout plan:
 
     ROW_CHUNK                               COL_CHUNK (ROW2COL)
     ---------                               -------------------
@@ -11,17 +13,41 @@ rewrites the winners in place to the column-layout plan:
         (x ⋈_c W(j, c, chunk))                  (unnest(x) ⋈_d W__col(d, c,
     → π split j → (c, e) → collect               chunk))
 
-The column plan joins on the input feature ``d``, groups by the *output
-chunk* ``c`` instead of exploding the reduction key ``j`` into the GROUP
-BY, and produces already-chunked vectors — the ROW_CHUNK plan's re-chunk
-tail disappears.  Decisions, costs, and the table conversions they imply
-are returned as a :class:`LayoutPlan`, which also knows how to materialise
-the transposed tables into an executor environment (:meth:`ensure_env`)
-and how to emit the SQL data-conversion script (:meth:`conversion_sql`).
+    ROW_CHUNK (per-head)                    COL_CHUNK_HEADS
+    --------------------                    ---------------
+    γ_{(t,h,r), SUM(dot(v, chunk))}         γ_{(t,h,c), sumForEach(x·chunk)}
+        (x ⋈_c W(h, r, c, chunk))               (unnest(x) ⋈_d W__colh(h, d,
+    → π split r → (c, e) → collect               c, chunk))
+
+The column plans join on the input feature ``d``, group by the *output
+chunk* ``c`` (the head key ``h`` rides along as a block key) instead of
+exploding the reduction key into the GROUP BY, and produce already-chunked
+vectors — the ROW_CHUNK plan's re-chunk tail disappears.
+
+Three planner stages run under one call:
+
+1. **Site pricing** — every matmul site is priced under both layouts.
+2. **Global residency pass** — instead of accepting every profitable
+   rewrite independently, candidates are ranked by benefit per duplicate
+   byte and accepted greedily while the *extra* residency the column copy
+   costs (the row table stays resident for other pipelines / as the
+   conversion source) fits ``budget_bytes``.  Under memory pressure the
+   plan degrades per-layer (the best sites keep their column copies)
+   instead of all-or-nothing.
+3. **Cache planning** — KV-cache tables are re-keyed to the cost-chosen
+   physical key order (``row_chunk`` / ``head_major`` / ``pos_major``,
+   see :mod:`repro.planner.layout`); all Scans share the schema by
+   reference, so every consumer join follows.
+
+Decisions, costs, and the table conversions they imply are returned as a
+:class:`LayoutPlan`, which also knows how to materialise the transposed
+tables into an executor environment (:meth:`ensure_env`) and how to emit
+the SQL data-conversion script (:meth:`conversion_sql`).
 
 Modes: ``"off"`` (no rewrites), ``"auto"`` (cost-based, the default knob
-position), ``"col"`` (force COL_CHUNK wherever legal — used by equivalence
-tests and ablations).
+position), ``"col"`` (force the column layout wherever legal — used by
+equivalence tests and ablations).  Cache modes: ``"off"`` (keep the seed
+order), ``"auto"`` (cost-based), or a layout name to force.
 """
 
 from __future__ import annotations
@@ -37,11 +63,13 @@ from repro.core.relational import (
 from repro.planner import cost as cost_mod
 from repro.planner.cost import CostParams
 from repro.planner.layout import (
-    COL_CHUNK, ROW_CHUNK, MatmulSite, col_schema, col_table_name,
+    CACHE_LAYOUTS, CACHE_ROW_CHUNK, COL_CHUNK, COL_CHUNK_HEADS, ROW_CHUNK,
+    MatmulSite, cache_schema, col_schema, colh_schema, match_cache_sites,
     match_matmul_site,
 )
 
 MODES = ("off", "auto", "col")
+CACHE_MODES = ("off", "auto") + CACHE_LAYOUTS
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,14 +81,32 @@ class LayoutDecision:
     layout: str
     step_name: str
     in_features: int
-    out_features: int
+    out_features: int       # per head block for head sites
     row_chunk: int
     col_chunk: int
     row_cost: float
     col_cost: float
-    row_keys: tuple  # (j_key, c_key) names of the ROW_CHUNK schema
+    row_keys: tuple  # key names of the ROW_CHUNK schema ((j, c) or (h, r, c))
     vec_col: str
     row_schema: object = None  # RelSchema of the ROW_CHUNK source table
+    head_key: Optional[str] = None  # set for COL_CHUNK_HEADS sites
+    n_heads: int = 1
+    weight_bytes: int = 0           # f32 bytes of one physical copy
+    denied_by_budget: bool = False  # col preferred but residency budget full
+
+    @property
+    def is_head_site(self) -> bool:
+        return self.head_key is not None
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheDecision:
+    """One KV-cache table and the physical key order chosen for it."""
+
+    table: str
+    layout: str
+    key_order: tuple               # physical key-name order after planning
+    costs: dict = dataclasses.field(default_factory=dict)  # layout -> total
 
 
 @dataclasses.dataclass
@@ -69,10 +115,15 @@ class LayoutPlan:
 
     mode: str
     decisions: List[LayoutDecision] = dataclasses.field(default_factory=list)
+    cache_decisions: List[CacheDecision] = dataclasses.field(
+        default_factory=list)
+    budget_bytes: Optional[int] = None   # residency budget the pass ran under
+    residency_bytes: int = 0             # duplicate bytes the plan commits
 
     @property
     def col_decisions(self) -> List[LayoutDecision]:
-        return [d for d in self.decisions if d.layout == COL_CHUNK]
+        return [d for d in self.decisions
+                if d.layout in (COL_CHUNK, COL_CHUNK_HEADS)]
 
     def layout_of(self, table: str) -> str:
         for d in self.decisions:
@@ -80,21 +131,42 @@ class LayoutPlan:
                 return d.layout
         return ROW_CHUNK
 
-    def ensure_env(self, env):
-        """Materialise COL_CHUNK tables into an executor environment.
+    def cache_layout_of(self, table: str) -> str:
+        for d in self.cache_decisions:
+            if d.table == table:
+                return d.layout
+        return CACHE_ROW_CHUNK
 
-        Row-layout tables stay untouched (other pipelines over the same
-        environment may still scan them).  Environments that resolve
-        layouts themselves (e.g. the paged ``LazyEnv``) are left alone.
+    def ensure_env(self, env):
+        """Materialise planned physical layouts into an executor environment.
+
+        COL_CHUNK / COL_CHUNK_HEADS weight tables are transposed from their
+        resident row-layout twins on first use; cache tables already present
+        in ``env`` with a different key order are permuted in place (fresh
+        caches should be created directly in the planned layout —
+        ``llama_graph.empty_cache_tables(layout=...)``).  Row-layout weight
+        tables stay untouched (other pipelines over the same environment may
+        still scan them).  Environments that resolve layouts themselves
+        (e.g. the paged ``LazyEnv``) are left alone for weights but still
+        get their cache tables aligned.
         """
-        if getattr(env, "resolves_layouts", False):
-            return env
-        from repro.core.executor import transpose_chunked_table
-        for d in self.col_decisions:
-            if d.col_table in env:
-                continue
-            env[d.col_table] = transpose_chunked_table(
-                env[d.table], d.col_chunk)
+        from repro.core.executor import (permute_table_keys,
+                                         transpose_chunked_table,
+                                         transpose_head_chunked_table)
+        if not getattr(env, "resolves_layouts", False):
+            for d in self.col_decisions:
+                if d.col_table in env:
+                    continue
+                if d.is_head_site:
+                    env[d.col_table] = transpose_head_chunked_table(
+                        env[d.table], d.col_chunk)
+                else:
+                    env[d.col_table] = transpose_chunked_table(
+                        env[d.table], d.col_chunk)
+        for cd in self.cache_decisions:
+            tbl = env.get(cd.table) if hasattr(env, "get") else None
+            if tbl is not None and tbl.key_names != cd.key_order:
+                env[cd.table] = permute_table_keys(tbl, cd.key_order)
         return env
 
     def conversion_sql(self, dialect: str = "duckdb") -> str:
@@ -106,30 +178,37 @@ class LayoutPlan:
 
 
 def conversion_sql(decisions, dialect: str = "duckdb") -> str:
-    """ROW2COL conversion statements for a set of COL_CHUNK decisions."""
+    """ROW2COL conversion statements for a set of column-layout decisions.
+
+    Two-key sites transpose ``(j, c)`` → ``(d, c')``; head sites carry the
+    head block key through: ``(h, r, c)`` → ``(h, d, c')``.
+    """
     assert dialect in ("duckdb", "ansi")
     stmts = []
     for d in decisions:
-        jk, ck = d.row_keys
+        head = d.row_keys[:-2]            # () or (h,)
+        jk, ck = d.row_keys[-2:]          # row key folded + chunk key
         cs_in, cs_out = d.row_chunk, d.col_chunk
+        hsel = "".join(f"{h}, " for h in head)
         if dialect == "duckdb":
-            flat = (f"SELECT {jk}, {ck} * {cs_in} + e.e AS d, "
+            flat = (f"SELECT {hsel}{jk}, {ck} * {cs_in} + e.e AS d, "
                     f"{d.vec_col}[e.e + 1] AS x FROM {d.table}, "
                     f"(SELECT UNNEST(range({cs_in})) AS e) AS e")
             intdiv = "//"
         else:
-            flat = (f"SELECT {jk}, {ck} * {cs_in} + u.ord - 1 AS d, "
+            flat = (f"SELECT {hsel}{jk}, {ck} * {cs_in} + u.ord - 1 AS d, "
                     f"u.x AS x FROM {d.table}, "
                     f"UNNEST({d.vec_col}) WITH ORDINALITY AS u(x, ord)")
             intdiv = "/"
+        tag = "ROW2COL (head-blocked)" if d.is_head_site else "ROW2COL"
         stmts.append(
-            f"-- ROW2COL: {d.table} -> {d.col_table}\n"
+            f"-- {tag}: {d.table} -> {d.col_table}\n"
             f"CREATE OR REPLACE TABLE {d.col_table} AS\n"
             f"WITH flat AS ({flat})\n"
-            f"SELECT d, {jk} {intdiv} {cs_out} AS c, "
+            f"SELECT {hsel}d, {jk} {intdiv} {cs_out} AS c, "
             f"collect_as_array(LIST({jk} % {cs_out}), LIST(x)) "
             f"AS {d.vec_col}\n"
-            f"FROM flat GROUP BY d, {jk} {intdiv} {cs_out};")
+            f"FROM flat GROUP BY {hsel}d, {jk} {intdiv} {cs_out};")
     return "\n\n".join(stmts)
 
 
@@ -161,10 +240,12 @@ def _fresh(name: str, taken) -> str:
 
 
 def _build_col_plan(site: MatmulSite) -> RelNode:
-    """Construct the COL_CHUNK plan for a matched matmul site.
+    """Construct the column-layout plan for a matched matmul site.
 
     Output schema is identical to the ROW_CHUNK plan's (same keys, same
-    chunked vector column), so downstream consumers are unaffected.
+    chunked vector column), so downstream consumers are unaffected.  For
+    head sites the transposed table keeps the head block key and the GROUP
+    BY is ``(…, h, c)``.
     """
     base = site.base_keys
     xs_keys = {k for k, _ in base} | {site.join.on[0][1].name}
@@ -183,16 +264,22 @@ def _build_col_plan(site: MatmulSite) -> RelNode:
             add(mul(key(c_in), const(cs_in)), key(e_name)))],
         exprs=[("xs", None, col("x"))],
     )
-    scan = Scan(
-        table=col_table_name(site.table),
-        table_schema=col_schema(site.in_features, site.out_features,
-                                site.col_chunk, d_key="d",
-                                chunk_key=out_chunk_key),
-    )
+    if site.is_head_site:
+        schema = colh_schema(site.n_heads, site.in_features,
+                             site.out_features, site.col_chunk,
+                             head_key=site.head_key, d_key="d",
+                             chunk_key=out_chunk_key)
+        group_tail = [site.head_key, out_chunk_key]
+    else:
+        schema = col_schema(site.in_features, site.out_features,
+                            site.col_chunk, d_key="d",
+                            chunk_key=out_chunk_key)
+        group_tail = [out_chunk_key]
+    scan = Scan(table=site.col_table, table_schema=schema)
     j = Join(left=p, right=scan, on=[("d", key(d_name))])
     return GroupAgg(
         input=j,
-        group_keys=[k for k, _ in base] + [out_chunk_key],
+        group_keys=[k for k, _ in base] + group_tail,
         aggs=[(site.out_col, "SUM", mul(col("xs"), col("chunk")))],
     )
 
@@ -228,14 +315,49 @@ def _replace_nodes(pipeline: RelPipeline, mapping: Dict[int, RelNode]):
 
 def _site_seq_len(site: MatmulSite) -> int:
     t = 1
-    for _, s in site.base_keys:
-        t *= s
+    for k, s in site.base_keys:
+        if k != site.head_key:
+            t *= s
     return t
 
 
+def _decision_for(site: MatmulSite, layout: str, row_cost: float,
+                  col_cost: float, denied: bool = False) -> LayoutDecision:
+    return LayoutDecision(
+        table=site.table,
+        col_table=site.col_table,
+        layout=layout,
+        step_name=site.step_name,
+        in_features=site.in_features,
+        out_features=site.out_features,
+        row_chunk=site.row_chunk,
+        col_chunk=site.col_chunk,
+        row_cost=row_cost,
+        col_cost=col_cost,
+        row_keys=tuple(k for k, _ in site.weight_scan.table_schema.keys),
+        vec_col=site.weight_scan.table_schema.cols[0][0],
+        row_schema=site.weight_scan.table_schema,
+        head_key=site.head_key,
+        n_heads=site.n_heads,
+        weight_bytes=site.weight_bytes,
+        denied_by_budget=denied,
+    )
+
+
 def plan_layouts(pipeline: RelPipeline, mode: str = "auto",
-                 params: Optional[CostParams] = None) -> LayoutPlan:
+                 params: Optional[CostParams] = None,
+                 budget_bytes: Optional[int] = None,
+                 cache_mode: str = "off") -> LayoutPlan:
     """Run the layout planner over a compiled pipeline (in place).
+
+    ``budget_bytes`` bounds the *duplicate* residency column copies add on
+    top of the always-resident row tables (the pager working-set budget);
+    ``None`` means unbounded.  ``cache_mode`` re-keys the KV-cache tables:
+    ``"off"`` keeps the seed order, ``"auto"`` is cost-based, or pass a
+    layout name (``"row_chunk"`` / ``"head_major"`` / ``"pos_major"``) to
+    force one — every pipeline sharing a session environment must agree on
+    the cache layout (the serving engine forces its prefill pipelines to
+    the decode choice).
 
     Returns the :class:`LayoutPlan`; also records it on
     ``pipeline.layout_plan`` and the per-table choices on
@@ -244,11 +366,20 @@ def plan_layouts(pipeline: RelPipeline, mode: str = "auto",
     """
     if mode not in MODES:
         raise ValueError(f"layout mode {mode!r} not in {MODES}")
-    plan = LayoutPlan(mode=mode)
-    if mode == "off":
-        pipeline.layout_plan = plan
-        return plan
+    if cache_mode not in CACHE_MODES:
+        raise ValueError(f"cache mode {cache_mode!r} not in {CACHE_MODES}")
+    plan = LayoutPlan(mode=mode, budget_bytes=budget_bytes)
+    if mode != "off":
+        _plan_weight_layouts(pipeline, plan, mode, params, budget_bytes)
+    if cache_mode != "off":
+        _plan_cache_layouts(pipeline, plan, cache_mode, params)
+    pipeline.layout_plan = plan
+    return plan
 
+
+def _plan_weight_layouts(pipeline: RelPipeline, plan: LayoutPlan, mode: str,
+                         params: Optional[CostParams],
+                         budget_bytes: Optional[int]) -> None:
     sites: List[MatmulSite] = []
     for step in pipeline.steps:
         if step.kind != "bind":
@@ -257,30 +388,42 @@ def plan_layouts(pipeline: RelPipeline, mode: str = "auto",
         if site is not None:
             sites.append(site)
 
-    mapping: Dict[int, RelNode] = {}
+    # -- stage 1: price every site under both admissible layouts
+    priced = []
     for site in sites:
         p = params or CostParams(seq_len=_site_seq_len(site))
         row_cost, col_cost = cost_mod.site_costs(site, p)
-        layout = (COL_CHUNK if mode == "col"
-                  else cost_mod.choose_layout(site, p))
-        jk, ck = (k for k, _ in site.weight_scan.table_schema.keys)
-        decision = LayoutDecision(
-            table=site.table,
-            col_table=col_table_name(site.table),
-            layout=layout,
-            step_name=site.step_name,
-            in_features=site.in_features,
-            out_features=site.out_features,
-            row_chunk=site.row_chunk,
-            col_chunk=site.col_chunk,
-            row_cost=row_cost,
-            col_cost=col_cost,
-            row_keys=(jk, ck),
-            vec_col=site.weight_scan.table_schema.cols[0][0],
-            row_schema=site.weight_scan.table_schema,
-        )
+        wants_col = (mode == "col") or col_cost < row_cost
+        priced.append((site, row_cost, col_cost, wants_col))
+
+    # -- stage 2: global residency pass.  Column copies are *extra* bytes on
+    # top of the row tables (which remain the conversion source / serve
+    # other pipelines), so rank candidates by benefit per duplicate byte and
+    # admit greedily within the budget — under pressure the plan keeps the
+    # most profitable layers' column copies and degrades the rest to
+    # ROW_CHUNK instead of flipping the whole model.
+    candidates = [(s, rc, cc) for s, rc, cc, w in priced if w]
+    candidates.sort(key=lambda t: (t[1] - t[2]) / max(t[0].weight_bytes, 1),
+                    reverse=True)
+    admitted: Dict[int, bool] = {}
+    spent = 0
+    for site, rc, cc in candidates:
+        nb = site.weight_bytes
+        if budget_bytes is not None and spent + nb > budget_bytes:
+            admitted[id(site)] = False
+            continue
+        spent += nb
+        admitted[id(site)] = True
+    plan.residency_bytes = spent
+
+    mapping: Dict[int, RelNode] = {}
+    for site, row_cost, col_cost, wants_col in priced:
+        take_col = wants_col and admitted.get(id(site), False)
+        layout = site.col_layout if take_col else ROW_CHUNK
+        decision = _decision_for(site, layout, row_cost, col_cost,
+                                 denied=wants_col and not take_col)
         plan.decisions.append(decision)
-        if layout != COL_CHUNK:
+        if not take_col:
             pipeline.layouts[site.table] = ROW_CHUNK
             continue
         new_root = _build_col_plan(site)
@@ -289,9 +432,35 @@ def plan_layouts(pipeline: RelPipeline, mode: str = "auto",
         pipeline.weight_schemas.pop(site.table, None)
         pipeline.weight_schemas[decision.col_table] = (
             new_root.input.right.table_schema)
-        pipeline.layouts[decision.col_table] = COL_CHUNK
+        pipeline.layouts[decision.col_table] = layout
 
     if mapping:
         _replace_nodes(pipeline, mapping)
-    pipeline.layout_plan = plan
-    return plan
+
+
+def _plan_cache_layouts(pipeline: RelPipeline, plan: LayoutPlan,
+                        cache_mode: str,
+                        params: Optional[CostParams]) -> None:
+    """Pick and apply a physical key order for every KV-cache table.
+
+    The rewrite is purely physical: every Scan of the cache shares its
+    schema, and all consumer joins/aggregates bind cache keys by *name*,
+    so permuting the key order changes the stored array axis order (and
+    the SQL DDL column order) without touching plan semantics.
+    """
+    for site in match_cache_sites(pipeline):
+        p = params or CostParams(seq_len=1)
+        costs = cost_mod.cache_site_costs(site, p)
+        if cache_mode == "auto":
+            layout = cost_mod.choose_cache_layout(site, p, costs=costs)
+        else:
+            layout = cache_mode
+        new_schema = cache_schema(site.seed_schema, layout)
+        for scan in site.scans:
+            scan.table_schema = new_schema
+            scan.schema = new_schema
+        pipeline.input_schemas[site.table] = new_schema
+        pipeline.layouts[site.table] = layout
+        plan.cache_decisions.append(CacheDecision(
+            table=site.table, layout=layout,
+            key_order=new_schema.key_names, costs=costs))

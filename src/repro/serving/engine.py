@@ -90,21 +90,45 @@ class RelationalEngine:
                  chunk_size: int = 64, residency: str = "in_memory",
                  budget_bytes: Optional[int] = None,
                  disk_dir: Optional[str] = None, max_len: int = 1024,
-                 pager_policy: str = "pin", row2col: str = "auto"):
-        from repro.planner import MODES
+                 pager_policy: str = "pin", row2col: str = "auto",
+                 cache_layout: str = "off"):
+        # cache_layout defaults to "off" (seed order): the locality cost
+        # model prices relational row/seek traffic, which the dense JAX
+        # executor does not exhibit 1:1 — "auto" is opt-in until the model
+        # is calibrated against BENCH_attn_layout (see ROADMAP)
+        from repro.planner import CACHE_MODES, MODES
         assert row2col in MODES, f"row2col must be one of {MODES}"
+        assert cache_layout in CACHE_MODES, \
+            f"cache_layout must be one of {CACHE_MODES}"
         self.spec = spec
         self.cs = chunk_size
         self.max_len = max_len
         self.residency = residency
         self.row2col = row2col
         self._prefill_pipes: Dict[int, object] = {}
+        # paged residency: duplicate column copies compete with the working
+        # set, so the global residency pass runs under the pager budget;
+        # in-memory residency is unbounded
+        self._residency_budget = (budget_bytes if residency != "in_memory"
+                                  else None)
 
         g = lg.build_decode_graph(spec, cache_len=max_len)
         infer_shapes(g)
         preoptimize(g)
         self.decode_pipe = op_map(g, chunk_size=chunk_size)
-        postoptimize(self.decode_pipe, layout_mode=row2col)
+        postoptimize(self.decode_pipe, layout_mode=row2col,
+                     cache_mode=cache_layout,
+                     budget_bytes=self._residency_budget)
+        # resolved decode-time cache layout; prefill pipelines are forced to
+        # it (they share the session environment with decode steps).  When
+        # the knob is "off" the planner stays off for prefill too and the
+        # session caches keep the seed order.
+        plan = self.decode_pipe.layout_plan
+        self.cache_layout = (plan.cache_decisions[0].layout
+                             if plan is not None and plan.cache_decisions
+                             else "row_chunk")
+        self._prefill_cache_mode = ("off" if cache_layout == "off"
+                                    else self.cache_layout)
 
         if residency == "in_memory":
             self.env_base = lg.convert_weights(params, chunk_size=chunk_size)
@@ -118,10 +142,11 @@ class RelationalEngine:
         self._register_layouts(self.decode_pipe)
 
     def _register_layouts(self, pipe) -> None:
-        """Make a pipeline's COL_CHUNK tables resolvable: materialised into
-        the resident env (in-memory), or converted once into the pager's
-        cold store (paged) — the offline ROW2COL data conversion, so paged
-        accesses stay zero-copy wraps under the same working-set budget."""
+        """Make a pipeline's column-layout tables resolvable: materialised
+        into the resident env (in-memory), or converted once into the
+        pager's cold store (paged) — the offline ROW2COL data conversion,
+        so paged accesses stay zero-copy wraps under the same working-set
+        budget.  Head-blocked tables transpose per head block."""
         plan = getattr(pipe, "layout_plan", None)
         if plan is None:
             return
@@ -132,7 +157,11 @@ class RelationalEngine:
             if d.col_table in self.pager._cold:
                 continue
             dense = np.asarray(self.pager._cold[d.table])
-            self.pager.add(d.col_table, np.ascontiguousarray(dense.T))
+            if d.is_head_site:  # [H, dh, n] -> [H, n, dh]
+                self.pager.add(d.col_table,
+                               np.ascontiguousarray(dense.transpose(0, 2, 1)))
+            else:
+                self.pager.add(d.col_table, np.ascontiguousarray(dense.T))
 
     def _prefill_pipe(self, T: int):
         if T not in self._prefill_pipes:
@@ -140,7 +169,9 @@ class RelationalEngine:
             infer_shapes(g)
             preoptimize(g)
             pipe = op_map(g, chunk_size=self.cs)
-            postoptimize(pipe, layout_mode=self.row2col)
+            postoptimize(pipe, layout_mode=self.row2col,
+                         cache_mode=self._prefill_cache_mode,
+                         budget_bytes=self._residency_budget)
             self._register_layouts(pipe)
             self._prefill_pipes[T] = pipe
         return self._prefill_pipes[T]
@@ -151,7 +182,8 @@ class RelationalEngine:
         else:
             env = LazyEnv(self.pager, self.cs, _chunked_table)
         env.update(lg.empty_cache_tables(self.spec, cache_len=self.max_len,
-                                         chunk_size=self.cs))
+                                         chunk_size=self.cs,
+                                         layout=self.cache_layout))
         return env
 
     def _argmax_token(self, out_table) -> int:

@@ -8,7 +8,9 @@ address split ``token // page ↦ page_id, token % page ↦ slot`` — exactly
 the paper's chunk-index projection.
 
 Pages are pooled across sequences (no per-sequence max-length allocation);
-``kernels/paged_attention`` consumes this layout directly.
+``kernels/paged_attention`` consumes the slot-major pool order via
+:meth:`PagedKVCache.kernel_views` (which transposes when the pool is
+stored ``head_major``).
 """
 
 from __future__ import annotations
@@ -30,21 +32,35 @@ class PagedKVConfig:
     n_pages: int = 256           # pool size (all sequences, per layer)
     max_pages_per_seq: int = 64
     dtype: str = "float32"
+    # physical in-page layout (planner cache layouts): "row_chunk" clusters
+    # a page by slot (position-major, the seed); "head_major" clusters by
+    # KV head, so one head's history within a page is contiguous (the
+    # planner's decode-attention locality choice).  Kernels consume the
+    # slot-major order via PagedKVCache.kernel_views.
+    layout: str = "row_chunk"
 
 
 class PagedKVCache:
     """Host-managed page tables + device-resident page pool.
 
-    pool[layer]: k/v arrays [n_pages, page_size, n_kv, head_dim].
+    pool[layer]: k/v arrays [n_pages, page_size, n_kv, head_dim]
+    (``layout="row_chunk"``) or [n_pages, n_kv, page_size, head_dim]
+    (``layout="head_major"``).
     page_table: [max_seqs, max_pages_per_seq] int32 (-1 = unmapped).
     """
 
     def __init__(self, cfg: PagedKVConfig, max_seqs: int):
+        if cfg.layout not in ("row_chunk", "head_major"):
+            raise ValueError(f"unsupported KV page layout {cfg.layout!r}")
         self.cfg = cfg
         self.max_seqs = max_seqs
         dt = jnp.dtype(cfg.dtype)
-        shape = (cfg.n_layers, cfg.n_pages, cfg.page_size, cfg.n_kv,
-                 cfg.head_dim)
+        if cfg.layout == "head_major":
+            shape = (cfg.n_layers, cfg.n_pages, cfg.n_kv, cfg.page_size,
+                     cfg.head_dim)
+        else:
+            shape = (cfg.n_layers, cfg.n_pages, cfg.page_size, cfg.n_kv,
+                     cfg.head_dim)
         self.k_pool = jnp.zeros(shape, dt)
         self.v_pool = jnp.zeros(shape, dt)
         self.page_table = np.full((max_seqs, cfg.max_pages_per_seq), -1,
@@ -96,10 +112,16 @@ class PagedKVCache:
         self.ensure_capacity(seq_id, pos + 1)
         page = int(self.page_table[seq_id, pos // self.cfg.page_size])
         slot = pos % self.cfg.page_size
-        self.k_pool = self.k_pool.at[:, page, slot].set(
-            layer_k.astype(self.k_pool.dtype))
-        self.v_pool = self.v_pool.at[:, page, slot].set(
-            layer_v.astype(self.v_pool.dtype))
+        if self.cfg.layout == "head_major":
+            self.k_pool = self.k_pool.at[:, page, :, slot].set(
+                layer_k.astype(self.k_pool.dtype))
+            self.v_pool = self.v_pool.at[:, page, :, slot].set(
+                layer_v.astype(self.v_pool.dtype))
+        else:
+            self.k_pool = self.k_pool.at[:, page, slot].set(
+                layer_k.astype(self.k_pool.dtype))
+            self.v_pool = self.v_pool.at[:, page, slot].set(
+                layer_v.astype(self.v_pool.dtype))
         self.seq_lens[seq_id] = max(int(self.seq_lens[seq_id]), pos + 1)
 
     def gather(self, seq_id: int, layer: int) -> Tuple[jnp.ndarray,
@@ -107,10 +129,12 @@ class PagedKVCache:
         """Materialise a sequence's K/V [T, n_kv, dh] (reference path)."""
         T = int(self.seq_lens[seq_id])
         pages = self.page_table[seq_id][: -(-T // self.cfg.page_size)]
-        k = self.k_pool[layer, pages].reshape(-1, self.cfg.n_kv,
-                                              self.cfg.head_dim)[:T]
-        v = self.v_pool[layer, pages].reshape(-1, self.cfg.n_kv,
-                                              self.cfg.head_dim)[:T]
+        k, v = self.k_pool[layer, pages], self.v_pool[layer, pages]
+        if self.cfg.layout == "head_major":  # [P, hk, slot, dh] -> slot-major
+            k = k.transpose(0, 2, 1, 3)
+            v = v.transpose(0, 2, 1, 3)
+        k = k.reshape(-1, self.cfg.n_kv, self.cfg.head_dim)[:T]
+        v = v.reshape(-1, self.cfg.n_kv, self.cfg.head_dim)[:T]
         return k, v, T
 
     def batch_views(self, seq_ids: List[int]):
@@ -118,3 +142,16 @@ class PagedKVCache:
         pt = jnp.asarray(self.page_table[seq_ids])
         lens = jnp.asarray(self.seq_lens[seq_ids])
         return pt, lens
+
+    def kernel_views(self, layer: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """This layer's K/V pools in the slot-major order
+        ``[n_pages, page_size, n_kv, head_dim]`` that
+        ``kernels/paged_attention`` unpacks positionally — the transpose is
+        applied when the pool is stored ``head_major``.  Kernel consumers
+        must go through this accessor rather than indexing ``k_pool``
+        directly, since the pool's physical layout is config-chosen."""
+        k, v = self.k_pool[layer], self.v_pool[layer]
+        if self.cfg.layout == "head_major":  # [P, hk, slot, d] -> slot-major
+            k = k.transpose(0, 2, 1, 3)
+            v = v.transpose(0, 2, 1, 3)
+        return k, v

@@ -5,8 +5,10 @@ both dialects, and the serving-engine knob."""
 import numpy as np
 import pytest
 
-from repro.core.executor import (col_table_from_dense, execute,
-                                 table_from_chunked, transpose_chunked_table)
+from repro.core.executor import (col_table_from_dense, colh_table_from_dense,
+                                 execute, permute_table_keys,
+                                 table_from_chunked, transpose_chunked_table,
+                                 transpose_head_chunked_table)
 from repro.core.chunked import ChunkedTensor
 from repro.core.graph import Graph, infer_shapes
 from repro.core.llama_graph import (LlamaSpec, build_decode_graph,
@@ -17,10 +19,12 @@ from repro.core.opmap import op_map
 from repro.core.passes import postoptimize, preoptimize
 from repro.core.pipeline import run_pipeline
 from repro.core.sqlgen import SQLGenerator, generate_sql
-from repro.planner import (COL_CHUNK, ROW_CHUNK, CostParams,
-                           admissible_layouts, choose_layout,
-                           col_chunk_cost, match_matmul_site, plan_layouts,
-                           row_chunk_cost)
+from repro.planner import (CACHE_HEAD_MAJOR, CACHE_LAYOUTS, CACHE_POS_MAJOR,
+                           CACHE_ROW_CHUNK, COL_CHUNK, COL_CHUNK_HEADS,
+                           ROW_CHUNK, CostParams, admissible_layouts,
+                           cache_layout_cost, choose_layout, col_chunk_cost,
+                           colh_chunk_cost, match_cache_sites,
+                           match_matmul_site, plan_layouts, row_chunk_cost)
 
 SPEC = LlamaSpec(vocab=64, d_model=32, n_layers=2, n_heads=4, n_kv=2,
                  d_ff=64, rope_theta=10000.0)
@@ -60,17 +64,27 @@ class TestLayoutIR:
         assert site.in_features == 8 and site.out_features == 8
         assert admissible_layouts(site) == (ROW_CHUNK, COL_CHUNK)
 
-    def test_per_head_and_embedding_not_admissible(self):
+    def test_admissibility_by_site_shape(self):
         g = build_prefill_graph(SPEC, 4)
         infer_shapes(g)
         pipe = op_map(g, chunk_size=8)
-        matched = {match_matmul_site(s.name, s.rel.plan).table
-                   for s in pipe.steps if s.kind == "bind"
-                   and match_matmul_site(s.name, s.rel.plan) is not None}
-        # only the two-key map_linear weights are legal COL_CHUNK sites
-        assert "o_weights_L0" in matched and "lm_head" in matched
-        assert not any(t.startswith(("Q_", "K_", "V_")) for t in matched)
-        assert "vocabulary" not in matched
+        sites = {s.table: s for st in pipe.steps if st.kind == "bind"
+                 for s in [match_matmul_site(st.name, st.rel.plan)]
+                 if s is not None}
+        # two-key map_linear weights admit COL_CHUNK
+        assert admissible_layouts(sites["o_weights_L0"]) == (ROW_CHUNK,
+                                                            COL_CHUNK)
+        assert admissible_layouts(sites["lm_head"]) == (ROW_CHUNK, COL_CHUNK)
+        # per-head Q/K/V projections admit the head-blocked column layout
+        q = sites["Q_weights_L0"]
+        assert q.is_head_site and q.head_key == "h" and q.n_heads == 4
+        assert admissible_layouts(q) == (ROW_CHUNK, COL_CHUNK_HEADS)
+        k = sites["K_weights_L0"]
+        assert k.head_key == "hk" and k.n_heads == 2
+        assert k.col_table == "K_weights_L0__colh"
+        # non-matmuls (embedding value-join, norms) never match
+        assert "vocabulary" not in sites
+        assert not any(t.endswith("Norm_L0") for t in sites)
         assert admissible_layouts(None) == (ROW_CHUNK,)
 
     def test_transpose_roundtrip(self):
@@ -84,6 +98,36 @@ class TestLayoutIR:
         direct = col_table_from_dense(w, col_chunk=4)
         np.testing.assert_array_equal(np.asarray(direct.cols["chunk"]),
                                       np.asarray(col.cols["chunk"]))
+
+    def test_head_transpose_roundtrip(self):
+        """(h, r, c, chunk[cs]) -> (h, d, c', chunk[cs']) keeps the head
+        block and transposes (r, d) within it."""
+        w = np.arange(2 * 4 * 8, dtype=np.float32).reshape(2, 4, 8)
+        row = table_from_chunked(
+            ChunkedTensor.from_dense("w", w, chunk_size=4,
+                                     key_names=("h", "r")))
+        colh = transpose_head_chunked_table(row, col_chunk=2)
+        assert colh.keys == (("h", 2), ("d", 8), ("c", 2))
+        got = np.asarray(colh.cols["chunk"]).reshape(2, 8, 4)
+        for h in range(2):
+            np.testing.assert_array_equal(got[h], w[h].T)
+        direct = colh_table_from_dense(w, col_chunk=2)
+        np.testing.assert_array_equal(np.asarray(direct.cols["chunk"]),
+                                      np.asarray(colh.cols["chunk"]))
+
+    def test_permute_table_keys(self):
+        """Cache re-layout is a pure name-based axis permutation."""
+        from repro.core.executor import DenseTable
+        from repro.core import relational as ra
+        arr = np.arange(6 * 2 * 3 * 4, dtype=np.float32).reshape(6, 2, 3, 4)
+        t = DenseTable(keys=(("tp", 6), ("hk", 2), ("c", 3)),
+                       cols={"kv": arr}, col_types={"kv": ra.VEC(4)})
+        p = permute_table_keys(t, ("hk", "tp", "c"))
+        assert p.key_names == ("hk", "tp", "c")
+        np.testing.assert_array_equal(np.asarray(p.cols["kv"]),
+                                      arr.transpose(1, 0, 2, 3))
+        back = permute_table_keys(p, t.key_names)
+        np.testing.assert_array_equal(np.asarray(back.cols["kv"]), arr)
 
 
 class TestCostModel:
@@ -103,9 +147,18 @@ class TestCostModel:
         assert r8.total(p) > r1.total(p)
         assert r8.join_rows == 8 * r1.join_rows
 
+    def test_head_blocked_cost_is_col_cost_over_total_out(self):
+        """COL_CHUNK_HEADS prices as the column cost with m = H·dh."""
+        ch = colh_chunk_cost(T=4, n_heads=4, in_f=64, head_dim=16, cs_out=8)
+        c = col_chunk_cost(T=4, in_f=64, out_f=64, cs_out=8)
+        assert ch.layout == COL_CHUNK_HEADS
+        assert (ch.scan_rows, ch.join_rows, ch.agg_groups, ch.aux_rows) == \
+            (c.scan_rows, c.join_rows, c.agg_groups, c.aux_rows)
+
     def test_auto_mixes_layouts_on_llama(self):
         """Cost-based planning keeps wide-input GLU_W2 row-chunked but
-        rewrites o-proj / W1 / W3 / lm_head (square or wide-output)."""
+        rewrites o-proj / W1 / W3 / lm_head (square or wide-output) and the
+        per-head projections (head-blocked)."""
         g = build_prefill_graph(SPEC, 4)
         infer_shapes(g)
         pipe = op_map(g, chunk_size=8)
@@ -115,8 +168,10 @@ class TestCostModel:
         assert chosen["GLU_W1_L0"] == COL_CHUNK
         assert chosen["lm_head"] == COL_CHUNK
         assert chosen["GLU_W2_L0"] == ROW_CHUNK
+        assert chosen["Q_weights_L0"] == COL_CHUNK_HEADS
         for d in plan.decisions:
-            want = COL_CHUNK if d.col_cost < d.row_cost else ROW_CHUNK
+            col_layout = COL_CHUNK_HEADS if d.head_key else COL_CHUNK
+            want = col_layout if d.col_cost < d.row_cost else ROW_CHUNK
             assert d.layout == want
 
     def test_force_mode_rewrites_everything_legal(self):
@@ -124,12 +179,28 @@ class TestCostModel:
         infer_shapes(g)
         pipe = op_map(g, chunk_size=8)
         plan = plan_layouts(pipe, mode="col")
-        assert plan.decisions and all(d.layout == COL_CHUNK
-                                      for d in plan.decisions)
+        assert plan.decisions and all(
+            d.layout == (COL_CHUNK_HEADS if d.head_key else COL_CHUNK)
+            for d in plan.decisions)
         # weight schemas now carry the transposed tables
         assert "o_weights_L0__col" in pipe.weight_schemas
         assert "o_weights_L0" not in pipe.weight_schemas
         assert pipe.layouts["o_weights_L0__col"] == COL_CHUNK
+        assert "Q_weights_L0__colh" in pipe.weight_schemas
+        assert pipe.layouts["Q_weights_L0__colh"] == COL_CHUNK_HEADS
+
+    def test_cache_layout_costs(self):
+        """head_major minimises decode read seeks; row_chunk wins appends;
+        pos_major reads are fully strided."""
+        costs = {L: cache_layout_cost(L, cache_len=512, n_heads=8,
+                                      n_chunks=2) for L in CACHE_LAYOUTS}
+        # scan rows are layout-invariant
+        assert len({c.scan_rows for c in costs.values()}) == 1
+        p = CostParams()
+        assert costs[CACHE_HEAD_MAJOR].total(p) < \
+            costs[CACHE_ROW_CHUNK].total(p) < costs[CACHE_POS_MAJOR].total(p)
+        assert costs[CACHE_ROW_CHUNK].write_segments < \
+            costs[CACHE_HEAD_MAJOR].write_segments
 
 
 def _run_llama_prefill(params, ids, cs, mode, cache_len=None):
@@ -207,6 +278,188 @@ class TestEquivalence:
         np.testing.assert_allclose(b.reshape(4, -1), ref, rtol=1e-5,
                                    atol=1e-5)
 
+    def test_linear_heads_site_rewritten_matches_row(self, params):
+        """A map_linear_heads site rewritten to COL_CHUNK_HEADS produces
+        the same Q projection as the ROW_CHUNK reference (acceptance)."""
+        outs = {}
+        for mode in ("off", "col"):
+            g = build_prefill_graph(SPEC, 4)
+            infer_shapes(g)
+            preoptimize(g)
+            pipe = op_map(g, chunk_size=8)
+            postoptimize(pipe, layout_mode=mode)
+            if mode == "col":
+                heads = [d for d in pipe.layout_plan.col_decisions
+                         if d.head_key]
+                assert {d.layout for d in heads} == {COL_CHUNK_HEADS}
+            env = convert_weights(params, chunk_size=8)
+            env.update(empty_cache_tables(SPEC, 4, chunk_size=8))
+            env["token_ids"] = token_table(np.asarray([3, 0, 5, 7], np.int32))
+            env["freq_each_token"] = rope_freq_table(
+                np.arange(4), SPEC.head_dim, SPEC.rope_theta)
+            # linear_heads_1 is the first Q projection bind
+            q_step = next(s.name for s in pipe.steps
+                          if s.kind == "bind"
+                          and s.name.startswith("linear_heads"))
+            pipe.outputs = [q_step]
+            o, _ = run_pipeline(pipe, env, scalars={"cache_position": 0})
+            outs[mode] = np.asarray(o[q_step].cols["v"])
+        assert outs["col"].shape == outs["off"].shape  # (t, h, c, cs)
+        np.testing.assert_allclose(outs["col"], outs["off"], rtol=1e-5,
+                                   atol=1e-5)
+
+
+class TestCacheLayouts:
+    """Planner-managed KV-cache key orders: matching, rewrite, and decode
+    equivalence against the seed row-chunk reference."""
+
+    def test_match_cache_sites(self):
+        g = build_decode_graph(SPEC, cache_len=8)
+        infer_shapes(g)
+        pipe = op_map(g, chunk_size=8)
+        sites = {s.table: s for s in match_cache_sites(pipe)}
+        assert set(sites) == {f"{p}_cache_L{L}" for p in "kv"
+                              for L in range(SPEC.n_layers)}
+        s = sites["k_cache_L0"]
+        assert (s.pos_key, s.head_key, s.chunk_key) == ("tp", "hk", "c")
+        assert s.n_pos == 8 and s.n_heads == SPEC.n_kv
+
+    def test_auto_picks_head_major_for_decode(self):
+        g = build_decode_graph(SPEC, cache_len=64)
+        infer_shapes(g)
+        pipe = op_map(g, chunk_size=8)
+        plan = plan_layouts(pipe, mode="off", cache_mode="auto")
+        assert plan.cache_decisions
+        assert all(d.layout == CACHE_HEAD_MAJOR
+                   for d in plan.cache_decisions)
+        # the rewrite re-keys the scans and the input schemas
+        assert pipe.input_schemas["k_cache_L0"].key_names == ("hk", "tp",
+                                                              "c")
+        assert pipe.layouts["k_cache_L0"] == CACHE_HEAD_MAJOR
+
+    @pytest.mark.parametrize("layout", [CACHE_HEAD_MAJOR, CACHE_POS_MAJOR])
+    def test_decode_against_relaid_cache_matches_row(self, params, layout):
+        """A decode step against a re-laid-out KV cache is numerically
+        identical to the seed row-chunk reference (acceptance)."""
+        ids = np.array([3, 17, 42, 5, 9], np.int32)
+        MAXT = 9
+        outs = {}
+        for cmode in (CACHE_ROW_CHUNK, layout):
+            pre = _build_pipe("prefill", len(ids), 8, "off", MAXT,
+                              cache_mode=cmode)
+            dec = _build_pipe("decode", 1, 8, "off", MAXT, cache_mode=cmode)
+            env = convert_weights(params, chunk_size=8)
+            env.update(empty_cache_tables(SPEC, MAXT, chunk_size=8,
+                                          layout=cmode))
+            env["token_ids"] = token_table(ids)
+            env["freq_each_token"] = rope_freq_table(
+                np.arange(len(ids)), SPEC.head_dim, SPEC.rope_theta)
+            _, env = run_pipeline(pre, env, scalars={"cache_position": 0})
+            logs, cur = [], len(ids)
+            for tok in [21, 33, 7]:
+                env["token_ids"] = token_table(np.asarray([tok], np.int32))
+                env["freq_each_token"] = rope_freq_table(
+                    np.asarray([cur]), SPEC.head_dim, SPEC.rope_theta)
+                o, env = run_pipeline(dec, env,
+                                      scalars={"cache_position": cur})
+                logs.append(np.asarray(o["logits"].cols["v"]).reshape(-1)
+                            [: SPEC.vocab])
+                cur += 1
+            outs[cmode] = np.stack(logs)
+        np.testing.assert_allclose(outs[layout], outs[CACHE_ROW_CHUNK],
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_ensure_env_aligns_seed_cache(self, params):
+        """An env built with seed-order caches is permuted on first use."""
+        dec = _build_pipe("decode", 1, 8, "off", 8,
+                          cache_mode=CACHE_HEAD_MAJOR)
+        env = convert_weights(params, chunk_size=8)
+        env.update(empty_cache_tables(SPEC, 8, chunk_size=8))  # seed order
+        env["token_ids"] = token_table(np.asarray([1], np.int32))
+        env["freq_each_token"] = rope_freq_table(
+            np.asarray([0]), SPEC.head_dim, SPEC.rope_theta)
+        o, env2 = run_pipeline(dec, env, scalars={"cache_position": 0})
+        assert env2["k_cache_L0"].key_names == ("hk", "tp", "c")
+
+
+def _build_pipe(kind, T, cs, mode, cache_len, cache_mode="off"):
+    g = (build_prefill_graph(SPEC, T, cache_len=cache_len)
+         if kind == "prefill" else build_decode_graph(SPEC, cache_len))
+    infer_shapes(g)
+    preoptimize(g)
+    pipe = op_map(g, chunk_size=cs)
+    postoptimize(pipe, layout_mode=mode, cache_mode=cache_mode)
+    return pipe
+
+
+class TestResidencyBudget:
+    """The global residency pass never exceeds the configured budget and
+    degrades per-layer instead of all-or-nothing."""
+
+    def _plan(self, budget):
+        g = build_prefill_graph(SPEC, 4)
+        infer_shapes(g)
+        pipe = op_map(g, chunk_size=8)
+        return plan_layouts(pipe, mode="auto", budget_bytes=budget)
+
+    def test_budget_sweep_never_exceeded(self):
+        unbounded = self._plan(None)
+        want_bytes = sum(d.weight_bytes for d in unbounded.col_decisions)
+        assert want_bytes > 0
+        for budget in [0, want_bytes // 8, want_bytes // 4,
+                       want_bytes // 2, want_bytes - 1, want_bytes,
+                       2 * want_bytes]:
+            plan = self._plan(budget)
+            spent = sum(d.weight_bytes for d in plan.col_decisions)
+            assert spent == plan.residency_bytes
+            assert spent <= budget, (spent, budget)
+            # partial budgets admit a strict subset, not all-or-nothing
+            if 0 < budget < want_bytes:
+                assert 0 < len(plan.col_decisions) < \
+                    len(unbounded.col_decisions)
+            # denied sites are flagged and stay row-chunk
+            for d in plan.decisions:
+                if d.denied_by_budget:
+                    assert d.layout == ROW_CHUNK
+
+    def test_zero_budget_degrades_to_row(self):
+        plan = self._plan(0)
+        assert plan.col_decisions == []
+        assert all(d.layout == ROW_CHUNK for d in plan.decisions)
+        assert any(d.denied_by_budget for d in plan.decisions)
+
+    def test_partial_budget_keeps_best_benefit_per_byte(self):
+        unbounded = self._plan(None)
+        ranked = sorted(unbounded.col_decisions,
+                        key=lambda d: (d.row_cost - d.col_cost)
+                        / max(d.weight_bytes, 1), reverse=True)
+        budget = ranked[0].weight_bytes
+        plan = self._plan(budget)
+        kept = {d.table for d in plan.col_decisions}
+        assert ranked[0].table in kept
+
+    def test_budgeted_plan_still_equivalent(self, params):
+        """A partially-degraded plan stays numerically correct."""
+        ids = np.array([3, 17, 42, 5], np.int32)
+        row, _ = _run_llama_prefill(params, ids, 8, "off")
+        g = build_prefill_graph(SPEC, len(ids))
+        infer_shapes(g)
+        preoptimize(g)
+        pipe = op_map(g, chunk_size=8)
+        postoptimize(pipe, layout_mode="off")
+        plan = plan_layouts(pipe, mode="auto", budget_bytes=1 << 14)
+        assert plan.col_decisions and any(d.denied_by_budget
+                                          for d in plan.decisions)
+        env = convert_weights(params, chunk_size=8)
+        env.update(empty_cache_tables(SPEC, len(ids), chunk_size=8))
+        env["token_ids"] = token_table(ids)
+        env["freq_each_token"] = rope_freq_table(
+            np.arange(len(ids)), SPEC.head_dim, SPEC.rope_theta)
+        outs, _ = run_pipeline(pipe, env, scalars={"cache_position": 0})
+        got = np.asarray(outs["logits"].cols["v"]).reshape(len(ids), -1)[
+            :, : SPEC.vocab]
+        np.testing.assert_allclose(got, row, rtol=1e-5, atol=1e-5)
+
 
 GOLDEN_VIEW_DUCKDB = """\
 CREATE OR REPLACE VIEW y AS
@@ -272,9 +525,37 @@ class TestSQLSnapshots:
             sql = generate_sql(pipe, dialect=dialect)
             assert "CREATE TABLE o_weights_L0__col" in sql
             assert "JOIN o_weights_L0__col" in sql.replace("\n", " ")
-            # row-chunked structures survive where COL_CHUNK is illegal
-            assert "CREATE TABLE Q_weights_L0" in sql
+            # per-head projections now transpose to head-blocked col tables
+            assert "CREATE TABLE Q_weights_L0__colh" in sql
+            assert "JOIN Q_weights_L0__colh" in sql.replace("\n", " ")
+            # the ROW_CHUNK sources survive as conversion inputs
+            assert "CREATE TABLE Q_weights_L0 " in sql
             assert "INSERT INTO k_cache_L0" in sql
+
+    def test_head_conversion_sql_carries_head_key(self):
+        g = build_decode_graph(SPEC, cache_len=16)
+        infer_shapes(g)
+        pipe = op_map(g, chunk_size=8)
+        plan = plan_layouts(pipe, mode="col")
+        conv = plan.conversion_sql("duckdb")
+        assert ("-- ROW2COL (head-blocked): Q_weights_L0 -> "
+                "Q_weights_L0__colh") in conv
+        assert "GROUP BY h, d, r // 8" in conv
+        # K/V use their own head key name
+        assert "GROUP BY hk, d, r // 8" in conv
+
+    def test_cache_ddl_annotated_with_layout(self):
+        g = build_decode_graph(SPEC, cache_len=16)
+        infer_shapes(g)
+        pipe = op_map(g, chunk_size=8)
+        postoptimize(pipe, layout_mode="off", cache_mode="head_major")
+        sql = generate_sql(pipe, dialect="duckdb")
+        assert ("-- layout: head_major\n"
+                "CREATE TABLE k_cache_L0 (hk INT32, tp INT32, c INT32, "
+                "kv FLOAT[8]);") in sql
+        # the INSERT names its columns so the SELECT's (tp, hk, c) order
+        # binds correctly against the permuted DDL
+        assert "INSERT INTO k_cache_L0 (tp, hk, c, kv)" in sql
 
 
 class TestEngineKnob:
@@ -286,6 +567,21 @@ class TestEngineKnob:
                                row2col="off").generate(prompt, 4)
         got = RelationalEngine(SPEC, params, chunk_size=8, max_len=16,
                                row2col=mode).generate(prompt, 4)
+        assert got.tokens == ref.tokens
+
+    @pytest.mark.parametrize("cache_layout", ["head_major", "pos_major",
+                                              "auto"])
+    def test_cache_layout_knob_matches_off(self, params, cache_layout):
+        from repro.serving.engine import RelationalEngine
+        prompt = [3, 17, 42, 5, 9]
+        ref = RelationalEngine(SPEC, params, chunk_size=8, max_len=16,
+                               row2col="off",
+                               cache_layout="off").generate(prompt, 4)
+        eng = RelationalEngine(SPEC, params, chunk_size=8, max_len=16,
+                               row2col="auto", cache_layout=cache_layout)
+        if cache_layout != "auto":
+            assert eng.cache_layout == cache_layout
+        got = eng.generate(prompt, 4)
         assert got.tokens == ref.tokens
 
     def test_paged_matches_off(self, params, tmp_path):

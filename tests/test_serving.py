@@ -60,6 +60,39 @@ class TestPagedKV:
         np.testing.assert_allclose(np.asarray(k), ks[:, 1], rtol=1e-6)
         np.testing.assert_allclose(np.asarray(v), ks[:, 1] * 2, rtol=1e-6)
 
+    def test_head_major_layout_roundtrip(self):
+        """The planner's head_major cache layout: pages cluster by KV head;
+        append/gather stay exact."""
+        cfg = PagedKVConfig(n_layers=2, n_kv=2, head_dim=4, page_size=4,
+                            n_pages=8, max_pages_per_seq=4,
+                            layout="head_major")
+        kv = PagedKVCache(cfg, max_seqs=3)
+        assert kv.k_pool.shape == (2, 8, cfg.n_kv, cfg.page_size,
+                                   cfg.head_dim)
+        kv.allocate_seq(0)
+        rng = np.random.default_rng(1)
+        ks = rng.standard_normal((6, cfg.n_layers, cfg.n_kv, cfg.head_dim)
+                                 ).astype(np.float32)
+        for pos in range(6):
+            kv.append(0, jnp.asarray(ks[pos]), jnp.asarray(ks[pos] * 2), pos)
+        k, v, T = kv.gather(0, layer=1)
+        assert T == 6
+        np.testing.assert_allclose(np.asarray(k), ks[:, 1], rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(v), ks[:, 1] * 2, rtol=1e-6)
+        # kernel consumers get the slot-major order regardless of layout
+        kk, vk = kv.kernel_views(layer=1)
+        assert kk.shape == (8, cfg.page_size, cfg.n_kv, cfg.head_dim)
+        page0 = int(kv.page_table[0, 0])
+        np.testing.assert_allclose(np.asarray(kk[page0]),
+                                   ks[:4, 1].reshape(4, cfg.n_kv,
+                                                     cfg.head_dim),
+                                   rtol=1e-6)
+
+    def test_unknown_layout_rejected(self):
+        cfg = PagedKVConfig(n_layers=1, n_kv=1, head_dim=4, layout="bogus")
+        with pytest.raises(ValueError):
+            PagedKVCache(cfg, max_seqs=1)
+
     def test_page_reuse_after_free(self):
         kv, cfg = self._cache()
         kv.allocate_seq(0)
