@@ -1,0 +1,99 @@
+"""Chunk-size sweep vs the calibrated planner — paper Tab. 1, closed-loop.
+
+Re-runs the paper's chunk-size sensitivity sweep (TTFT/TPOT per candidate
+chunk size) on the relational engine, fits ``CostParams`` from the
+checked-in benchmark JSONs (``planner/calibrate.py``), and checks that the
+calibrated planner's chunk-size pick (``choose_base_chunk_size`` — the
+decision behind ``RelationalEngine(chunk_size="auto")``) lands within one
+candidate step of the measured optimum for both the prefill (TTFT) and
+decode (TPOT) configurations.  Results go to ``BENCH_chunk_sweep.json``.
+"""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from repro.core.llama_graph import LlamaSpec, init_llama_params
+from repro.planner.calibrate import choose_base_chunk_size, fit_cost_params
+from repro.serving.engine import RelationalEngine
+
+SPEC = LlamaSpec(vocab=256, d_model=128, n_layers=2, n_heads=4, n_kv=2,
+                 d_ff=256, rope_theta=10000.0)
+CANDIDATES = (8, 16, 32)   # divisors of head_dim=32 (the compiler's rule)
+PROMPT_T = 32
+NEW_TOKENS = 8
+MAX_LEN = PROMPT_T + NEW_TOKENS + 8
+OUT_JSON = "BENCH_chunk_sweep.json"
+
+
+def _measure(params, prompt):
+    rows = []
+    for cs in CANDIDATES:
+        eng = RelationalEngine(SPEC, params, chunk_size=cs, max_len=MAX_LEN)
+        eng.generate(prompt, 2)  # warm: XLA compile cache + pipelines
+        res = eng.generate(prompt, max_new_tokens=NEW_TOKENS)
+        rows.append({"chunk_size": cs, "ttft_us": res.ttft_s * 1e6,
+                     "tpot_us": res.tpot_s * 1e6})
+    return rows
+
+
+def _step_distance(pick: int, best: int) -> int:
+    return abs(CANDIDATES.index(pick) - CANDIDATES.index(best))
+
+
+def run(report):
+    params = init_llama_params(SPEC, seed=0)
+    prompt = list(np.random.default_rng(0).integers(0, SPEC.vocab, PROMPT_T))
+
+    fit = fit_cost_params()  # checked-in BENCH_row2col / BENCH_attn_layout
+    rows = _measure(params, prompt)
+    for r in rows:
+        report(f"chunk_sweep/cs{r['chunk_size']}/ttft", r["ttft_us"],
+               f"tpot_us={r['tpot_us']:.0f}")
+
+    best_prefill = min(rows, key=lambda r: r["ttft_us"])["chunk_size"]
+    best_decode = min(rows, key=lambda r: r["tpot_us"])["chunk_size"]
+    pick_prefill = choose_base_chunk_size(
+        SPEC, cache_len=MAX_LEN, prefill_tokens=PROMPT_T,
+        candidates=CANDIDATES, params=fit.params, mix=(1.0, 0.0))
+    pick_decode = choose_base_chunk_size(
+        SPEC, cache_len=MAX_LEN, prefill_tokens=PROMPT_T,
+        candidates=CANDIDATES, params=fit.params, mix=(0.0, 1.0))
+
+    d_prefill = _step_distance(pick_prefill, best_prefill)
+    d_decode = _step_distance(pick_decode, best_decode)
+    report("chunk_sweep/pick/prefill", float(pick_prefill),
+           f"measured_best={best_prefill};step_distance={d_prefill}")
+    report("chunk_sweep/pick/decode", float(pick_decode),
+           f"measured_best={best_decode};step_distance={d_decode}")
+
+    payload = {
+        "spec": {"d_model": SPEC.d_model, "n_layers": SPEC.n_layers,
+                 "n_heads": SPEC.n_heads, "n_kv": SPEC.n_kv,
+                 "d_ff": SPEC.d_ff, "vocab": SPEC.vocab},
+        "candidates": list(CANDIDATES),
+        "prompt_tokens": PROMPT_T,
+        "results": rows,
+        "calibration": {"group_weight": float(fit.params.group_weight),
+                        "seek_weight": float(fit.params.seek_weight),
+                        "n_points": fit.n_points},
+        "planner_pick": {"prefill": pick_prefill, "decode": pick_decode},
+        "measured_best": {"prefill": best_prefill, "decode": best_decode},
+    }
+    with open(OUT_JSON, "w") as f:
+        json.dump(payload, f, indent=2)
+    report("chunk_sweep/json", 0.0, OUT_JSON)
+
+    # acceptance: the calibrated pick brackets the measured optimum
+    assert d_prefill <= 1, (
+        f"planner prefill pick {pick_prefill} is {d_prefill} steps from the "
+        f"measured optimum {best_prefill}")
+    assert d_decode <= 1, (
+        f"planner decode pick {pick_decode} is {d_decode} steps from the "
+        f"measured optimum {best_decode}")
+
+
+if __name__ == "__main__":
+    run(lambda n, us, d="": print(f"{n},{us:.1f},{d}"))

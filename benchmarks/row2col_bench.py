@@ -126,7 +126,10 @@ def run(report):
                    f"row_us={row['decode_off_us']:.0f};"
                    f"speedup={row['decode_speedup']:.2f}")
     payload = {
+        # full spec: planner/calibrate.py rebuilds cost features for these
+        # exact pipelines, so the head counts must travel with the data
         "spec": {"d_model": SPEC.d_model, "n_layers": SPEC.n_layers,
+                 "n_heads": SPEC.n_heads, "n_kv": SPEC.n_kv,
                  "d_ff": SPEC.d_ff, "vocab": SPEC.vocab},
         "seq_lens": list(SEQ_LENS),
         "chunk_sizes": list(CHUNK_SIZES),

@@ -11,9 +11,9 @@ from __future__ import annotations
 import sys
 import traceback
 
-from benchmarks import (attn_layout_bench, fig2_memory, fig3_capped,
-                        fig4_methods, roofline_bench, row2col_bench,
-                        tab1_chunk_size)
+from benchmarks import (attn_layout_bench, chunk_sweep_bench, fig2_memory,
+                        fig3_capped, fig4_methods, roofline_bench,
+                        row2col_bench, tab1_chunk_size)
 
 BENCHES = {
     "tab1": tab1_chunk_size,
@@ -23,6 +23,7 @@ BENCHES = {
     "roofline": roofline_bench,
     "row2col": row2col_bench,
     "attn_layout": attn_layout_bench,
+    "chunk_sweep": chunk_sweep_bench,
 }
 
 

@@ -10,6 +10,15 @@ vector chunks.  On TPU we realise that table as a dense array of shape
 domain, where the key (row_id, chunk_id) is simply the address.  chunk_size
 defaults to 128 to align chunks with VPU lanes / MXU tiles.
 
+``DEFAULT_CHUNK_SIZE`` is only a construction default: the chunk size is a
+*per-table* physical property carried by each :class:`ChunkedSchema`, and
+the layout planner prices a candidate set of sizes per table jointly with
+the layout (``repro.planner.plan_layouts(chunk_mode="auto")``; the engine
+knob is ``RelationalEngine(chunk_size="auto")``).  Non-divisor sizes
+zero-pad the last chunk; the padding invariants are enforced by the schema
+(``true_cols ≤ n_chunks·chunk_size < true_cols + chunk_size``) so
+``to_dense`` can always strip the tail exactly.
+
 Higher-rank tensors keep their leading dimensions as additional key columns
 (the paper: "each dimension is broken into one or more chunk indices").
 """
@@ -42,6 +51,19 @@ class ChunkedSchema:
     chunk_size: int
     true_cols: int
 
+    def __post_init__(self):
+        # padding invariants: the chunk grid covers the true width with
+        # strictly less than one chunk of padding, so to_dense can strip
+        # the tail exactly and byte accounting knows the physical size
+        if self.chunk_size <= 0:
+            raise ValueError(f"chunk_size must be positive: {self}")
+        padded = self.n_chunks * self.chunk_size
+        if not (self.true_cols <= padded < self.true_cols + self.chunk_size):
+            raise ValueError(
+                f"inconsistent chunking for {self.name!r}: {self.n_chunks} "
+                f"chunks of {self.chunk_size} cannot represent "
+                f"{self.true_cols} columns")
+
     @property
     def n_chunks(self) -> int:
         return self.key_cols[-1][1]
@@ -49,6 +71,16 @@ class ChunkedSchema:
     @property
     def key_names(self) -> Tuple[str, ...]:
         return tuple(k for k, _ in self.key_cols)
+
+    @property
+    def padded_cols(self) -> int:
+        """Physical width of the chunked dimension (incl. zero padding)."""
+        return self.n_chunks * self.chunk_size
+
+    @property
+    def pad(self) -> int:
+        """Zero elements in the last chunk (0 for divisor chunk sizes)."""
+        return self.padded_cols - self.true_cols
 
     def ddl(self, dtype: str = "FLOAT") -> str:
         """CREATE TABLE statement for this schema (Appendix A style)."""

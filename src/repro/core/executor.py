@@ -86,15 +86,19 @@ def col_table_from_dense(arr, col_chunk: int, d_key: str = "d",
                          chunk_key: str = "c", vec_col: str = "chunk"
                          ) -> DenseTable:
     """Build a COL_CHUNK weight table from a dense matrix ``W ∈ R^{m×n}``:
-    transposed keys ``(d ∈ [n), c ∈ [m/cs'))`` with the vector chunking the
-    *output* dimension (planner ROW2COL physical layout)."""
+    transposed keys ``(d ∈ [n), c ∈ [⌈m/cs'⌉))`` with the vector chunking
+    the *output* dimension (planner ROW2COL physical layout).  Non-divisor
+    chunk sizes zero-pad the output tail (the planner itself only picks
+    divisors, but stored tables follow the §2.1 padding convention)."""
     arr = jnp.asarray(arr)
     m, n = arr.shape
-    if m % col_chunk != 0:
-        raise ValueError(f"output dim {m} not divisible by chunk {col_chunk}")
-    data = arr.T.reshape(n, m // col_chunk, col_chunk)
+    n_chunks = max(1, -(-m // col_chunk))
+    pad = n_chunks * col_chunk - m
+    if pad:
+        arr = jnp.pad(arr, ((0, pad), (0, 0)))
+    data = arr.T.reshape(n, n_chunks, col_chunk)
     return DenseTable(
-        keys=((d_key, n), (chunk_key, m // col_chunk)),
+        keys=((d_key, n), (chunk_key, n_chunks)),
         cols={vec_col: data},
         col_types={vec_col: ra.VEC(col_chunk)},
     )
@@ -124,15 +128,18 @@ def colh_table_from_dense(arr, col_chunk: int, head_key: str = "h",
     """Build a COL_CHUNK_HEADS weight table from a dense per-head projection
     ``W ∈ R^{H×dh×n}``: the head key stays a block key, the per-head output
     (head_dim) is transposed against the input features and chunked —
-    keys ``(h ∈ [H), d ∈ [n), c ∈ [dh/cs'))``, data ``[H, n, dh/cs', cs']``.
+    keys ``(h ∈ [H), d ∈ [n), c ∈ [⌈dh/cs'⌉))``, data
+    ``[H, n, ⌈dh/cs'⌉, cs']`` (non-divisor sizes zero-pad the tail).
     """
     arr = jnp.asarray(arr)
     H, dh, n = arr.shape
-    if dh % col_chunk != 0:
-        raise ValueError(f"head dim {dh} not divisible by chunk {col_chunk}")
-    data = arr.transpose(0, 2, 1).reshape(H, n, dh // col_chunk, col_chunk)
+    n_chunks = max(1, -(-dh // col_chunk))
+    pad = n_chunks * col_chunk - dh
+    if pad:
+        arr = jnp.pad(arr, ((0, 0), (0, pad), (0, 0)))
+    data = arr.transpose(0, 2, 1).reshape(H, n, n_chunks, col_chunk)
     return DenseTable(
-        keys=((head_key, H), (d_key, n), (chunk_key, dh // col_chunk)),
+        keys=((head_key, H), (d_key, n), (chunk_key, n_chunks)),
         cols={vec_col: data},
         col_types={vec_col: ra.VEC(col_chunk)},
     )
@@ -176,6 +183,39 @@ def permute_table_keys(table: DenseTable, key_order) -> DenseTable:
         col_types[c] = table.col_types[c]
     return DenseTable(keys=tuple((k, sizes[k]) for k in key_order),
                       cols=cols, col_types=col_types)
+
+
+def rechunk_chunked_table(table: DenseTable, chunk_size: int,
+                          true_width: int = 0) -> DenseTable:
+    """Re-chunk a chunked table ``(…, c, vec[cs])`` to a new physical chunk
+    size — the executor realisation of a planner per-table chunk-size
+    decision (SQL side: the table is simply loaded at the new DDL width).
+
+    The trailing chunk-key axis and vector payload are merged back to the
+    logical width (``true_width`` strips existing padding when given) and
+    re-split at ``chunk_size``, zero-padding the new tail if it does not
+    divide.  Leading keys are untouched.
+    """
+    if len(table.cols) != 1:
+        raise ValueError("rechunk expects a single-vector-column table")
+    (cname, nch) = table.keys[-1]
+    vec_col, arr = next(iter(table.cols.items()))
+    if not is_vec(table.col_types[vec_col]):
+        raise ValueError(f"column {vec_col} is not a vector column")
+    cs = arr.shape[-1]
+    width = true_width or nch * cs
+    flat = arr.reshape(*arr.shape[:-2], nch * cs)[..., :width]
+    n2 = max(1, -(-width // chunk_size))
+    pad = n2 * chunk_size - width
+    if pad:
+        pad_width = [(0, 0)] * (flat.ndim - 1) + [(0, pad)]
+        flat = jnp.pad(flat, pad_width)
+    data = flat.reshape(*flat.shape[:-1], n2, chunk_size)
+    return DenseTable(
+        keys=table.keys[:-1] + ((cname, n2),),
+        cols={vec_col: data},
+        col_types={vec_col: ra.VEC(chunk_size)},
+    )
 
 
 # ---------------------------------------------------------------------------

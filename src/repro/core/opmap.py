@@ -86,6 +86,10 @@ class RelPipeline:
     # layout name, plus the full LayoutPlan
     layouts: Dict[str, str] = dataclasses.field(default_factory=dict)
     layout_plan: Optional[object] = None
+    # planner-chosen physical chunk sizes, table name -> chunk (filled by
+    # plan_layouts under chunk_mode="auto"; tables absent here keep the
+    # pipeline chunking)
+    table_chunks: Dict[str, int] = dataclasses.field(default_factory=dict)
     # append-target cache tables: name -> append (position) key.  Filled by
     # map_concat_rows so the layout planner can find cache sites without
     # re-deriving them from the step list.

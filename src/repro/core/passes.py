@@ -160,7 +160,9 @@ def fuse_projections(root: RelNode, memo: Dict[int, RelNode] | None = None
 
 def postoptimize(pipeline: RelPipeline, layout_mode: str = "off",
                  cost_params=None, cache_mode: str = "off",
-                 budget_bytes=None) -> Dict[str, int]:
+                 budget_bytes=None, chunk_mode: str = "off",
+                 chunk_candidates=None, table_chunks=None,
+                 pool=None) -> Dict[str, int]:
     """Apply relational post-optimisations in place across all steps.
 
     ``layout_mode`` invokes the physical-layout planner (ROW2COL) as a
@@ -171,8 +173,12 @@ def postoptimize(pipeline: RelPipeline, layout_mode: str = "off",
     ``cache_mode`` re-keys the KV-cache tables (``"off"`` keeps the seed
     ``(tp, hk, c)`` order, ``"auto"`` is cost-based, or a layout name to
     force); ``budget_bytes`` bounds the duplicate residency of column
-    copies (the global residency pass).  The resulting ``LayoutPlan`` is
-    recorded on ``pipeline.layout_plan``.
+    copies (the global residency pass) — pass ``pool`` (a planner
+    ``ResidencyPool``) instead to share one budget across pipelines.
+    ``chunk_mode="auto"`` makes per-table physical chunk sizes a planner
+    decision priced over ``chunk_candidates`` (``table_chunks`` pins
+    specific tables to sizes an earlier plan chose).  The resulting
+    ``LayoutPlan`` is recorded on ``pipeline.layout_plan``.
     """
     before = count_nodes(pipeline)
     memo: Dict[int, RelNode] = {}
@@ -184,11 +190,15 @@ def postoptimize(pipeline: RelPipeline, layout_mode: str = "off",
     if layout_mode != "off" or cache_mode != "off":
         from repro.planner import plan_layouts
         plan = plan_layouts(pipeline, mode=layout_mode, params=cost_params,
-                            budget_bytes=budget_bytes, cache_mode=cache_mode)
+                            budget_bytes=budget_bytes, cache_mode=cache_mode,
+                            chunk_mode=chunk_mode,
+                            chunk_candidates=chunk_candidates,
+                            table_chunks=table_chunks, pool=pool)
         stats["row2col_sites"] = len(plan.decisions)
         stats["row2col_rewrites"] = len(plan.col_decisions)
         stats["cache_relayouts"] = sum(
             1 for d in plan.cache_decisions if d.layout != "row_chunk")
+        stats["chunk_planned_tables"] = len(pipeline.table_chunks)
     stats["rel_nodes_after"] = count_nodes(pipeline)
     return stats
 

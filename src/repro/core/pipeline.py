@@ -29,8 +29,11 @@ def run_pipeline(
 
     If the pipeline was layout-planned (``repro.planner.plan_layouts``),
     the plan's COL_CHUNK tables are materialised into ``env`` on first use
-    (transposed from the resident row-layout tables); pass ``layout_plan``
-    to override the plan recorded on the pipeline.
+    (transposed from the resident row-layout tables, at the planner's
+    per-table chunk size), and ROW_CHUNK tables the planner re-chunked
+    (``chunk_mode="auto"``) are replaced by their re-chunked twins so the
+    Scans see the declared physical schema; pass ``layout_plan`` to
+    override the plan recorded on the pipeline.
     """
     scalars = scalars or {}
     # .copy() (not dict(...)) so lazy paging environments keep their

@@ -263,16 +263,27 @@ class SQLGenerator:
         """
         out: List[str] = []
         layouts = getattr(self.p, "layouts", {}) or {}
+        chunks = getattr(self.p, "table_chunks", {}) or {}
         plan = getattr(self.p, "layout_plan", None)
+
+        def annotate(name: str, ddl: str) -> str:
+            # planner annotations: physical layout and (when the chunk
+            # size is a planner decision) the per-table chunk size — the
+            # DDL's FLOAT[n] width is normative, the comment marks it as
+            # planner-chosen rather than the pipeline default
+            ann = []
+            if name in layouts:
+                ann.append(f"layout: {layouts[name]}")
+            if name in chunks:
+                ann.append(f"chunk_size: {chunks[name]} (planner)")
+            return f"-- {'; '.join(ann)}\n{ddl}" if ann else ddl
+
         if include_ddl:
             if self.dialect == "duckdb":
                 out.append(UDF_PRELUDE_DUCKDB)
             out.append("-- weight table DDL (paper §3.1 data conversion)")
             for name, schema in self.p.weight_schemas.items():
-                ddl = self._ddl(name, schema)
-                if name in layouts:
-                    ddl = f"-- layout: {layouts[name]}\n{ddl}"
-                out.append(ddl)
+                out.append(annotate(name, self._ddl(name, schema)))
             if plan is not None and plan.col_decisions:
                 # the rewritten pipeline no longer scans the row-layout
                 # sources, but the conversion reads them — keep their DDL
@@ -282,12 +293,9 @@ class SQLGenerator:
                     out.append(self._ddl(d.table, d.row_schema))
             out.append("-- input / cache table DDL")
             for name, schema in self.p.input_schemas.items():
-                ddl = self._ddl(name, schema)
-                if name in layouts:
-                    # planner-chosen cache layout: the key-column order IS
-                    # the physical clustering (row_chunk / head_major / …)
-                    ddl = f"-- layout: {layouts[name]}\n{ddl}"
-                out.append(ddl)
+                # planner-chosen cache layout: the key-column order IS
+                # the physical clustering (row_chunk / head_major / …)
+                out.append(annotate(name, self._ddl(name, schema)))
         if include_conversion and plan is not None and plan.col_decisions:
             out.append("-- ROW2COL data conversion (planner layout "
                        "choices; run after loading the row tables)")

@@ -37,20 +37,45 @@ matmul: every layout scans the same ``S · H_kv · n_chunks`` cache rows per
 join, so the decision is driven by *locality* — the number of contiguous
 row segments the per-head history scan and the per-token INSERT touch
 (:func:`cache_layout_cost`), weighted by ``CostParams.seek_weight``.
+
+Chunk size as a degree of freedom
+---------------------------------
+The paper picks ``chunk_size`` by a brute-force sweep (Tab. 1); here it is
+a *priced* planner decision.  A weight table may be stored at a physical
+chunk size different from the pipeline's activation chunking:
+
+  ROW_CHUNK at ``cs_w ≠ cs``  — the activation must be re-chunked to
+      ``cs_w`` before the join (UNNEST + key merge/split + collect):
+      ``T·n`` unnested rows plus ``T·⌈n/cs_w⌉`` collect groups.
+  COL_CHUNK at ``cs' ≠ cs_out`` — the already-chunked output must be
+      re-chunked back to the consumer chunking (same adapter shape over
+      the ``T·m`` output elements).
+
+:func:`row_chunk_cost` / :func:`col_chunk_cost` take the adapter into
+account via their ``act_chunk`` / ``out_chunk`` keywords; the candidate
+set is ``CHUNK_CANDIDATES`` filtered to divisors of the chunked dimension
+(:func:`divisor_candidates` — divisors keep the physical tables pad-free,
+so a column copy's residency bytes equal the logical weight bytes).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, TYPE_CHECKING
+import math
+from typing import Optional, Tuple, TYPE_CHECKING
 
 from repro.planner.layout import (
     CACHE_HEAD_MAJOR, CACHE_POS_MAJOR, CACHE_ROW_CHUNK, COL_CHUNK,
-    COL_CHUNK_HEADS, ROW_CHUNK,
+    COL_CHUNK_HEADS, ROW_CHUNK, divisor_candidates,
 )
 
 if TYPE_CHECKING:  # pragma: no cover
     from repro.planner.layout import CacheSite, MatmulSite
+
+# Candidate physical chunk sizes the planner prices jointly with layout
+# (the paper's Tab. 1 sweep grid).  Sites additionally admit their seed
+# chunk size, so tiny test models degrade gracefully.
+CHUNK_CANDIDATES: Tuple[int, ...] = (32, 64, 128, 256, 512)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -73,41 +98,70 @@ class MatmulCost:
     join_rows: int      # rows emitted by the join (fan-out)
     agg_groups: int     # GROUP BY output cardinality
     aux_rows: int       # re-chunk tail (row) / unnest (col) rows
+    chunk_size: int = 0     # physical chunk of the priced weight table
+    rechunk_rows: int = 0   # chunk-size adapter: rows unnested
+    rechunk_groups: int = 0  # chunk-size adapter: collect groups
 
     def total(self, params: CostParams) -> float:
-        rows = self.scan_rows + self.join_rows + self.aux_rows
+        rows = (self.scan_rows + self.join_rows + self.aux_rows
+                + self.rechunk_rows)
         return (params.row_weight * rows
-                + params.group_weight * self.agg_groups)
+                + params.group_weight * (self.agg_groups
+                                         + self.rechunk_groups))
 
 
-def row_chunk_cost(T: int, in_f: int, out_f: int, cs: int) -> MatmulCost:
-    n_chunks = in_f // cs
+def row_chunk_cost(T: int, in_f: int, out_f: int, cs: int,
+                   act_chunk: Optional[int] = None) -> MatmulCost:
+    """ROW_CHUNK cost with the weight table stored at chunk ``cs``.
+
+    ``act_chunk`` is the pipeline's activation chunking; when it differs
+    from ``cs`` the activation pays a re-chunk adapter before the join.
+    """
+    n_chunks = max(1, math.ceil(in_f / cs))
+    rechunk = act_chunk is not None and act_chunk != cs
     return MatmulCost(
         layout=ROW_CHUNK,
         scan_rows=out_f * n_chunks + T * n_chunks,
         join_rows=T * n_chunks * out_f,
         agg_groups=T * out_f,
         aux_rows=2 * T * out_f,
+        chunk_size=cs,
+        rechunk_rows=T * in_f if rechunk else 0,
+        rechunk_groups=T * n_chunks if rechunk else 0,
     )
 
 
-def col_chunk_cost(T: int, in_f: int, out_f: int, cs_out: int) -> MatmulCost:
-    n_out_chunks = out_f // cs_out
+def col_chunk_cost(T: int, in_f: int, out_f: int, cs_out: int,
+                   out_chunk: Optional[int] = None) -> MatmulCost:
+    """COL_CHUNK cost with the transposed table chunked at ``cs_out``.
+
+    ``out_chunk`` is the chunking downstream consumers expect; when it
+    differs from ``cs_out`` the already-chunked output pays a re-chunk
+    tail back to the consumer chunking.
+    """
+    n_out_chunks = max(1, math.ceil(out_f / cs_out))
+    rechunk = out_chunk is not None and out_chunk != cs_out
     return MatmulCost(
         layout=COL_CHUNK,
         scan_rows=in_f * n_out_chunks + T * in_f,
         join_rows=T * in_f * n_out_chunks,
         agg_groups=T * n_out_chunks,
         aux_rows=T * in_f,  # UNNEST of the activation chunks
+        chunk_size=cs_out,
+        rechunk_rows=T * out_f if rechunk else 0,
+        rechunk_groups=(T * max(1, math.ceil(out_f / out_chunk))
+                        if rechunk else 0),
     )
 
 
 def colh_chunk_cost(T: int, n_heads: int, in_f: int, head_dim: int,
-                    cs_out: int) -> MatmulCost:
+                    cs_out: int, out_chunk: Optional[int] = None
+                    ) -> MatmulCost:
     """Head-blocked column cost: the head key is a pure block dimension, so
     the shape is the plain column cost over ``m = H · dh`` total output
     features chunked per head (H · dh/cs' output chunks)."""
-    c = col_chunk_cost(T, in_f, n_heads * head_dim, cs_out)
+    c = col_chunk_cost(T, in_f, n_heads * head_dim, cs_out,
+                       out_chunk=out_chunk)
     return dataclasses.replace(c, layout=COL_CHUNK_HEADS)
 
 
@@ -126,6 +180,42 @@ def site_costs(site: "MatmulSite", params: CostParams):
     else:
         col = col_chunk_cost(T, site.in_features, out_total, site.col_chunk)
     return row.total(params), col.total(params)
+
+
+def site_chunk_costs(site: "MatmulSite", params: CostParams,
+                     candidates=()):
+    """Joint (layout, chunk_size) pricing for a matched matmul site.
+
+    Returns ``(row_costs, col_costs)`` — two ``{chunk_size: MatmulCost}``
+    dicts over the admissible candidate sizes (divisors of the chunked
+    dimension, always including the seed sizes).  Non-seed sizes carry
+    the re-chunk adapter terms.
+    """
+    T = params.seq_len
+    out_total = site.n_heads * site.out_features
+    row_costs = {
+        cs: row_chunk_cost(T, site.in_features, out_total, cs,
+                           act_chunk=site.row_chunk)
+        for cs in site.row_chunk_candidates(candidates)
+    }
+    col_costs = {}
+    for cs in site.col_chunk_candidates(candidates):
+        if site.is_head_site:
+            c = colh_chunk_cost(T, site.n_heads, site.in_features,
+                                site.out_features, cs,
+                                out_chunk=site.col_chunk)
+        else:
+            c = col_chunk_cost(T, site.in_features, out_total, cs,
+                               out_chunk=site.col_chunk)
+        col_costs[cs] = c
+    return row_costs, col_costs
+
+
+def best_chunk(costs, params: CostParams, seed: int):
+    """(chunk_size, total) minimising ``costs``; ties prefer the seed size,
+    then the smaller candidate (deterministic plans)."""
+    return min(((cs, c.total(params)) for cs, c in costs.items()),
+               key=lambda kv: (kv[1], kv[0] != seed, kv[0]))
 
 
 def choose_layout(site: "MatmulSite", params: Optional[CostParams] = None
@@ -202,6 +292,30 @@ def cache_site_costs(site: "CacheSite", params: CostParams):
                                   new_tokens=params.seq_len).total(params)
         for layout in CACHE_LAYOUTS
     }
+
+
+def cache_chunk_costs(site: "CacheSite", params: CostParams,
+                      candidates=()):
+    """{(layout, chunk_size): total} over the cache's admissible chunk sizes.
+
+    A cache table's chunk size is tied to the pipeline chunking (the
+    append path and both attention joins share it with the Q/K/V
+    activations), so these prices inform the *global* chunk-size choice
+    (``RelationalEngine(chunk_size="auto")`` /
+    :func:`repro.planner.calibrate.choose_base_chunk_size`) rather than a
+    per-table rewrite; the planner records them on the
+    :class:`~repro.planner.row2col.CacheDecision` for inspection.
+    """
+    from repro.planner.layout import CACHE_LAYOUTS
+    head_dim = site.head_dim
+    out = {}
+    for cs in site.chunk_candidates(candidates):
+        nch = max(1, head_dim // cs)
+        for layout in CACHE_LAYOUTS:
+            out[(layout, cs)] = cache_layout_cost(
+                layout, site.n_pos, site.n_heads, nch,
+                new_tokens=params.seq_len).total(params)
+    return out
 
 
 def choose_cache_layout(site: "CacheSite",

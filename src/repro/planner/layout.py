@@ -87,6 +87,16 @@ CACHE_POS_MAJOR = "pos_major"
 CACHE_LAYOUTS = tuple(CACHE_KEY_ORDERS)
 
 
+def divisor_candidates(width: int, candidates, always=()) -> Tuple[int, ...]:
+    """Chunk sizes from ``candidates`` that divide ``width`` (pad-free
+    physical tables — a column copy's residency bytes equal the logical
+    weight bytes), plus any ``always`` entries (the seed size stays
+    admissible)."""
+    out = {c for c in candidates if 0 < c <= width and width % c == 0}
+    out.update(c for c in always if c)
+    return tuple(sorted(out))
+
+
 def col_table_name(row_table: str) -> str:
     return row_table + COL_SUFFIX
 
@@ -188,6 +198,30 @@ class MatmulSite:
     def weight_bytes(self) -> int:
         """f32 bytes of one physical copy of this weight (either layout)."""
         return 4 * self.n_heads * self.out_features * self.in_features
+
+    @property
+    def seq_len(self) -> int:
+        """Tokens per invocation at this site: the product of the
+        activation's base keys excluding the head block key."""
+        t = 1
+        for k, s in self.base_keys:
+            if k != self.head_key:
+                t *= s
+        return t
+
+    def row_chunk_candidates(self, candidates=()) -> Tuple[int, ...]:
+        """Physical chunk sizes admissible for the ROW_CHUNK table: sizes
+        dividing the *input* dimension (pad-free), plus the seed size."""
+        return divisor_candidates(self.in_features, candidates,
+                                   always=(self.row_chunk,))
+
+    def col_chunk_candidates(self, candidates=()) -> Tuple[int, ...]:
+        """Physical chunk sizes admissible for the column table: sizes
+        dividing the *output* dimension (head_dim for head sites — the
+        head key is a block key, so chunking never crosses it), plus the
+        seed size."""
+        return divisor_candidates(self.out_features, candidates,
+                                   always=(self.col_chunk,))
 
 
 def _dot_cols(expr) -> Optional[Tuple[str, str]]:
@@ -362,6 +396,20 @@ class CacheSite:
         order = {self.pos_key: 0, self.head_key: 1, self.chunk_key: 2}
         keys = tuple(sorted(s.keys, key=lambda k: order[k[0]]))
         return RelSchema(keys=keys, cols=s.cols)
+
+    @property
+    def head_dim(self) -> int:
+        """Width of the cached per-head vectors (n_chunks · chunk)."""
+        return self.n_chunks * self.chunk
+
+    def chunk_candidates(self, candidates=()) -> Tuple[int, ...]:
+        """Chunk sizes admissible for this cache table: divisors of the
+        head dim, plus the current size.  The cache chunking is tied to
+        the pipeline chunking (appends and both attention joins share it
+        with Q/K/V), so these inform the *global* chunk-size choice
+        rather than a per-table rewrite."""
+        return divisor_candidates(self.head_dim, candidates,
+                                  always=(self.chunk,))
 
 
 def match_cache_sites(pipeline) -> Tuple[CacheSite, ...]:

@@ -53,12 +53,14 @@ order), ``"auto"`` (cost-based), or a layout name to force.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Dict, List, Optional
 
+from repro.core import relational as ra
 from repro.core.opmap import RelPipeline
 from repro.core.relational import (
-    GroupAgg, Join, Project, RelNode, Scan, Unnest, add, col, const, key,
-    mul,
+    Collect, GroupAgg, Join, Project, RelNode, RelSchema, Scan, Unnest, add,
+    col, const, floordiv, key, mod, mul,
 )
 from repro.planner import cost as cost_mod
 from repro.planner.cost import CostParams
@@ -70,11 +72,52 @@ from repro.planner.layout import (
 
 MODES = ("off", "auto", "col")
 CACHE_MODES = ("off", "auto") + CACHE_LAYOUTS
+CHUNK_MODES = ("off", "auto")
+
+
+@dataclasses.dataclass
+class ResidencyPool:
+    """Shared residency budget across pipelines (ROADMAP "residency budget
+    across pipelines").
+
+    The serving engine plans its decode and prefill pipelines separately,
+    but their column copies land in one physical environment — a column
+    table admitted by one plan is *free* for every later plan (the copy is
+    already resident), and new copies from all plans draw on the same
+    ``budget_bytes``.  The pool also remembers each committed table's
+    chunk size; later plans sharing the pool are pinned to it
+    (``plan_layouts`` folds ``chunks`` into its forced per-table sizes),
+    so two pipelines can never declare different physical widths for one
+    shared table.  ``plan_layouts`` creates a throwaway single-plan pool
+    when none is passed, which reproduces the old per-pipeline
+    accounting.
+    """
+
+    budget_bytes: Optional[int] = None
+    spent: int = 0
+    tables: Dict[str, int] = dataclasses.field(default_factory=dict)
+    chunks: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def admits(self, table: str, nbytes: int) -> bool:
+        return (table in self.tables or self.budget_bytes is None
+                or self.spent + nbytes <= self.budget_bytes)
+
+    def admit(self, table: str, nbytes: int, chunk_size: int = 0) -> int:
+        """Commit a column copy; returns the *new* bytes it costs (0 when
+        an earlier plan already committed the same table)."""
+        if table in self.tables:
+            return 0
+        self.tables[table] = nbytes
+        if chunk_size:
+            self.chunks[table] = chunk_size
+        self.spent += nbytes
+        return nbytes
 
 
 @dataclasses.dataclass(frozen=True)
 class LayoutDecision:
-    """One priced matmul site and the layout chosen for its weight table."""
+    """One priced matmul site and the (layout, chunk_size) pair chosen for
+    its weight table."""
 
     table: str
     col_table: str
@@ -91,12 +134,22 @@ class LayoutDecision:
     row_schema: object = None  # RelSchema of the ROW_CHUNK source table
     head_key: Optional[str] = None  # set for COL_CHUNK_HEADS sites
     n_heads: int = 1
-    weight_bytes: int = 0           # f32 bytes of one physical copy
+    weight_bytes: int = 0           # f32 bytes of the chosen physical copy
     denied_by_budget: bool = False  # col preferred but residency budget full
+    chunk_size: int = 0             # planner-chosen physical chunk of the
+    #                                 stored table (row table for ROW_CHUNK,
+    #                                 column table otherwise)
 
     @property
     def is_head_site(self) -> bool:
         return self.head_key is not None
+
+    @property
+    def physical_chunk(self) -> int:
+        """Chunk size of the stored table (falls back to the seed sizes)."""
+        if self.chunk_size:
+            return self.chunk_size
+        return self.row_chunk if self.layout == ROW_CHUNK else self.col_chunk
 
 
 @dataclasses.dataclass(frozen=True)
@@ -107,6 +160,10 @@ class CacheDecision:
     layout: str
     key_order: tuple               # physical key-name order after planning
     costs: dict = dataclasses.field(default_factory=dict)  # layout -> total
+    chunk_size: int = 0            # physical chunk (tied to the pipeline)
+    chunk_costs: dict = dataclasses.field(default_factory=dict)
+    #                                (layout, chunk_size) -> total (priced
+    #                                for the global chunk-size choice)
 
 
 @dataclasses.dataclass
@@ -150,19 +207,32 @@ class LayoutPlan:
         (e.g. the paged ``LazyEnv``) are left alone for weights but still
         get their cache tables aligned.
         """
+        from repro.core import relational as ra
         from repro.core.executor import (permute_table_keys,
+                                         rechunk_chunked_table,
                                          transpose_chunked_table,
                                          transpose_head_chunked_table)
         if not getattr(env, "resolves_layouts", False):
+            for d in self.decisions:
+                # planner-re-chunked ROW tables: replace the stored copy
+                if (d.layout == ROW_CHUNK and d.chunk_size
+                        and d.chunk_size != d.row_chunk):
+                    tbl = env.get(d.table) if hasattr(env, "get") else None
+                    if tbl is None:
+                        continue
+                    vec_col = next(iter(tbl.cols))
+                    if ra.vec_width(tbl.col_types[vec_col]) != d.chunk_size:
+                        env[d.table] = rechunk_chunked_table(tbl,
+                                                             d.chunk_size)
             for d in self.col_decisions:
                 if d.col_table in env:
                     continue
                 if d.is_head_site:
                     env[d.col_table] = transpose_head_chunked_table(
-                        env[d.table], d.col_chunk)
+                        env[d.table], d.physical_chunk)
                 else:
                     env[d.col_table] = transpose_chunked_table(
-                        env[d.table], d.col_chunk)
+                        env[d.table], d.physical_chunk)
         for cd in self.cache_decisions:
             tbl = env.get(cd.table) if hasattr(env, "get") else None
             if tbl is not None and tbl.key_names != cd.key_order:
@@ -188,7 +258,7 @@ def conversion_sql(decisions, dialect: str = "duckdb") -> str:
     for d in decisions:
         head = d.row_keys[:-2]            # () or (h,)
         jk, ck = d.row_keys[-2:]          # row key folded + chunk key
-        cs_in, cs_out = d.row_chunk, d.col_chunk
+        cs_in, cs_out = d.row_chunk, d.physical_chunk
         hsel = "".join(f"{h}, " for h in head)
         if dialect == "duckdb":
             flat = (f"SELECT {hsel}{jk}, {ck} * {cs_in} + e.e AS d, "
@@ -239,16 +309,26 @@ def _fresh(name: str, taken) -> str:
     return name
 
 
-def _build_col_plan(site: MatmulSite) -> RelNode:
+def _build_col_plan(site: MatmulSite,
+                    chunk_size: Optional[int] = None) -> RelNode:
     """Construct the column-layout plan for a matched matmul site.
 
     Output schema is identical to the ROW_CHUNK plan's (same keys, same
     chunked vector column), so downstream consumers are unaffected.  For
     head sites the transposed table keeps the head block key and the GROUP
     BY is ``(…, h, c)``.
+
+    ``chunk_size`` sets the transposed table's physical output chunking;
+    when it differs from the consumer chunking (``site.col_chunk``) the
+    already-chunked aggregate output is re-chunked back via an
+    UNNEST + key merge/split + collect tail (priced by the cost model's
+    ``rechunk_*`` terms).
     """
+    csp = chunk_size or site.col_chunk
     base = site.base_keys
     xs_keys = {k for k, _ in base} | {site.join.on[0][1].name}
+    if site.head_key:
+        xs_keys.add(site.head_key)
     e_name = _fresh("e", xs_keys)
     d_name = _fresh("d", xs_keys)
     c_in = site.join.on[0][1].name  # activation chunk key
@@ -266,22 +346,95 @@ def _build_col_plan(site: MatmulSite) -> RelNode:
     )
     if site.is_head_site:
         schema = colh_schema(site.n_heads, site.in_features,
-                             site.out_features, site.col_chunk,
+                             site.out_features, csp,
                              head_key=site.head_key, d_key="d",
                              chunk_key=out_chunk_key)
         group_tail = [site.head_key, out_chunk_key]
     else:
-        schema = col_schema(site.in_features, site.out_features,
-                            site.col_chunk, d_key="d",
+        schema = col_schema(site.in_features, site.n_heads
+                            * site.out_features, csp, d_key="d",
                             chunk_key=out_chunk_key)
         group_tail = [out_chunk_key]
     scan = Scan(table=site.col_table, table_schema=schema)
     j = Join(left=p, right=scan, on=[("d", key(d_name))])
-    return GroupAgg(
+    agg = GroupAgg(
         input=j,
         group_keys=[k for k, _ in base] + group_tail,
         aggs=[(site.out_col, "SUM", mul(col("xs"), col("chunk")))],
     )
+    if csp == site.col_chunk:
+        return agg
+    return _rechunk_tail(agg, site, csp)
+
+
+def _rechunk_adapter(plan: RelNode, lead_keys, chunk_key: str, width: int,
+                     from_cs: int, to_cs: int, vec_col: str,
+                     merged_key: str = "d") -> RelNode:
+    """UNNEST → key-merge π → key-split π → collect: re-chunk ``plan``'s
+    ``(…, chunk_key, vec[from_cs])`` relation to ``vec[to_cs]`` over the
+    same ``width``-wide folded dimension.  The shared shape behind both
+    chunk-size adapters (activation re-chunk before a ROW join, output
+    tail after a column aggregate)."""
+    lead_keys = list(lead_keys)
+    taken = {k for k, _ in lead_keys} | {chunk_key}
+    e_name = _fresh("e", taken)
+    d_name = _fresh(merged_key, taken)
+    u = Unnest(input=plan, vec_col=vec_col, elem_key=e_name, elem_col="x")
+    merge = Project(
+        input=u,
+        keys=[(k, s, key(k)) for k, s in lead_keys]
+        + [(d_name, width,
+            add(mul(key(chunk_key), const(from_cs)), key(e_name)))],
+        exprs=[("x", None, col("x"))],
+    )
+    split = Project(
+        input=merge,
+        keys=[(k, s, key(k)) for k, s in lead_keys]
+        + [(chunk_key, width // to_cs, floordiv(key(d_name), const(to_cs))),
+           (e_name, to_cs, mod(key(d_name), const(to_cs)))],
+        exprs=[("x", None, col("x"))],
+    )
+    return Collect(input=split, fold_key=e_name, scalar_col="x",
+                   vec_col=vec_col)
+
+
+def _rechunk_tail(agg: RelNode, site: MatmulSite, csp: int) -> RelNode:
+    """Re-chunk a column plan's ``(…, c'∈[m/cs'], vec[cs'])`` output back to
+    the consumer chunking ``(…, c∈[m/cs_out], vec[cs_out])``."""
+    out_chunk_key = site.rechunk_proj.keys[-2][0]
+    head = [(site.head_key, site.n_heads)] if site.is_head_site else []
+    return _rechunk_adapter(
+        agg, list(site.base_keys) + head, out_chunk_key,
+        width=site.out_features,  # per head block for head sites
+        from_cs=csp, to_cs=site.col_chunk, vec_col=site.out_col,
+        merged_key="r")
+
+
+def _build_rechunked_row_plan(site: MatmulSite, cs_w: int) -> RelNode:
+    """ROW_CHUNK plan against a weight table stored at chunk ``cs_w``
+    (≠ the pipeline's activation chunking): the activation is re-chunked
+    to ``cs_w`` before the join (UNNEST + key merge/split + collect), the
+    weight Scan reads the ``cs_w``-chunked schema, and the aggregate /
+    re-chunk-to-output tail are rebuilt unchanged."""
+    c_in = site.join.on[0][1].name          # activation chunk key name
+    ws = site.weight_scan.table_schema
+    cname = ws.keys[-1][0]                  # weight chunk key name
+    wcol, _ = ws.cols[0]
+    n = site.in_features
+    x2 = _rechunk_adapter(site.x_plan, site.base_keys, c_in, width=n,
+                          from_cs=site.row_chunk, to_cs=cs_w,
+                          vec_col=site.x_col)
+    wschema = RelSchema(keys=ws.keys[:-1] + ((cname, n // cs_w),),
+                        cols=((wcol, ra.VEC(cs_w)),))
+    scan = Scan(table=site.table, table_schema=wschema)
+    j = Join(left=x2, right=scan, on=[(cname, key(c_in))])
+    agg = GroupAgg(input=j, group_keys=list(site.agg.group_keys),
+                   aggs=list(site.agg.aggs))
+    proj = Project(input=agg, keys=list(site.rechunk_proj.keys),
+                   exprs=list(site.rechunk_proj.exprs))
+    return Collect(input=proj, fold_key=site.root.fold_key,
+                   scalar_col=site.root.scalar_col,
+                   vec_col=site.root.vec_col)
 
 
 def _replace_nodes(pipeline: RelPipeline, mapping: Dict[int, RelNode]):
@@ -313,16 +466,22 @@ def _replace_nodes(pipeline: RelPipeline, mapping: Dict[int, RelNode]):
         fix_rel(rel)
 
 
-def _site_seq_len(site: MatmulSite) -> int:
-    t = 1
-    for k, s in site.base_keys:
-        if k != site.head_key:
-            t *= s
-    return t
-
-
 def _decision_for(site: MatmulSite, layout: str, row_cost: float,
-                  col_cost: float, denied: bool = False) -> LayoutDecision:
+                  col_cost: float, denied: bool = False,
+                  chunk_size: int = 0,
+                  weight_bytes: Optional[int] = None,
+                  stored_row_chunk: int = 0) -> LayoutDecision:
+    ws = site.weight_scan.table_schema
+    row_chunk, row_schema = site.row_chunk, ws
+    if stored_row_chunk and stored_row_chunk != site.row_chunk:
+        # the shared row source is physically stored at a pool-pinned width
+        # (an earlier plan re-chunked it): the conversion SQL must read it
+        # at that width, not at this pipeline's activation chunking
+        row_chunk = stored_row_chunk
+        nch = max(1, math.ceil(site.in_features / stored_row_chunk))
+        row_schema = RelSchema(
+            keys=ws.keys[:-1] + ((ws.keys[-1][0], nch),),
+            cols=((ws.cols[0][0], ra.VEC(stored_row_chunk)),))
     return LayoutDecision(
         table=site.table,
         col_table=site.col_table,
@@ -330,34 +489,54 @@ def _decision_for(site: MatmulSite, layout: str, row_cost: float,
         step_name=site.step_name,
         in_features=site.in_features,
         out_features=site.out_features,
-        row_chunk=site.row_chunk,
+        row_chunk=row_chunk,
         col_chunk=site.col_chunk,
         row_cost=row_cost,
         col_cost=col_cost,
-        row_keys=tuple(k for k, _ in site.weight_scan.table_schema.keys),
-        vec_col=site.weight_scan.table_schema.cols[0][0],
-        row_schema=site.weight_scan.table_schema,
+        row_keys=tuple(k for k, _ in ws.keys),
+        vec_col=ws.cols[0][0],
+        row_schema=row_schema,
         head_key=site.head_key,
         n_heads=site.n_heads,
-        weight_bytes=site.weight_bytes,
+        weight_bytes=(site.weight_bytes if weight_bytes is None
+                      else weight_bytes),
         denied_by_budget=denied,
+        chunk_size=chunk_size,
     )
 
 
 def plan_layouts(pipeline: RelPipeline, mode: str = "auto",
                  params: Optional[CostParams] = None,
                  budget_bytes: Optional[int] = None,
-                 cache_mode: str = "off") -> LayoutPlan:
+                 cache_mode: str = "off",
+                 chunk_mode: str = "off",
+                 chunk_candidates=None,
+                 table_chunks: Optional[Dict[str, int]] = None,
+                 pool: Optional[ResidencyPool] = None) -> LayoutPlan:
     """Run the layout planner over a compiled pipeline (in place).
 
     ``budget_bytes`` bounds the *duplicate* residency column copies add on
     top of the always-resident row tables (the pager working-set budget);
-    ``None`` means unbounded.  ``cache_mode`` re-keys the KV-cache tables:
+    ``None`` means unbounded.  Pass ``pool`` (a :class:`ResidencyPool`)
+    instead to share one budget across several pipelines — copies an
+    earlier plan already committed are free here, and new copies draw on
+    the shared budget.  ``cache_mode`` re-keys the KV-cache tables:
     ``"off"`` keeps the seed order, ``"auto"`` is cost-based, or pass a
     layout name (``"row_chunk"`` / ``"head_major"`` / ``"pos_major"``) to
     force one — every pipeline sharing a session environment must agree on
     the cache layout (the serving engine forces its prefill pipelines to
     the decode choice).
+
+    ``chunk_mode="auto"`` additionally makes the physical chunk size of
+    every weight table a planner decision: sites are priced over
+    ``chunk_candidates`` (default :data:`~repro.planner.cost.
+    CHUNK_CANDIDATES`) jointly with layout, the residency pass admits
+    (layout, chunk_size) pairs by benefit per byte, and winning tables are
+    rewritten with re-chunk adapters where the stored chunking differs
+    from the pipeline's.  ``table_chunks`` forces per-table sizes (the
+    serving engine pins its prefill plans to the decode plan's choices —
+    both pipelines scan the same physical tables).  Chosen sizes are
+    recorded on ``pipeline.table_chunks``.
 
     Returns the :class:`LayoutPlan`; also records it on
     ``pipeline.layout_plan`` and the per-table choices on
@@ -368,18 +547,94 @@ def plan_layouts(pipeline: RelPipeline, mode: str = "auto",
         raise ValueError(f"layout mode {mode!r} not in {MODES}")
     if cache_mode not in CACHE_MODES:
         raise ValueError(f"cache mode {cache_mode!r} not in {CACHE_MODES}")
-    plan = LayoutPlan(mode=mode, budget_bytes=budget_bytes)
+    if chunk_mode not in CHUNK_MODES:
+        raise ValueError(f"chunk mode {chunk_mode!r} not in {CHUNK_MODES}")
+    if chunk_mode == "auto" and mode == "off":
+        raise ValueError("chunk_mode='auto' requires layout planning "
+                         "(mode 'auto' or 'col')")
+    if pool is None:
+        pool = ResidencyPool(budget_bytes=budget_bytes)
+    plan = LayoutPlan(mode=mode, budget_bytes=pool.budget_bytes)
     if mode != "off":
-        _plan_weight_layouts(pipeline, plan, mode, params, budget_bytes)
+        # tables an earlier plan committed through a shared pool are pinned
+        # to their committed chunk size (one physical table, one width);
+        # explicit table_chunks take precedence
+        forced = dict(pool.chunks)
+        forced.update(table_chunks or {})
+        _plan_weight_layouts(pipeline, plan, mode, params, pool,
+                             chunk_mode, chunk_candidates, forced)
     if cache_mode != "off":
-        _plan_cache_layouts(pipeline, plan, cache_mode, params)
+        _plan_cache_layouts(pipeline, plan, cache_mode, params,
+                            chunk_mode, chunk_candidates)
     pipeline.layout_plan = plan
     return plan
 
 
+def _site_options(site: MatmulSite, p: CostParams, chunk_mode: str,
+                  chunk_candidates, forced: Dict[str, int]):
+    """Best (chunk_size, total) per layout for one site.
+
+    With ``chunk_mode="off"`` the candidate sets collapse to the seed
+    sizes, reproducing the fixed-chunk planner exactly.  Forced per-table
+    sizes (``forced``) override the candidate set for that table.
+    """
+    cands = tuple(chunk_candidates or cost_mod.CHUNK_CANDIDATES) \
+        if chunk_mode == "auto" else ()
+    row_costs, col_costs = cost_mod.site_chunk_costs(site, p, cands)
+    if site.table in forced:
+        # a forced size outside the candidate grid is priced directly; it
+        # only has to be legal (pad-free) for the chunked dimension
+        cs = forced[site.table]
+        if site.in_features % cs != 0:
+            raise ValueError(
+                f"forced chunk size {cs} for {site.table!r} does not "
+                f"divide its input dimension {site.in_features}")
+        row_costs = {cs: row_costs.get(cs) or cost_mod.row_chunk_cost(
+            p.seq_len, site.in_features,
+            site.n_heads * site.out_features, cs,
+            act_chunk=site.row_chunk)}
+    if site.col_table in forced:
+        cs = forced[site.col_table]
+        if site.out_features % cs != 0:
+            raise ValueError(
+                f"forced chunk size {cs} for {site.col_table!r} does not "
+                f"divide its output dimension {site.out_features}")
+        if cs not in col_costs:
+            if site.is_head_site:
+                c = cost_mod.colh_chunk_cost(
+                    p.seq_len, site.n_heads, site.in_features,
+                    site.out_features, cs, out_chunk=site.col_chunk)
+            else:
+                c = cost_mod.col_chunk_cost(
+                    p.seq_len, site.in_features,
+                    site.n_heads * site.out_features, cs,
+                    out_chunk=site.col_chunk)
+            col_costs[cs] = c
+        col_costs = {cs: col_costs[cs]}
+    row_cs, row_cost = cost_mod.best_chunk(row_costs, p, site.row_chunk)
+    col_cs, col_cost = cost_mod.best_chunk(col_costs, p, site.col_chunk)
+    return row_cs, row_cost, col_cs, col_cost
+
+
+def _col_bytes(site: MatmulSite, cs: int) -> int:
+    """f32 bytes of the column copy chunked at ``cs`` along the *output*
+    dimension (padding included — non-divisor sizes pay for their tail)."""
+    nch = max(1, math.ceil(site.out_features / cs))
+    return 4 * site.n_heads * site.in_features * nch * cs
+
+
+def _row_bytes(site: MatmulSite, cs: int) -> int:
+    """f32 bytes of the row table chunked at ``cs`` along the *input*
+    dimension (padding included)."""
+    nch = max(1, math.ceil(site.in_features / cs))
+    return 4 * site.n_heads * site.out_features * nch * cs
+
+
 def _plan_weight_layouts(pipeline: RelPipeline, plan: LayoutPlan, mode: str,
                          params: Optional[CostParams],
-                         budget_bytes: Optional[int]) -> None:
+                         pool: ResidencyPool, chunk_mode: str,
+                         chunk_candidates,
+                         forced: Dict[str, int]) -> None:
     sites: List[MatmulSite] = []
     for step in pipeline.steps:
         if step.kind != "bind":
@@ -388,65 +643,110 @@ def _plan_weight_layouts(pipeline: RelPipeline, plan: LayoutPlan, mode: str,
         if site is not None:
             sites.append(site)
 
-    # -- stage 1: price every site under both admissible layouts
+    # -- stage 1: price every site's (layout, chunk_size) options.  A
+    # calibrated ``params`` supplies the weights; the per-site seq-len is
+    # structural and always derived from the site.
     priced = []
     for site in sites:
-        p = params or CostParams(seq_len=_site_seq_len(site))
-        row_cost, col_cost = cost_mod.site_costs(site, p)
+        if params is not None:
+            p = dataclasses.replace(params, seq_len=site.seq_len)
+        else:
+            p = CostParams(seq_len=site.seq_len)
+        row_cs, row_cost, col_cs, col_cost = _site_options(
+            site, p, chunk_mode, chunk_candidates, forced)
         wants_col = (mode == "col") or col_cost < row_cost
-        priced.append((site, row_cost, col_cost, wants_col))
+        priced.append((site, row_cs, row_cost, col_cs, col_cost, wants_col))
 
     # -- stage 2: global residency pass.  Column copies are *extra* bytes on
     # top of the row tables (which remain the conversion source / serve
     # other pipelines), so rank candidates by benefit per duplicate byte and
     # admit greedily within the budget — under pressure the plan keeps the
     # most profitable layers' column copies and degrades the rest to
-    # ROW_CHUNK instead of flipping the whole model.
-    candidates = [(s, rc, cc) for s, rc, cc, w in priced if w]
-    candidates.sort(key=lambda t: (t[1] - t[2]) / max(t[0].weight_bytes, 1),
-                    reverse=True)
+    # ROW_CHUNK instead of flipping the whole model.  The pool may be
+    # shared across pipelines: already-committed tables are free.
+    candidates = [(s, rc, cc, ccs) for s, rcs, rc, ccs, cc, w in priced if w]
+    candidates.sort(
+        key=lambda t: (t[1] - t[2]) / max(_col_bytes(t[0], t[3]), 1),
+        reverse=True)
     admitted: Dict[int, bool] = {}
     spent = 0
-    for site, rc, cc in candidates:
-        nb = site.weight_bytes
-        if budget_bytes is not None and spent + nb > budget_bytes:
+    for site, rc, cc, ccs in candidates:
+        nb = _col_bytes(site, ccs)
+        if not pool.admits(site.col_table, nb):
             admitted[id(site)] = False
             continue
-        spent += nb
+        spent += pool.admit(site.col_table, nb, chunk_size=ccs)
         admitted[id(site)] = True
     plan.residency_bytes = spent
 
     mapping: Dict[int, RelNode] = {}
-    for site, row_cost, col_cost, wants_col in priced:
+    for site, row_cs, row_cost, col_cs, col_cost, wants_col in priced:
         take_col = wants_col and admitted.get(id(site), False)
         layout = site.col_layout if take_col else ROW_CHUNK
-        decision = _decision_for(site, layout, row_cost, col_cost,
-                                 denied=wants_col and not take_col)
+        chunk = col_cs if take_col else row_cs
+        # pin the shared *row* table's physical width for later plans on
+        # the same pool: scanned row tables at the chosen size, conversion
+        # sources at the seed chunking (one physical table, one width)
+        pool.chunks.setdefault(site.table,
+                               site.row_chunk if take_col else row_cs)
+        decision = _decision_for(
+            site, layout, row_cost, col_cost,
+            denied=wants_col and not take_col, chunk_size=chunk,
+            weight_bytes=(_col_bytes(site, col_cs) if take_col
+                          else _row_bytes(site, row_cs)),
+            stored_row_chunk=(pool.chunks[site.table] if take_col else 0))
         plan.decisions.append(decision)
         if not take_col:
             pipeline.layouts[site.table] = ROW_CHUNK
+            if row_cs != site.row_chunk:
+                # planner re-chunks the stored row table: rewrite the plan
+                # with the activation re-chunk adapter and re-declare the
+                # table's physical schema
+                new_root = _build_rechunked_row_plan(site, row_cs)
+                mapping[id(site.root)] = new_root
+                pipeline.weight_schemas[site.table] = _root_weight_schema(
+                    new_root, site.table)
+                pipeline.table_chunks[site.table] = row_cs
             continue
-        new_root = _build_col_plan(site)
+        new_root = _build_col_plan(site, col_cs)
         mapping[id(site.root)] = new_root
         # the pipeline now scans the transposed table instead
         pipeline.weight_schemas.pop(site.table, None)
-        pipeline.weight_schemas[decision.col_table] = (
-            new_root.input.right.table_schema)
+        pipeline.weight_schemas[decision.col_table] = _root_weight_schema(
+            new_root, site.col_table)
         pipeline.layouts[decision.col_table] = layout
+        if chunk_mode == "auto" or site.col_table in forced:
+            pipeline.table_chunks[site.col_table] = col_cs
 
     if mapping:
         _replace_nodes(pipeline, mapping)
 
 
+def _root_weight_schema(root: RelNode, table: str):
+    """Schema of the named weight Scan inside a rewritten plan root."""
+    from repro.core.relational import walk
+    scans = [n for n in walk(root) if isinstance(n, Scan)
+             and n.table == table]
+    assert scans, table
+    return scans[0].table_schema
+
+
 def _plan_cache_layouts(pipeline: RelPipeline, plan: LayoutPlan,
                         cache_mode: str,
-                        params: Optional[CostParams]) -> None:
+                        params: Optional[CostParams],
+                        chunk_mode: str = "off",
+                        chunk_candidates=None) -> None:
     """Pick and apply a physical key order for every KV-cache table.
 
     The rewrite is purely physical: every Scan of the cache shares its
     schema, and all consumer joins/aggregates bind cache keys by *name*,
     so permuting the key order changes the stored array axis order (and
     the SQL DDL column order) without touching plan semantics.
+
+    A cache table's chunk size stays tied to the pipeline chunking (the
+    append path and both attention joins share it with Q/K/V); under
+    ``chunk_mode="auto"`` the candidate chunk sizes are *priced* and
+    recorded on the decision, informing the global chunk-size choice.
     """
     for site in match_cache_sites(pipeline):
         p = params or CostParams(seq_len=1)
@@ -455,6 +755,11 @@ def _plan_cache_layouts(pipeline: RelPipeline, plan: LayoutPlan,
             layout = cost_mod.choose_cache_layout(site, p, costs=costs)
         else:
             layout = cache_mode
+        chunk_costs = {}
+        if chunk_mode == "auto":
+            chunk_costs = cost_mod.cache_chunk_costs(
+                site, p, tuple(chunk_candidates
+                               or cost_mod.CHUNK_CANDIDATES))
         new_schema = cache_schema(site.seed_schema, layout)
         for scan in site.scans:
             scan.table_schema = new_schema
@@ -463,4 +768,5 @@ def _plan_cache_layouts(pipeline: RelPipeline, plan: LayoutPlan,
         pipeline.layouts[site.table] = layout
         plan.cache_decisions.append(CacheDecision(
             table=site.table, layout=layout,
-            key_order=new_schema.key_names, costs=costs))
+            key_order=new_schema.key_names, costs=costs,
+            chunk_size=site.chunk, chunk_costs=chunk_costs))

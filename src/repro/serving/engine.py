@@ -51,19 +51,27 @@ class LazyEnv(dict):
     _register_layouts``), so they page through the same working-set budget
     as every other weight — ``resolves_layouts`` tells
     ``LayoutPlan.ensure_env`` not to materialise resident copies here.
+
+    ``table_sizes`` maps table names to planner-chosen physical chunk
+    sizes (``chunk_size="auto"``); tables absent there wrap at the
+    engine's base chunking.  The dict is shared by reference with the
+    engine so later-planned pipelines (prefill) extend it in place.
     """
 
     resolves_layouts = True
 
-    def __init__(self, pager: WeightPager, chunk_size: int, make_table):
+    def __init__(self, pager: WeightPager, chunk_size: int, make_table,
+                 table_sizes=None):
         super().__init__()
         self.pager = pager
         self.cs = chunk_size
         self.make_table = make_table
+        self.table_sizes = table_sizes if table_sizes is not None else {}
 
     def __missing__(self, key):
         arr = self.pager.get(key)
-        tbl = self.make_table(key, np.asarray(arr), self.cs)
+        cs = self.table_sizes.get(key, self.cs)
+        tbl = self.make_table(key, np.asarray(arr), cs)
         # don't retain: the pager owns residency, we re-wrap per access
         return tbl
 
@@ -71,7 +79,8 @@ class LazyEnv(dict):
         return dict.__contains__(self, key) or key in self.pager._cold
 
     def copy(self):
-        new = LazyEnv(self.pager, self.cs, self.make_table)
+        new = LazyEnv(self.pager, self.cs, self.make_table,
+                      self.table_sizes)
         new.update(self)
         return new
 
@@ -84,41 +93,76 @@ def _chunked_table(name, arr, cs):
 
 
 class RelationalEngine:
-    """The paper's engine: two-stage-compiled pipelines over chunked tables."""
+    """The paper's engine: two-stage-compiled pipelines over chunked tables.
+
+    ``chunk_size`` accepts ``"auto"``: the base chunk size is chosen by the
+    (optionally calibrated) planner cost model over the candidate grid
+    (``repro.planner.calibrate.choose_base_chunk_size`` — the paper's
+    Tab. 1 sweep as an optimizer decision), and per-table physical chunk
+    sizes are then planned jointly with layouts
+    (``plan_layouts(chunk_mode="auto")``).  Pass ``cost_params`` (e.g.
+    from ``calibrate.fit_cost_params()``) to plan under
+    measurement-calibrated weights instead of the analytic defaults.
+    """
 
     def __init__(self, spec: lg.LlamaSpec, params: Dict[str, np.ndarray],
-                 chunk_size: int = 64, residency: str = "in_memory",
+                 chunk_size=64, residency: str = "in_memory",
                  budget_bytes: Optional[int] = None,
                  disk_dir: Optional[str] = None, max_len: int = 1024,
                  pager_policy: str = "pin", row2col: str = "auto",
-                 cache_layout: str = "off"):
+                 cache_layout: str = "off",
+                 chunk_candidates=None, cost_params=None):
         # cache_layout defaults to "off" (seed order): the locality cost
         # model prices relational row/seek traffic, which the dense JAX
         # executor does not exhibit 1:1 — "auto" is opt-in until the model
         # is calibrated against BENCH_attn_layout (see ROADMAP)
-        from repro.planner import CACHE_MODES, MODES
+        from repro.planner import CACHE_MODES, MODES, ResidencyPool
         assert row2col in MODES, f"row2col must be one of {MODES}"
         assert cache_layout in CACHE_MODES, \
             f"cache_layout must be one of {CACHE_MODES}"
+        self._chunk_mode = "off"
+        if chunk_size == "auto":
+            from repro.planner.calibrate import choose_base_chunk_size
+            if row2col == "off":
+                raise ValueError("chunk_size='auto' needs the layout "
+                                 "planner (row2col 'auto' or 'col')")
+            chunk_size = choose_base_chunk_size(
+                spec, cache_len=max_len, candidates=chunk_candidates,
+                params=cost_params)
+            self._chunk_mode = "auto"
         self.spec = spec
-        self.cs = chunk_size
+        self.cs = int(chunk_size)
         self.max_len = max_len
         self.residency = residency
         self.row2col = row2col
+        self._chunk_candidates = chunk_candidates
+        self._cost_params = cost_params
         self._prefill_pipes: Dict[int, object] = {}
         # paged residency: duplicate column copies compete with the working
         # set, so the global residency pass runs under the pager budget;
-        # in-memory residency is unbounded
+        # in-memory residency is unbounded.  One ResidencyPool is shared by
+        # the decode and every prefill plan — prefill does not get a second
+        # copy of the budget, and column tables a previous plan committed
+        # are free for later ones (ROADMAP "residency budget across
+        # pipelines").
         self._residency_budget = (budget_bytes if residency != "in_memory"
                                   else None)
+        self._residency_pool = ResidencyPool(self._residency_budget)
+        # planner-chosen per-table chunk sizes; shared by reference with
+        # the LazyEnv so prefill planning extends it in place
+        self._table_chunks: Dict[str, int] = {}
 
         g = lg.build_decode_graph(spec, cache_len=max_len)
         infer_shapes(g)
         preoptimize(g)
-        self.decode_pipe = op_map(g, chunk_size=chunk_size)
+        self.decode_pipe = op_map(g, chunk_size=self.cs)
         postoptimize(self.decode_pipe, layout_mode=row2col,
                      cache_mode=cache_layout,
-                     budget_bytes=self._residency_budget)
+                     cost_params=cost_params,
+                     chunk_mode=self._chunk_mode,
+                     chunk_candidates=chunk_candidates,
+                     pool=self._residency_pool)
+        self._table_chunks.update(self.decode_pipe.table_chunks)
         # resolved decode-time cache layout; prefill pipelines are forced to
         # it (they share the session environment with decode steps).  When
         # the knob is "off" the planner stays off for prefill too and the
@@ -131,14 +175,15 @@ class RelationalEngine:
                                     else self.cache_layout)
 
         if residency == "in_memory":
-            self.env_base = lg.convert_weights(params, chunk_size=chunk_size)
+            self.env_base = lg.convert_weights(params, chunk_size=self.cs)
             self.pager = None
         else:
             self.pager = WeightPager(budget_bytes or 1 << 62,
                                      disk_dir=disk_dir, policy=pager_policy)
             for k, v in params.items():
                 self.pager.add(k, v)
-            self.env_base = LazyEnv(self.pager, chunk_size, _chunked_table)
+            self.env_base = LazyEnv(self.pager, self.cs, _chunked_table,
+                                    table_sizes=self._table_chunks)
         self._register_layouts(self.decode_pipe)
 
     def _register_layouts(self, pipe) -> None:
@@ -146,7 +191,12 @@ class RelationalEngine:
         into the resident env (in-memory), or converted once into the
         pager's cold store (paged) — the offline ROW2COL data conversion,
         so paged accesses stay zero-copy wraps under the same working-set
-        budget.  Head-blocked tables transpose per head block."""
+        budget.  Head-blocked tables transpose per head block.  Planner
+        per-table chunk sizes are recorded in ``self._table_chunks`` (the
+        LazyEnv wraps cold arrays at those widths); cold copies register
+        padded to their chunk so pager byte accounting matches the
+        physical working set."""
+        self._table_chunks.update(getattr(pipe, "table_chunks", {}) or {})
         plan = getattr(pipe, "layout_plan", None)
         if plan is None:
             return
@@ -158,10 +208,10 @@ class RelationalEngine:
                 continue
             dense = np.asarray(self.pager._cold[d.table])
             if d.is_head_site:  # [H, dh, n] -> [H, n, dh]
-                self.pager.add(d.col_table,
-                               np.ascontiguousarray(dense.transpose(0, 2, 1)))
+                dense = np.ascontiguousarray(dense.transpose(0, 2, 1))
             else:
-                self.pager.add(d.col_table, np.ascontiguousarray(dense.T))
+                dense = np.ascontiguousarray(dense.T)
+            self.pager.add(d.col_table, dense, pad_to=d.physical_chunk)
 
     def _prefill_pipe(self, T: int):
         if T not in self._prefill_pipes:
@@ -169,9 +219,19 @@ class RelationalEngine:
             infer_shapes(g)
             preoptimize(g)
             pipe = op_map(g, chunk_size=self.cs)
+            # prefill shares the session environment with decode: it draws
+            # on the same residency pool and is pinned to the decode plan's
+            # per-table chunk sizes (both pipelines scan the same physical
+            # tables)
             postoptimize(pipe, layout_mode=self.row2col,
                          cache_mode=self._prefill_cache_mode,
-                         budget_bytes=self._residency_budget)
+                         cost_params=self._cost_params,
+                         chunk_mode=self._chunk_mode,
+                         chunk_candidates=self._chunk_candidates,
+                         table_chunks=(dict(self._table_chunks)
+                                       if self._chunk_mode != "off"
+                                       else None),
+                         pool=self._residency_pool)
             self._register_layouts(pipe)
             self._prefill_pipes[T] = pipe
         return self._prefill_pipes[T]
@@ -180,7 +240,9 @@ class RelationalEngine:
         if self.residency == "in_memory":
             env = dict(self.env_base)
         else:
-            env = LazyEnv(self.pager, self.cs, _chunked_table)
+            # .copy() keeps the shared table_sizes reference so sessions
+            # wrap cold arrays at the planner's per-table chunk sizes
+            env = self.env_base.copy()
         env.update(lg.empty_cache_tables(self.spec, cache_len=self.max_len,
                                          chunk_size=self.cs,
                                          layout=self.cache_layout))

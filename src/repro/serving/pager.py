@@ -67,9 +67,22 @@ class WeightPager:
 
     # -- cold-store management -------------------------------------------------
 
-    def add(self, name: str, array: np.ndarray) -> None:
+    def add(self, name: str, array: np.ndarray,
+            pad_to: Optional[int] = None) -> None:
         """Register a weight. With ``disk_dir``, spill it to a memmap file
-        (the true disk tier); otherwise keep a host-RAM copy (warm tier)."""
+        (the true disk tier); otherwise keep a host-RAM copy (warm tier).
+
+        ``pad_to`` zero-pads the trailing dimension to a multiple of the
+        given chunk size so the stored bytes equal the *physical* chunked
+        table (padding included) — the working-set accounting then matches
+        what the executor actually holds for planner-chosen chunk sizes.
+        """
+        if pad_to:
+            array = np.asarray(array)
+            rem = array.shape[-1] % pad_to
+            if rem:
+                pad = [(0, 0)] * (array.ndim - 1) + [(0, pad_to - rem)]
+                array = np.pad(array, pad)
         if self.disk_dir is not None:
             os.makedirs(self.disk_dir, exist_ok=True)
             path = os.path.join(self.disk_dir, name.replace("/", "__") + ".npy")

@@ -142,6 +142,51 @@ class TestLinearEndToEnd:
         assert n_col_rows == 8 * 2  # (d, c) rows
 
 
+class TestGoldenSQLAgainstDuckDB:
+    """The pinned golden-SQL snapshots from test_planner must actually
+    *run* on a real DuckDB and produce the transposed table — snapshots
+    that only string-match can rot."""
+
+    def test_chunk_conversion_snapshot_executes(self):
+        from test_planner import (GOLDEN_CHUNK_CONVERSION_DUCKDB,
+                                  GOLDEN_CHUNK_DDL_DUCKDB)
+        from repro.core.sqlgen import UDF_PRELUDE_DUCKDB
+        rng = np.random.default_rng(3)
+        w = rng.standard_normal((8, 8)).astype(np.float32)
+        con = duckdb.connect()
+        _run_statements(con, _listify(UDF_PRELUDE_DUCKDB))
+        _run_statements(con, _listify(
+            "CREATE TABLE W (j INT32, c INT32, chunk FLOAT[2]);"))
+        _run_statements(con, _listify(GOLDEN_CHUNK_DDL_DUCKDB))
+        _insert_table(con, "W", (8, 4), w.reshape(8, 4, 2))
+        _run_statements(con, _listify(GOLDEN_CHUNK_CONVERSION_DUCKDB))
+        rows = con.execute(
+            "SELECT d, c, chunk FROM W__col ORDER BY d, c").fetchall()
+        assert len(rows) == 8  # (d ∈ [8), one 8-wide output chunk)
+        got = np.stack([np.asarray(chunk, np.float32)
+                        for _, _, chunk in rows])
+        np.testing.assert_allclose(got, w.T, rtol=1e-6, atol=1e-6)
+
+    def test_row2col_conversion_snapshot_executes(self):
+        from test_planner import GOLDEN_CONVERSION_DUCKDB
+        from repro.core.sqlgen import UDF_PRELUDE_DUCKDB
+        rng = np.random.default_rng(4)
+        w = rng.standard_normal((8, 8)).astype(np.float32)
+        con = duckdb.connect()
+        _run_statements(con, _listify(UDF_PRELUDE_DUCKDB))
+        _run_statements(con, _listify(
+            "CREATE TABLE W (j INT32, c INT32, chunk FLOAT[4]);"))
+        _insert_table(con, "W", (8, 2), w.reshape(8, 2, 4))
+        _run_statements(con, _listify(GOLDEN_CONVERSION_DUCKDB))
+        rows = con.execute(
+            "SELECT d, c, chunk FROM W__col ORDER BY d, c").fetchall()
+        got = np.zeros((8, 2, 4), np.float32)
+        for d, c, chunk in rows:
+            got[d, c] = chunk
+        np.testing.assert_allclose(got.reshape(8, 8), w.T, rtol=1e-6,
+                                   atol=1e-6)
+
+
 class TestDecodeStepEndToEnd:
     """One §3.4 decode step — layout-planned weights AND a re-laid-out KV
     cache — executed by DuckDB and compared against the JAX executor."""
@@ -194,3 +239,68 @@ class TestDecodeStepEndToEnd:
         assert cols[0] == want_first
         n = con.execute("SELECT COUNT(*) FROM k_cache_L0").fetchone()[0]
         assert n == SPEC.n_kv  # one position × n_kv heads × 1 chunk
+
+
+class TestChunkAutoDecodeEndToEnd:
+    """Acceptance: a decode step under per-table (layout, chunk_size)
+    planning is numerically equivalent to the fixed-chunk baseline in
+    DuckDB too — the chunk-annotated DDL, the re-chunk-tail views and the
+    chunk-size-aware conversion SQL all execute for real."""
+
+    def test_chunk_auto_decode_matches_executor(self):
+        g = build_decode_graph(SPEC, cache_len=4)
+        infer_shapes(g)
+        preoptimize(g)
+        pipe = op_map(g, chunk_size=CS)
+        postoptimize(pipe, layout_mode="col", chunk_mode="auto",
+                     chunk_candidates=(4, 8, 16))
+        # the planner exercised its chunk freedom somewhere
+        assert any(cs != CS for cs in pipe.table_chunks.values())
+        params = init_llama_params(SPEC, seed=0)
+
+        # -- executor reference (same planned pipeline)
+        env = convert_weights(params, chunk_size=CS)
+        env.update(empty_cache_tables(SPEC, 4, chunk_size=CS))
+        env["token_ids"] = token_table(np.asarray([5], np.int32))
+        env["freq_each_token"] = rope_freq_table(np.asarray([0]),
+                                                 SPEC.head_dim,
+                                                 SPEC.rope_theta)
+        outs, _ = run_pipeline(pipe, env, scalars={"cache_position": 0})
+        ref = np.asarray(outs["logits"].cols["v"]).reshape(-1)[: SPEC.vocab]
+        # and the fixed-chunk baseline for the end-to-end equivalence claim
+        g2 = build_decode_graph(SPEC, cache_len=4)
+        infer_shapes(g2)
+        preoptimize(g2)
+        pipe_base = op_map(g2, chunk_size=CS)
+        env_b = convert_weights(params, chunk_size=CS)
+        env_b.update(empty_cache_tables(SPEC, 4, chunk_size=CS))
+        env_b["token_ids"] = token_table(np.asarray([5], np.int32))
+        env_b["freq_each_token"] = env["freq_each_token"]
+        outs_b, _ = run_pipeline(pipe_base, env_b,
+                                 scalars={"cache_position": 0})
+        base = np.asarray(outs_b["logits"].cols["v"]).reshape(-1)[
+            : SPEC.vocab]
+        np.testing.assert_allclose(ref, base, rtol=1e-4, atol=1e-4)
+
+        # -- DuckDB
+        sql = _listify(generate_sql(pipe, dialect="duckdb",
+                                    include_conversion=True))
+        assert "(planner)" in sql  # chunk-size-annotated DDL made it out
+        sql = re.sub(r":cache_position\b", "0", sql)
+        ddl, conv, rest = _split_script(sql)
+        con = duckdb.connect()
+        _run_statements(con, ddl)
+        for name, arr in params.items():
+            shaped = arr.reshape(*arr.shape[:-1], arr.shape[-1] // CS, CS) \
+                if arr.shape[-1] >= CS else arr.reshape(*arr.shape[:-1], 1,
+                                                        arr.shape[-1])
+            _insert_table(con, name, shaped.shape[:-1], shaped)
+        _insert_dense_tables(con, env_b, ["token_ids", "freq_each_token"])
+        _run_statements(con, conv)
+        _run_statements(con, rest)
+
+        got_rows = con.execute(
+            "SELECT c, v FROM logits ORDER BY c").fetchall()
+        got = np.concatenate([np.asarray(v, np.float32)
+                              for _, v in got_rows])[: SPEC.vocab]
+        np.testing.assert_allclose(got, ref, rtol=1e-3, atol=1e-3)

@@ -21,10 +21,12 @@ from repro.core.pipeline import run_pipeline
 from repro.core.sqlgen import SQLGenerator, generate_sql
 from repro.planner import (CACHE_HEAD_MAJOR, CACHE_LAYOUTS, CACHE_POS_MAJOR,
                            CACHE_ROW_CHUNK, COL_CHUNK, COL_CHUNK_HEADS,
-                           ROW_CHUNK, CostParams, admissible_layouts,
-                           cache_layout_cost, choose_layout, col_chunk_cost,
-                           colh_chunk_cost, match_cache_sites,
-                           match_matmul_site, plan_layouts, row_chunk_cost)
+                           ROW_CHUNK, CostParams, ResidencyPool,
+                           admissible_layouts, cache_layout_cost,
+                           choose_layout, col_chunk_cost, colh_chunk_cost,
+                           divisor_candidates, match_cache_sites,
+                           match_matmul_site, plan_layouts, row_chunk_cost,
+                           site_chunk_costs)
 
 SPEC = LlamaSpec(vocab=64, d_model=32, n_layers=2, n_heads=4, n_kv=2,
                  d_ff=64, rope_theta=10000.0)
@@ -461,6 +463,201 @@ class TestResidencyBudget:
         np.testing.assert_allclose(got, row, rtol=1e-5, atol=1e-5)
 
 
+CHUNK_CANDS = (4, 8, 16, 32)
+
+
+class TestChunkPlanning:
+    """chunk_mode="auto": per-table (layout, chunk_size) pairs are planned
+    jointly, rewritten with re-chunk adapters, and stay numerically exact."""
+
+    def test_site_chunk_costs_candidate_sets(self):
+        pipe = _linear_pipe()
+        site = match_matmul_site("y", pipe.bindings["y"].plan)
+        row_costs, col_costs = site_chunk_costs(site, CostParams(seq_len=4),
+                                                (2, 4, 8, 16))
+        # in/out dims are 8: candidates are divisors plus the seed size
+        assert set(row_costs) == {2, 4, 8}
+        assert set(col_costs) == {2, 4, 8}
+        # the seed sizes carry no adapter; others do
+        assert row_costs[site.row_chunk].rechunk_rows == 0
+        assert col_costs[site.col_chunk].rechunk_rows == 0
+        assert row_costs[8].rechunk_rows > 0
+        assert col_costs[8].rechunk_rows > 0
+
+    def test_divisor_candidates_padding_free(self):
+        assert divisor_candidates(64, (4, 8, 48, 128)) == (4, 8)
+        assert divisor_candidates(64, (), always=(16,)) == (16,)
+
+    def test_joint_selection_records_pairs(self):
+        g = build_prefill_graph(SPEC, 4)
+        infer_shapes(g)
+        pipe = op_map(g, chunk_size=8)
+        plan = plan_layouts(pipe, mode="auto", chunk_mode="auto",
+                            chunk_candidates=CHUNK_CANDS)
+        assert plan.decisions
+        for d in plan.decisions:
+            assert d.chunk_size in CHUNK_CANDS + (d.row_chunk, d.col_chunk)
+            dim = d.in_features if d.layout == ROW_CHUNK else d.out_features
+            assert dim % d.chunk_size == 0  # pad-free physical tables
+        # the planner actually uses the freedom (seed chunk is 8)
+        assert any(d.chunk_size != 8 for d in plan.decisions)
+        # chosen sizes are recorded for sqlgen/engine threading
+        assert pipe.table_chunks
+        for t, cs in pipe.table_chunks.items():
+            assert t in pipe.weight_schemas
+            from repro.core import relational as ra
+            assert ra.vec_width(pipe.weight_schemas[t].cols[0][1]) == cs
+
+    def test_chunk_mode_off_reproduces_seed_plans(self):
+        g = build_prefill_graph(SPEC, 4)
+        infer_shapes(g)
+        pipe = op_map(g, chunk_size=8)
+        plan = plan_layouts(pipe, mode="auto")  # chunk_mode defaults off
+        assert all(d.chunk_size in (d.row_chunk, d.col_chunk)
+                   for d in plan.decisions)
+        assert pipe.table_chunks == {}
+
+    def test_chunk_auto_requires_layout_planner(self):
+        pipe = _linear_pipe()
+        with pytest.raises(ValueError):
+            plan_layouts(pipe, mode="off", chunk_mode="auto")
+
+    def test_forced_table_chunks_pin_sizes(self):
+        g = build_prefill_graph(SPEC, 4)
+        infer_shapes(g)
+        pipe = op_map(g, chunk_size=8)
+        forced = {"GLU_W2_L0": 16, "GLU_W2_L1": 16}
+        plan = plan_layouts(pipe, mode="auto", chunk_mode="auto",
+                            chunk_candidates=CHUNK_CANDS,
+                            table_chunks=forced)
+        by_table = {d.table: d for d in plan.decisions}
+        for t, cs in forced.items():
+            if by_table[t].layout == ROW_CHUNK:
+                assert by_table[t].chunk_size == cs
+
+    def test_forced_chunk_outside_candidate_grid_is_priced(self):
+        """A forced size need not sit in the candidate grid — any divisor
+        of the chunked dimension is priced directly (regression: it used
+        to be rejected as inadmissible)."""
+        g = build_prefill_graph(SPEC, 4)
+        infer_shapes(g)
+        pipe = op_map(g, chunk_size=8)
+        plan = plan_layouts(pipe, mode="auto", chunk_mode="auto",
+                            chunk_candidates=(8, 32),  # 16 not in the grid
+                            table_chunks={"GLU_W2_L0": 16},
+                            budget_bytes=0)  # deny col: ROW must honour it
+        d = next(d for d in plan.decisions if d.table == "GLU_W2_L0")
+        assert d.layout == ROW_CHUNK and d.chunk_size == 16
+        # a non-divisor forced size is still an error (with the real reason)
+        g2 = build_prefill_graph(SPEC, 4)
+        infer_shapes(g2)
+        pipe2 = op_map(g2, chunk_size=8)
+        with pytest.raises(ValueError, match="does not divide"):
+            plan_layouts(pipe2, mode="auto", chunk_mode="auto",
+                         chunk_candidates=(8, 32),
+                         table_chunks={"GLU_W2_L0": 48})
+
+    def test_prefill_equivalence_chunk_auto(self, params):
+        ids = np.array([3, 17, 42, 5, 9], np.int32)
+        base, _ = _run_llama_prefill(params, ids, 8, "off")
+        g = build_prefill_graph(SPEC, len(ids))
+        infer_shapes(g)
+        preoptimize(g)
+        pipe = op_map(g, chunk_size=8)
+        postoptimize(pipe, layout_mode="auto", chunk_mode="auto",
+                     chunk_candidates=CHUNK_CANDS)
+        env = convert_weights(params, chunk_size=8)
+        env.update(empty_cache_tables(SPEC, len(ids), chunk_size=8))
+        env["token_ids"] = token_table(ids)
+        env["freq_each_token"] = rope_freq_table(
+            np.arange(len(ids)), SPEC.head_dim, SPEC.rope_theta)
+        outs, _ = run_pipeline(pipe, env, scalars={"cache_position": 0})
+        got = np.asarray(outs["logits"].cols["v"]).reshape(len(ids), -1)[
+            :, : SPEC.vocab]
+        np.testing.assert_allclose(got, base, rtol=1e-5, atol=1e-5)
+
+    def test_decode_equivalence_chunk_auto(self, params):
+        """End-to-end KV-cached decode under per-table chunk planning is
+        numerically identical to the fixed-chunk baseline (acceptance)."""
+        ids = np.array([3, 17, 42, 5, 9], np.int32)
+        MAXT = 9
+        outs = {}
+        for chunk_mode in ("off", "auto"):
+            pre = _build_pipe("prefill", len(ids), 8, "off", MAXT)
+            g = build_decode_graph(SPEC, cache_len=MAXT)
+            infer_shapes(g)
+            preoptimize(g)
+            dec = op_map(g, chunk_size=8)
+            postoptimize(dec, layout_mode=("off" if chunk_mode == "off"
+                                           else "auto"),
+                         chunk_mode=chunk_mode,
+                         chunk_candidates=CHUNK_CANDS)
+            env = convert_weights(params, chunk_size=8)
+            env.update(empty_cache_tables(SPEC, MAXT, chunk_size=8))
+            env["token_ids"] = token_table(ids)
+            env["freq_each_token"] = rope_freq_table(
+                np.arange(len(ids)), SPEC.head_dim, SPEC.rope_theta)
+            _, env = run_pipeline(pre, env, scalars={"cache_position": 0})
+            logs, cur = [], len(ids)
+            for tok in [21, 33, 7]:
+                env["token_ids"] = token_table(np.asarray([tok], np.int32))
+                env["freq_each_token"] = rope_freq_table(
+                    np.asarray([cur]), SPEC.head_dim, SPEC.rope_theta)
+                o, env = run_pipeline(dec, env,
+                                      scalars={"cache_position": cur})
+                logs.append(np.asarray(o["logits"].cols["v"]).reshape(-1)
+                            [: SPEC.vocab])
+                cur += 1
+            outs[chunk_mode] = np.stack(logs)
+        np.testing.assert_allclose(outs["auto"], outs["off"], rtol=1e-5,
+                                   atol=1e-5)
+
+    def test_zero_budget_rechunks_row_tables(self, params):
+        """With every column copy denied, chunk planning still re-chunks
+        the row tables in place (no duplicate bytes) and stays exact."""
+        ids = np.array([3, 17, 42, 5], np.int32)
+        base, _ = _run_llama_prefill(params, ids, 8, "off")
+        g = build_prefill_graph(SPEC, len(ids))
+        infer_shapes(g)
+        preoptimize(g)
+        pipe = op_map(g, chunk_size=8)
+        plan = plan_layouts(pipe, mode="auto", chunk_mode="auto",
+                            chunk_candidates=CHUNK_CANDS, budget_bytes=0)
+        assert plan.col_decisions == []
+        rechunked = [d for d in plan.decisions
+                     if d.layout == ROW_CHUNK and d.chunk_size != d.row_chunk]
+        assert rechunked, "expected in-place row re-chunk decisions"
+        env = convert_weights(params, chunk_size=8)
+        env.update(empty_cache_tables(SPEC, len(ids), chunk_size=8))
+        env["token_ids"] = token_table(ids)
+        env["freq_each_token"] = rope_freq_table(
+            np.arange(len(ids)), SPEC.head_dim, SPEC.rope_theta)
+        outs, env2 = run_pipeline(pipe, env, scalars={"cache_position": 0})
+        got = np.asarray(outs["logits"].cols["v"]).reshape(len(ids), -1)[
+            :, : SPEC.vocab]
+        np.testing.assert_allclose(got, base, rtol=1e-5, atol=1e-5)
+        # the environment's row table really was re-chunked
+        d = rechunked[0]
+        from repro.core import relational as ra
+        vec_col = next(iter(env2[d.table].cols))
+        assert ra.vec_width(env2[d.table].col_types[vec_col]) == d.chunk_size
+
+    def test_rechunk_helper_roundtrip(self):
+        from repro.core.executor import rechunk_chunked_table
+        w = np.arange(6 * 12, dtype=np.float32).reshape(6, 12)
+        t = table_from_chunked(ChunkedTensor.from_dense("w", w, chunk_size=4))
+        r = rechunk_chunked_table(t, 6)
+        assert r.keys == (("row_id", 6), ("chunk_id", 2))
+        np.testing.assert_array_equal(
+            np.asarray(r.cols["chunk"]).reshape(6, 12), w)
+        # non-divisor target pads with zeros
+        r2 = rechunk_chunked_table(t, 5)
+        assert r2.keys[-1] == ("chunk_id", 3)
+        flat = np.asarray(r2.cols["chunk"]).reshape(6, 15)
+        np.testing.assert_array_equal(flat[:, :12], w)
+        np.testing.assert_array_equal(flat[:, 12:], 0)
+
+
 GOLDEN_VIEW_DUCKDB = """\
 CREATE OR REPLACE VIEW y AS
 WITH t4 AS (SELECT S.t, S.c, E.e, S.v[E.e + 1] AS x FROM embedding_1 AS S, (SELECT UNNEST(range(4)) AS e) AS E),
@@ -595,3 +792,228 @@ class TestEngineKnob:
                                disk_dir=str(tmp_path)).generate(prompt, 4)
         assert got.tokens == ref.tokens
         assert got.pager_stats is not None
+
+    def test_chunk_auto_matches_fixed_baseline(self, params):
+        """chunk_size="auto": the planner picks the base and per-table
+        chunk sizes; generation is identical to the fixed-chunk engine
+        (acceptance: jax-executor end-to-end equivalence)."""
+        from repro.serving.engine import RelationalEngine
+        prompt = [3, 17, 42, 5, 9]
+        ref = RelationalEngine(SPEC, params, chunk_size=8, max_len=16,
+                               row2col="off").generate(prompt, 4)
+        eng = RelationalEngine(SPEC, params, chunk_size="auto", max_len=16,
+                               chunk_candidates=(4, 8, 16, 32))
+        assert eng.cs in (4, 8, 16, 32)
+        assert eng._table_chunks  # per-table choices were planned
+        got = eng.generate(prompt, 4)
+        assert got.tokens == ref.tokens
+
+    def test_chunk_auto_paged_matches_fixed_baseline(self, params,
+                                                     tmp_path):
+        from repro.serving.engine import RelationalEngine
+        prompt = [3, 17, 42, 5, 9]
+        ref = RelationalEngine(SPEC, params, chunk_size=8, max_len=16,
+                               row2col="off").generate(prompt, 4)
+        got = RelationalEngine(SPEC, params, chunk_size="auto", max_len=16,
+                               chunk_candidates=(4, 8, 16, 32),
+                               residency="paged", budget_bytes=1 << 20,
+                               disk_dir=str(tmp_path)).generate(prompt, 4)
+        assert got.tokens == ref.tokens
+
+    def test_chunk_auto_paged_planned_sizes_differ_from_base(self,
+                                                             tmp_path):
+        """Regression: paged sessions must wrap cold weights at the
+        *planner's* per-table chunk sizes, not the base size — a spec
+        whose planned sizes genuinely differ from min(base, width) used
+        to crash in generate() with a schema/size mismatch."""
+        from repro.serving.engine import RelationalEngine
+        spec = LlamaSpec(vocab=64, d_model=32, n_layers=2, n_heads=4,
+                         n_kv=2, d_ff=48, rope_theta=10000.0)
+        p48 = init_llama_params(spec, seed=0)
+        prompt = [3, 17, 42]
+        eng = RelationalEngine(spec, p48, chunk_size="auto", max_len=16,
+                               chunk_candidates=(16, 48),
+                               residency="paged", budget_bytes=1 << 20,
+                               disk_dir=str(tmp_path))
+        mismatched = {t: cs for t, cs in eng._table_chunks.items()
+                      if cs != eng.cs}
+        assert mismatched  # the regression's trigger condition holds
+        ref = RelationalEngine(spec, p48, chunk_size=eng.cs, max_len=16,
+                               row2col="off").generate(prompt, 4)
+        assert eng.generate(prompt, 4).tokens == ref.tokens
+
+    def test_chunk_auto_rejects_row2col_off(self, params):
+        from repro.serving.engine import RelationalEngine
+        with pytest.raises(ValueError):
+            RelationalEngine(SPEC, params, chunk_size="auto", max_len=16,
+                             row2col="off")
+
+
+class TestSharedResidencyPool:
+    """Prefill and decode plans draw on ONE residency budget pool (ROADMAP
+    "residency budget across pipelines") instead of each receiving the
+    full cap."""
+
+    def _plan_into(self, pool, kind, T=4):
+        g = (build_prefill_graph(SPEC, T) if kind == "prefill"
+             else build_decode_graph(SPEC, cache_len=8))
+        infer_shapes(g)
+        pipe = op_map(g, chunk_size=8)
+        return plan_layouts(pipe, mode="auto", pool=pool)
+
+    def test_budget_split_across_pipelines(self):
+        # how much an unbounded decode plan wants
+        want = sum(d.weight_bytes for d in
+                   self._plan_into(ResidencyPool(None),
+                                   "decode").col_decisions)
+        assert want > 0
+        # a budget that fits exactly the decode plan: the prefill plan must
+        # NOT get a second copy of it — shared tables are free, new ones
+        # are denied
+        pool = ResidencyPool(want)
+        dplan = self._plan_into(pool, "decode")
+        assert pool.spent == want
+        pplan = self._plan_into(pool, "prefill")
+        assert pool.spent <= want  # no budget doubling
+        committed = set(pool.tables)
+        for d in pplan.col_decisions:
+            assert d.col_table in committed
+        # the prefill plan added no *new* residency bytes
+        assert pplan.residency_bytes == 0 or \
+            pool.spent - want == pplan.residency_bytes
+
+    def test_shared_tables_counted_once(self):
+        pool = ResidencyPool(None)
+        p1 = self._plan_into(pool, "decode")
+        spent_after_first = pool.spent
+        p2 = self._plan_into(pool, "decode", T=4)
+        # identical table set: the second plan commits nothing new
+        assert pool.spent == spent_after_first
+        assert p2.residency_bytes == 0
+        assert {d.col_table for d in p2.col_decisions} <= set(pool.tables)
+
+    def test_pool_pins_chunk_sizes_across_plans(self):
+        """Two chunk-planned pipelines over one pool may never declare
+        different physical widths for a shared table — the pool pins each
+        committed table's chunk size for later plans."""
+        from repro.core import relational as ra
+        pool = ResidencyPool(None)
+
+        def plan(kind, T=4):
+            g = (build_prefill_graph(SPEC, T) if kind == "prefill"
+                 else build_decode_graph(SPEC, cache_len=8))
+            infer_shapes(g)
+            pipe = op_map(g, chunk_size=8)
+            plan_layouts(pipe, mode="auto", chunk_mode="auto",
+                         chunk_candidates=(4, 8, 16, 32), pool=pool)
+            return pipe
+
+        dec = plan("decode")
+        pre = plan("prefill")  # no explicit table_chunks pinning
+        dw = {t: ra.vec_width(s.cols[0][1])
+              for t, s in dec.weight_schemas.items()}
+        pw = {t: ra.vec_width(s.cols[0][1])
+              for t, s in pre.weight_schemas.items()}
+        for t in set(dw) & set(pw):
+            assert dw[t] == pw[t], t
+
+    def test_engine_shares_one_pool(self, params, tmp_path):
+        """The engine's decode + prefill plans never commit more than the
+        configured budget in total, and prefill reuses decode's copies."""
+        from repro.serving.engine import RelationalEngine
+        budget = 1 << 20
+        eng = RelationalEngine(SPEC, params, chunk_size=8, max_len=16,
+                               residency="paged", budget_bytes=budget,
+                               disk_dir=str(tmp_path))
+        eng.generate([3, 17, 42, 5, 9], 3)  # builds a prefill pipe
+        pool = eng._residency_pool
+        assert pool.budget_bytes == budget
+        assert pool.spent <= budget
+        assert pool.spent == sum(pool.tables.values())
+        prefill_pipe = next(iter(eng._prefill_pipes.values()))
+        for d in prefill_pipe.layout_plan.col_decisions:
+            assert d.col_table in pool.tables
+
+
+GOLDEN_CHUNK_DDL_DUCKDB = """\
+-- layout: col_chunk; chunk_size: 8 (planner)
+CREATE TABLE W__col (d INT32, c INT32, chunk FLOAT[8]);"""
+
+GOLDEN_CHUNK_CONVERSION_DUCKDB = """\
+-- ROW2COL: W -> W__col
+CREATE OR REPLACE TABLE W__col AS
+WITH flat AS (SELECT j, c * 2 + e.e AS d, chunk[e.e + 1] AS x FROM W, (SELECT UNNEST(range(2)) AS e) AS e)
+SELECT d, j // 8 AS c, collect_as_array(LIST(j % 8), LIST(x)) AS chunk
+FROM flat GROUP BY d, j // 8;"""
+
+GOLDEN_CHUNK_VIEW_DUCKDB = """\
+CREATE OR REPLACE VIEW y AS
+WITH t8 AS (SELECT S.t, S.c, E.e, S.v[E.e + 1] AS x FROM embedding_1 AS S, (SELECT UNNEST(range(2)) AS e) AS E),
+  t7 AS (SELECT t AS t, ((c * 2) + e) AS d, x AS xs FROM t8),
+  t6 AS (SELECT L.t, L.d, R.c, L.xs, R.chunk AS chunk FROM t7 AS L JOIN W__col AS R ON R.d = L.d),
+  t5 AS (SELECT t, c, sumForEach(LIST(list_transform(chunk, x -> x * (xs)))) AS v FROM t6 GROUP BY t, c),
+  t4 AS (SELECT S.t, S.c, E.e, S.v[E.e + 1] AS x FROM t5 AS S, (SELECT UNNEST(range(8)) AS e) AS E),
+  t3 AS (SELECT t AS t, ((c * 8) + e) AS r, x AS x FROM t4),
+  t2 AS (SELECT t AS t, (r // 2) AS c, (r % 2) AS e, x AS x FROM t3)
+SELECT t, c, collect_as_array(LIST(e), LIST(x)) AS v FROM t2 GROUP BY t, c;"""
+
+GOLDEN_CHUNK_CONVERSION_ANSI = """\
+-- ROW2COL: W -> W__col
+CREATE OR REPLACE TABLE W__col AS
+WITH flat AS (SELECT j, c * 2 + u.ord - 1 AS d, u.x AS x FROM W, UNNEST(chunk) WITH ORDINALITY AS u(x, ord))
+SELECT d, j / 8 AS c, collect_as_array(LIST(j % 8), LIST(x)) AS chunk
+FROM flat GROUP BY d, j / 8;"""
+
+GOLDEN_CHUNK_VIEW_ANSI = """\
+CREATE OR REPLACE VIEW y AS
+WITH t8 AS (SELECT S.t, S.c, U.ord - 1 AS e, U.x FROM embedding_1 AS S, UNNEST(S.v) WITH ORDINALITY AS U(x, ord)),
+  t7 AS (SELECT t AS t, ((c * 2) + e) AS d, x AS xs FROM t8),
+  t6 AS (SELECT L.t, L.d, R.c, L.xs, R.chunk AS chunk FROM t7 AS L JOIN W__col AS R ON R.d = L.d),
+  t5 AS (SELECT t, c, sumForEach(LIST(map_vec(chunk, 'x * (xs)'))) AS v FROM t6 GROUP BY t, c),
+  t4 AS (SELECT S.t, S.c, U.ord - 1 AS e, U.x FROM t5 AS S, UNNEST(S.v) WITH ORDINALITY AS U(x, ord)),
+  t3 AS (SELECT t AS t, ((c * 8) + e) AS r, x AS x FROM t4),
+  t2 AS (SELECT t AS t, (r / 2) AS c, (r % 2) AS e, x AS x FROM t3)
+SELECT t, c, collect_as_array(LIST(e), LIST(x)) AS v FROM t2 GROUP BY t, c;"""
+
+
+class TestChunkSQLSnapshots:
+    """Pinned snapshots of chunk-size-annotated DDL, conversion SQL and the
+    re-chunk-tail view for a chunk-planned pipeline, both dialects."""
+
+    def _sql(self, dialect):
+        pipe = _linear_pipe(cs=2)
+        plan_layouts(pipe, mode="col", chunk_mode="auto",
+                     chunk_candidates=(2, 4, 8))
+        assert pipe.table_chunks == {"W__col": 8}
+        return generate_sql(pipe, dialect=dialect, include_conversion=True)
+
+    def test_duckdb_chunk_annotated_script(self):
+        sql = self._sql("duckdb")
+        assert GOLDEN_CHUNK_DDL_DUCKDB in sql
+        assert GOLDEN_CHUNK_CONVERSION_DUCKDB in sql
+        assert GOLDEN_CHUNK_VIEW_DUCKDB in sql
+        # the ROW2COL source keeps the pipeline chunking
+        assert "CREATE TABLE W (j INT32, c INT32, chunk FLOAT[2]);" in sql
+
+    def test_ansi_chunk_annotated_script(self):
+        sql = self._sql("ansi")
+        assert GOLDEN_CHUNK_DDL_DUCKDB in sql  # DDL is dialect-invariant
+        assert GOLDEN_CHUNK_CONVERSION_ANSI in sql
+        assert GOLDEN_CHUNK_VIEW_ANSI in sql
+
+    def test_rechunked_row_table_ddl_annotated(self):
+        """A ROW_CHUNK table the planner re-chunked carries the chunk
+        annotation and the new FLOAT width in its DDL."""
+        g = build_prefill_graph(SPEC, 4)
+        infer_shapes(g)
+        pipe = op_map(g, chunk_size=8)
+        plan_layouts(pipe, mode="auto", chunk_mode="auto",
+                     chunk_candidates=(4, 8, 16, 32), budget_bytes=0)
+        sql = generate_sql(pipe, dialect="duckdb")
+        rechunked = [t for t, cs in pipe.table_chunks.items() if cs != 8]
+        assert rechunked
+        name = rechunked[0]
+        cs = pipe.table_chunks[name]
+        assert (f"-- layout: row_chunk; chunk_size: {cs} (planner)\n"
+                f"CREATE TABLE {name} (") in sql
+        assert f"chunk FLOAT[{cs}]);" in sql

@@ -88,6 +88,97 @@ def test_unnest_collect_inverse(rows, w):
 
 
 @settings(**COMMON)
+@given(m=st.integers(1, 8), t=st.integers(1, 6), k=st.integers(1, 24),
+       cs=st.integers(1, 10))
+def test_row_chunk_matmul_any_chunk_size(m, t, k, cs):
+    """ROW_CHUNK matmul is exact for *any* chunk size, including
+    non-divisors of the reduction dim — the padding tail is zeros and the
+    dot ignores it (per-table chunk-size planning's correctness basis)."""
+    rng = np.random.default_rng(m * 1000 + t * 10 + cs)
+    x = rng.standard_normal((t, k)).astype(np.float32)
+    w = rng.standard_normal((m, k)).astype(np.float32)
+    xt = ChunkedTensor.from_dense("x", x, chunk_size=cs,
+                                  key_names=("t",))
+    wt = ChunkedTensor.from_dense("w", w, chunk_size=cs,
+                                  key_names=("j",))
+    assert xt.schema.pad == wt.schema.pad < cs  # padding invariant
+    from repro.core.executor import table_from_chunked
+    xd, wd = table_from_chunked(xt), table_from_chunked(wt)
+    xd = DenseTable(keys=(("t", t), ("c", xt.schema.n_chunks)),
+                    cols={"v": xd.cols["chunk"]},
+                    col_types={"v": VEC(xt.schema.chunk_size)})
+    plan = GroupAgg(
+        input=Join(left=Scan("x", xd.schema()),
+                   right=Scan("w", wd.schema()),
+                   on=[("chunk_id", key("c"))]),
+        group_keys=["t", "j"],
+        aggs=[("s", "SUM", call("dot", col("v"), col("chunk")))])
+    out = execute(plan, {"x": xd, "w": wd})
+    np.testing.assert_allclose(np.asarray(out.cols["s"]), x @ w.T,
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(**COMMON)
+@given(m=st.integers(1, 8), t=st.integers(1, 6), k=st.integers(1, 16),
+       cs=st.integers(1, 8), cs_col=st.integers(1, 10))
+def test_col_chunk_matmul_any_chunk_size(t, m, k, cs, cs_col):
+    """COL_CHUNK matmul is exact for any (activation, column) chunk-size
+    pair — the transposed table's padded output tail stays zero and is
+    stripped, exercising the planner's free per-table output chunking."""
+    from repro.core.executor import col_table_from_dense, table_from_chunked
+    rng = np.random.default_rng(m * 777 + k * 13 + cs_col)
+    x = rng.standard_normal((t, k)).astype(np.float32)
+    w = rng.standard_normal((m, k)).astype(np.float32)
+    xt = ChunkedTensor.from_dense("x", x, chunk_size=cs, key_names=("t",))
+    nch, csx = xt.schema.n_chunks, xt.schema.chunk_size
+    n_feat = nch * csx  # padded feature domain of the chunked activation
+    xd = DenseTable(keys=(("t", t), ("c", nch)),
+                    cols={"v": table_from_chunked(xt).cols["chunk"]},
+                    col_types={"v": VEC(csx)})
+    # transposed table over the same padded domain: the extra feature rows
+    # are zero weights, so the padded positions cannot contribute
+    wcol = col_table_from_dense(np.pad(w, ((0, 0), (0, n_feat - k))),
+                                cs_col)
+    n_out = wcol.keys[1][1]
+    u = Unnest(input=Scan("x", xd.schema()), vec_col="v", elem_key="e",
+               elem_col="xs")
+    p = Project(input=u,
+                keys=[("t", t, key("t")),
+                      ("d", n_feat, add(mul(key("c"), const(csx)),
+                                        key("e")))],
+                exprs=[("xs", None, col("xs"))])
+    plan = GroupAgg(
+        input=Join(left=p, right=Scan("wc", wcol.schema()),
+                   on=[("d", key("d"))]),
+        group_keys=["t", "c"],
+        aggs=[("o", "SUM", mul(col("xs"), col("chunk")))])
+    out = execute(plan, {"x": xd, "wc": wcol})
+    got = np.asarray(out.cols["o"])            # [t, n_out, cs_col]
+    got = got.reshape(t, n_out * cs_col)[:, :m]
+    np.testing.assert_allclose(got, x @ w.T, rtol=1e-4, atol=1e-4)
+
+
+@settings(**COMMON)
+@given(rows=st.integers(1, 6), width=st.integers(1, 30),
+       cs1=st.integers(1, 8), cs2=st.integers(1, 9))
+def test_rechunk_table_roundtrip_any_sizes(rows, width, cs1, cs2):
+    """Executor re-chunk helper: chunked@cs1 → re-chunked@cs2 preserves the
+    true payload exactly and zero-fills the new tail (padding invariant of
+    the planner's per-table chunk-size decisions)."""
+    from repro.core.executor import rechunk_chunked_table, table_from_chunked
+    x = np.random.default_rng(rows * 31 + width).standard_normal(
+        (rows, width)).astype(np.float32)
+    ct = ChunkedTensor.from_dense("t", x, chunk_size=cs1)
+    t = table_from_chunked(ct)
+    r = rechunk_chunked_table(t, cs2, true_width=width)
+    n2 = r.keys[-1][1]
+    assert (n2 - 1) * cs2 < width <= n2 * cs2  # padding invariant
+    flat = np.asarray(r.cols["chunk"]).reshape(rows, n2 * cs2)
+    np.testing.assert_array_equal(flat[:, :width], x)
+    np.testing.assert_array_equal(flat[:, width:], 0)
+
+
+@settings(**COMMON)
 @given(budget_items=st.integers(1, 5), n_weights=st.integers(2, 10),
        seed=st.integers(0, 99))
 def test_pager_budget_invariant(budget_items, n_weights, seed):
