@@ -1,0 +1,159 @@
+"""Batched relational decode — ONE seq-keyed plan per tick vs the
+per-sequence decode loop.
+
+For each batch size B ∈ {1, 2, 4, 8} the same decode workload (B active
+sequences, one token each per tick) is timed two ways:
+
+  batched   one ``run_pipeline`` call on the seq-keyed batched plan
+            (ISSUE 4 tentpole: batching *inside* the relational plan)
+  loop      B ``run_pipeline`` calls on the single-sequence plan — the
+            pre-batching ``ContinuousBatcher`` behaviour
+
+Results go to ``BENCH_batched_decode.json`` and the CSV reporter.  The
+acceptance bar: the batched per-tick latency at B = 4 stays strictly below
+4× the B = 1 batched tick (set-at-a-time execution amortises the weight
+scans across the batch).
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from repro.core.graph import infer_shapes
+from repro.core.llama_graph import (LlamaSpec, build_decode_graph,
+                                    build_prefill_graph, convert_weights,
+                                    copy_cache_slot, empty_cache_tables,
+                                    init_llama_params, rope_freq_table,
+                                    token_table)
+from repro.core.opmap import op_map
+from repro.core.passes import postoptimize, preoptimize
+from repro.core.pipeline import run_pipeline
+
+SPEC = LlamaSpec(vocab=256, d_model=128, n_layers=2, n_heads=8, n_kv=4,
+                 d_ff=256, rope_theta=10000.0)
+BATCHES = (1, 2, 4, 8)
+CACHE_LEN = 64
+CHUNK_SIZE = 16
+PROMPT = 8
+STEPS = 4
+OUT_JSON = "BENCH_batched_decode.json"
+
+
+def _pipe(kind, arg):
+    g = (build_prefill_graph(SPEC, arg, cache_len=CACHE_LEN)
+         if kind == "prefill" else
+         build_decode_graph(SPEC, CACHE_LEN, batch=arg))
+    infer_shapes(g)
+    preoptimize(g)
+    pipe = op_map(g, chunk_size=CHUNK_SIZE)
+    postoptimize(pipe, layout_mode="auto")
+    return pipe
+
+
+def _prefill_env(params, ids):
+    env = convert_weights(params, chunk_size=CHUNK_SIZE)
+    env.update(empty_cache_tables(SPEC, CACHE_LEN, chunk_size=CHUNK_SIZE))
+    env["token_ids"] = token_table(np.asarray(ids, np.int32))
+    env["freq_each_token"] = rope_freq_table(
+        np.arange(len(ids)), SPEC.head_dim, SPEC.rope_theta)
+    pipe = _pipe("prefill", len(ids))
+    pipe.layout_plan.ensure_env(env)
+    _, env = run_pipeline(pipe, env, scalars={"cache_position": 0})
+    return env
+
+
+def _time_loop(env0, B) -> float:
+    """B per-sequence decode calls per tick (the pre-batching baseline)."""
+    decode = _pipe("decode", 0)
+    envs = []
+    for _ in range(B):
+        env = dict(env0)
+        decode.layout_plan.ensure_env(env)
+        envs.append(env)
+
+    def tick(pos):
+        for b in range(B):
+            envs[b]["token_ids"] = token_table(np.asarray([1], np.int32))
+            envs[b]["freq_each_token"] = rope_freq_table(
+                np.asarray([pos]), SPEC.head_dim, SPEC.rope_theta)
+            outs, envs[b] = run_pipeline(decode, envs[b],
+                                         scalars={"cache_position": pos})
+            np.asarray(outs["logits"].cols["v"])  # block on device work
+
+    tick(PROMPT)  # warm: XLA compile cache
+    t0 = time.perf_counter()
+    for i in range(STEPS):
+        tick(PROMPT + 1 + i)
+    return (time.perf_counter() - t0) / STEPS
+
+
+def _time_batched(params, env0, B) -> float:
+    """ONE run_pipeline on the seq-keyed plan advances all B sequences."""
+    decode = _pipe("decode", B)
+    env = convert_weights(params, chunk_size=CHUNK_SIZE)
+    env.update(empty_cache_tables(SPEC, CACHE_LEN, chunk_size=CHUNK_SIZE,
+                                  batch=B))
+    decode.layout_plan.ensure_env(env)
+    for b in range(B):
+        copy_cache_slot(env, b, env0)
+    state = {"env": env}
+
+    def tick(pos):
+        positions = np.full(B, pos, np.int32)
+        e = state["env"]
+        e["token_ids"] = token_table(np.full(B, 1, np.int32), key="seq")
+        e["freq_each_token"] = rope_freq_table(
+            positions, SPEC.head_dim, SPEC.rope_theta, key="seq")
+        outs, e = run_pipeline(decode, e,
+                               scalars={"seq_positions": positions})
+        np.asarray(outs["logits"].cols["v"])  # block on device work
+        state["env"] = e
+
+    tick(PROMPT)  # warm: XLA compile cache
+    t0 = time.perf_counter()
+    for i in range(STEPS):
+        tick(PROMPT + 1 + i)
+    return (time.perf_counter() - t0) / STEPS
+
+
+def run(report):
+    params = init_llama_params(SPEC, seed=0)
+    ids = list(np.random.default_rng(0).integers(0, SPEC.vocab, PROMPT))
+    env0 = _prefill_env(params, ids)
+    results = []
+    for B in BATCHES:
+        batched = _time_batched(params, env0, B) * 1e6
+        loop = _time_loop(env0, B) * 1e6
+        row = {"batch": B, "batched_tick_us": batched, "loop_tick_us": loop,
+               "speedup_vs_loop": loop / batched}
+        results.append(row)
+        report(f"batched_decode/B{B}/batched", batched,
+               f"speedup_vs_loop={row['speedup_vs_loop']:.2f}")
+        report(f"batched_decode/B{B}/loop", loop, "")
+    base = results[0]["batched_tick_us"]
+    for row in results:
+        # sublinear per-tick scaling: tick(B) / (B · tick(1)) < 1 is the
+        # amortisation win of set-at-a-time execution
+        row["vs_B1_linear"] = row["batched_tick_us"] / (row["batch"] * base)
+        report(f"batched_decode/B{row['batch']}/vs_linear",
+               row["batched_tick_us"],
+               f"x_linear={row['vs_B1_linear']:.3f}")
+    payload = {
+        "spec": {"d_model": SPEC.d_model, "n_layers": SPEC.n_layers,
+                 "n_heads": SPEC.n_heads, "n_kv": SPEC.n_kv,
+                 "vocab": SPEC.vocab},
+        "cache_len": CACHE_LEN,
+        "chunk_size": CHUNK_SIZE,
+        "batches": list(BATCHES),
+        "results": results,
+    }
+    with open(OUT_JSON, "w") as f:
+        json.dump(payload, f, indent=2)
+    report("batched_decode/json", 0.0, OUT_JSON)
+
+
+if __name__ == "__main__":
+    run(lambda n, us, d="": print(f"{n},{us:.1f},{d}"))

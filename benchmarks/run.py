@@ -11,9 +11,10 @@ from __future__ import annotations
 import sys
 import traceback
 
-from benchmarks import (attn_layout_bench, chunk_sweep_bench, fig2_memory,
-                        fig3_capped, fig4_methods, roofline_bench,
-                        row2col_bench, tab1_chunk_size)
+from benchmarks import (attn_layout_bench, batched_decode_bench,
+                        chunk_sweep_bench, fig2_memory, fig3_capped,
+                        fig4_methods, roofline_bench, row2col_bench,
+                        tab1_chunk_size)
 
 BENCHES = {
     "tab1": tab1_chunk_size,
@@ -24,6 +25,7 @@ BENCHES = {
     "row2col": row2col_bench,
     "attn_layout": attn_layout_bench,
     "chunk_sweep": chunk_sweep_bench,
+    "batched_decode": batched_decode_bench,
 }
 
 

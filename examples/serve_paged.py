@@ -44,26 +44,24 @@ def main():
               f"pager={res.pager_stats}")
 
         # --- continuous batching over a paged KV cache --------------------
+        # one seq-keyed relational plan advances the WHOLE batch per tick
+        # (no per-sequence decode loop): the batched decoder gathers the
+        # active sequences' cache-table slots, runs one `run_pipeline`,
+        # and scatters the appended rows back
         kvcfg = PagedKVConfig(n_layers=spec.n_layers, n_kv=spec.n_kv,
                               head_dim=spec.head_dim, page_size=8,
                               n_pages=64, max_pages_per_seq=12)
         kv = PagedKVCache(kvcfg, max_seqs=8)
-        sessions = {}
+        dec = eng.batched_decoder(max_seqs=8)
 
         def prefill(req, seq_id):
             kv.ensure_capacity(seq_id, len(req.prompt))
-            kv.seq_lens[seq_id] = len(req.prompt)
-            sessions[seq_id] = eng.start_session(req.prompt)
-            return sessions[seq_id]["tok"]
+            return dec.prefill(req.prompt, seq_id)
 
-        def decode(seq_ids, last):
-            out = []
-            for s in seq_ids:
-                out.append(eng.session_step(sessions[s]))
-                kv.seq_lens[s] += 1
-            return out
-
-        sched = ContinuousBatcher(kv, prefill, decode, max_batch=3)
+        # decode_fn IS the batched decoder — the scheduler owns the
+        # kv.seq_lens bookkeeping, so no wrapper is needed
+        sched = ContinuousBatcher(kv, prefill, dec.decode, max_batch=3,
+                                  release_fn=dec.free)
         t0 = time.perf_counter()
         for r in range(5):
             sched.submit(Request(rid=r,
@@ -74,7 +72,8 @@ def main():
         dt = time.perf_counter() - t0
         print(f"\nserved {len(done)} requests in {dt:.1f}s "
               f"(ticks={sched.stats.ticks} decode_steps="
-              f"{sched.stats.decode_steps} preemptions="
+              f"{sched.stats.decode_steps} batched_plan_calls="
+              f"{dec.decode_calls} preemptions="
               f"{sched.stats.preemptions})")
         for req in done:
             print(f"  req{req.rid}: prompt={len(req.prompt)}t "

@@ -33,8 +33,8 @@ import numpy as np
 from repro.core import relational as ra
 from repro.core.relational import (
     BinOp, Call, Col, Collect, Const, Expr, Filter, GroupAgg, Join, Key,
-    Param, Project, RelNode, RelSchema, Scan, Unnest, SCALAR, is_vec,
-    resolve,
+    KeyParam, Param, Project, RelNode, RelSchema, Scan, Unnest, SCALAR,
+    is_vec, resolve,
 )
 
 NEG_INF = -1e30
@@ -247,6 +247,14 @@ def _eval_key_expr(expr: Expr, key_names, key_sizes, scalars=None
             return jnp.asarray(int(e.value), dtype=jnp.int32)
         if isinstance(e, Param):
             return jnp.asarray(scalars[e.name], dtype=jnp.int32)
+        if isinstance(e, KeyParam):
+            # per-key parameter vector: bound value has one entry per row
+            # of the key domain, broadcast into that key's axis
+            ax = key_names.index(e.key)
+            shape = [1] * nk
+            shape[ax] = key_sizes[ax]
+            return jnp.asarray(scalars[e.name], dtype=jnp.int32).reshape(
+                shape)
         if isinstance(e, BinOp):
             l, r = rec(e.lhs), rec(e.rhs)
             return {

@@ -176,7 +176,13 @@ def infer_shapes(graph: Graph) -> None:
         elif op == "attn_scores":
             q, k = ins
             h = ("h", node.attrs["n_heads"])
-            graph.annotate(out, (q.dims[0], h, (k.dims[0][0] + "p", k.dims[0][1])))
+            if k.dims[0][0] == q.dims[0][0]:
+                # batched decode: both sides share the sequence dim; the
+                # cache's position dim is the K side's second dim
+                kp = k.dims[1]
+            else:
+                kp = (k.dims[0][0] + "p", k.dims[0][1])
+            graph.annotate(out, (q.dims[0], h, kp))
         elif op == "attn_output":
             s, v = ins
             graph.annotate(out, (s.dims[0], s.dims[1], v.dims[-1]))
@@ -189,8 +195,16 @@ def infer_shapes(graph: Graph) -> None:
             graph.annotate(out, (t, ("d", h[1] * dh[1])))
         elif op == "concat_rows":
             new = ins[-1]
-            graph.annotate(out, ((new.dims[0][0], node.attrs["cache_len"]),)
-                           + new.dims[1:])
+            if node.attrs.get("seq_key"):
+                # batched decode cache: the sequence key leads, each seq's
+                # single new row lands at its own position in the tp domain
+                graph.annotate(out, (new.dims[0],
+                                     ("tp", node.attrs["cache_len"]))
+                               + new.dims[1:])
+            else:
+                graph.annotate(out,
+                               ((new.dims[0][0], node.attrs["cache_len"]),)
+                               + new.dims[1:])
         elif op in SHAPE_OPS:
             graph.annotate(out, tuple(node.attrs["dims"]))
         else:

@@ -53,27 +53,47 @@ def build_prefill_graph(spec: LlamaSpec, seq_len: int,
                         cache_len=cache_len or seq_len, is_prefill=True)
 
 
-def build_decode_graph(spec: LlamaSpec, cache_len: int) -> Graph:
+def build_decode_graph(spec: LlamaSpec, cache_len: int,
+                       batch: int = 0) -> Graph:
     """Single-token generation graph: new K/V rows appended to the caches
-    (INSERT), attention joins the cache tables (paper §3.4)."""
-    return _build_graph(spec, new_tokens=1, cache_len=cache_len,
-                        is_prefill=False)
+    (INSERT), attention joins the cache tables (paper §3.4).
+
+    ``batch > 0`` builds the *batched* decode graph: a ``seq`` key of that
+    size replaces the (length-1) token dim and flows through every
+    activation table, the caches gain a leading ``seq`` key, and the
+    per-sequence decode positions arrive as the ``seq_positions`` runtime
+    vector — one relational plan advances all ``batch`` sequences per
+    invocation.  ``batch = 0`` keeps the single-sequence graph bit-identical
+    to before."""
+    return _build_graph(spec, new_tokens=(batch or 1), cache_len=cache_len,
+                        is_prefill=False, batch=batch)
 
 
 def _build_graph(spec: LlamaSpec, new_tokens: int, cache_len: int,
-                 is_prefill: bool) -> Graph:
-    g = Graph(name=("llama_prefill" if is_prefill else "llama_decode"))
+                 is_prefill: bool, batch: int = 0) -> Graph:
+    g = Graph(name=("llama_prefill" if is_prefill
+                    else (f"llama_decode_b{batch}" if batch
+                          else "llama_decode")))
     T, d, dh = new_tokens, spec.d_model, spec.head_dim
     H, Hkv = spec.n_heads, spec.n_kv
+    # batched decode: the token dim *is* the sequence dim — one new token
+    # per active sequence, attention joined per sequence against the
+    # seq-keyed caches.  INVARIANT the compiler relies on: downstream
+    # (graph.infer_shapes attn_scores, opmap.map_attn_scores/attn_output)
+    # detects the batched shape by the query's leading key naming the
+    # cache's leading key — so the token dim and the cache position dim
+    # must keep DISTINCT names in unbatched graphs ("t" vs "tp") and the
+    # SAME name ("seq") on both sides in batched ones.
+    tok_key = "seq" if batch else "t"
 
     g.inputs = ["token_ids", "freq_each_token"]
-    g.annotate("token_ids", ((("t", T)),))
-    g.annotate("freq_each_token", (("t", T), ("f", dh)))
+    g.annotate("token_ids", (((tok_key, T)),))
+    g.annotate("freq_each_token", ((tok_key, T), ("f", dh)))
     g.annotate("vocabulary", (("tok", spec.vocab), ("d", d)))
     g.initializers["vocabulary"] = None
 
     x = g.add("embedding", ["vocabulary", "token_ids"], output="x_embed")
-    g.annotate(x, (("t", T), ("d", d)))
+    g.annotate(x, ((tok_key, T), ("d", d)))
 
     for L in range(spec.n_layers):
         for w, dims in _layer_weight_dims(spec, L).items():
@@ -92,17 +112,26 @@ def _build_graph(spec: LlamaSpec, new_tokens: int, cache_len: int,
 
         # keys/values become the cache relations: rename t → tp and give
         # the cache columns distinct names so attention joins are unambiguous
-        k = g.add("rename", [k], mapping={"t": "tp"}, col_rename="kv")
-        v = g.add("rename", [v], mapping={"t": "tp"}, col_rename="vv")
+        # (batched: the seq key stays seq — the cache adds its own tp key)
+        ren = {} if batch else {"t": "tp"}
+        k = g.add("rename", [k], mapping=ren, col_rename="kv")
+        v = g.add("rename", [v], mapping=ren, col_rename="vv")
         g.inputs += [f"k_cache_L{L}", f"v_cache_L{L}"]
-        k = g.add("concat_rows", [f"k_cache_L{L}", k], cache_len=cache_len,
-                  append_key="tp", offset_name="cache_position")
-        v = g.add("concat_rows", [f"v_cache_L{L}", v], cache_len=cache_len,
-                  append_key="tp", offset_name="cache_position")
+        cache_attrs = dict(cache_len=cache_len, append_key="tp")
+        if batch:
+            cache_attrs.update(seq_key="seq", offset_name="seq_positions")
+        else:
+            cache_attrs.update(offset_name="cache_position")
+        k = g.add("concat_rows", [f"k_cache_L{L}", k], **cache_attrs)
+        v = g.add("concat_rows", [f"v_cache_L{L}", v], **cache_attrs)
 
         s = g.add("attn_scores", [q, k], n_heads=H, n_kv=Hkv, head_dim=dh)
         if is_prefill:
             s = g.add("causal_mask", [s], offset=0)
+        elif batch:
+            # batched decode: sequence s attends to cached positions ≤ its
+            # own absolute position, one entry of :seq_positions per seq
+            s = g.add("causal_mask", [s], offset_vec_name="seq_positions")
         else:
             # decode: the new token attends to cached positions ≤ its own
             # absolute position, supplied at runtime (:cache_position)
@@ -191,32 +220,54 @@ def convert_weights(params: Dict[str, np.ndarray], chunk_size: int = 128
     return env
 
 
+def copy_cache_slot(batched_env: Dict[str, DenseTable], seq_id: int,
+                    session_env: Dict[str, DenseTable]) -> None:
+    """Copy a single-sequence environment's KV-cache tables into slot
+    ``seq_id`` of a batched (seq-keyed) environment — the slot-fill step
+    that moves a prefilled sequence into a batched decode batch.  Key
+    orders are aligned by name, so the two sides may carry different
+    planner cache layouts."""
+    from repro.core.executor import permute_table_keys
+    for nm, dst in batched_env.items():
+        if not nm.startswith(("k_cache_L", "v_cache_L")):
+            continue
+        src = permute_table_keys(session_env[nm], dst.key_names[1:])
+        cn = next(iter(dst.cols))
+        dst.cols[cn] = dst.cols[cn].at[seq_id].set(src.cols[cn])
+
+
 def rope_freq_table(positions: np.ndarray, head_dim: int,
-                    theta: float = 500000.0) -> DenseTable:
-    """freq_each_token(token_id, freq_real, freq_img) for given positions."""
+                    theta: float = 500000.0, key: str = "t") -> DenseTable:
+    """freq_each_token(token_id, freq_real, freq_img) for given positions.
+
+    ``key="seq"`` keys the table by sequence for the batched decode graph
+    (one position per active sequence)."""
     half = head_dim // 2
     inv = 1.0 / (theta ** (np.arange(half, dtype=np.float32) / half))
-    ang = positions[:, None].astype(np.float32) * inv[None, :]
+    ang = np.asarray(positions)[:, None].astype(np.float32) * inv[None, :]
     return DenseTable(
-        keys=(("t", len(positions)),),
+        keys=((key, len(positions)),),
         cols={"fr": jnp.asarray(np.cos(ang)), "fi": jnp.asarray(np.sin(ang))},
         col_types={"fr": ra.VEC(half), "fi": ra.VEC(half)},
     )
 
 
-def token_table(ids: np.ndarray) -> DenseTable:
-    return scalar_table("token_ids", (("t", len(ids)),),
+def token_table(ids: np.ndarray, key: str = "t") -> DenseTable:
+    return scalar_table("token_ids", ((key, len(ids)),),
                         jnp.asarray(ids, jnp.int32))
 
 
 def empty_cache_tables(spec: LlamaSpec, cache_len: int, chunk_size: int = 128,
-                       layout: str = "row_chunk") -> Dict[str, DenseTable]:
+                       layout: str = "row_chunk",
+                       batch: int = 0) -> Dict[str, DenseTable]:
     """Preallocated KV cache tables.
 
     ``layout`` picks the physical key order (planner cache layouts):
     ``"row_chunk"`` (seed ``(tp, hk, c)``), ``"head_major"``
     (``(hk, tp, c)``) or ``"pos_major"`` (``(tp, c, hk)``); the payload is
-    always ``FLOAT[chunk]`` over head-dim chunks.
+    always ``FLOAT[chunk]`` over head-dim chunks.  ``batch > 0`` prepends a
+    ``seq`` key of that size (the batched decode pipeline's seq-keyed
+    caches); the layout permutation applies to the trailing three keys.
     """
     from repro.core.opmap import CACHE_KEY_ORDERS
     dh = spec.head_dim
@@ -224,6 +275,8 @@ def empty_cache_tables(spec: LlamaSpec, cache_len: int, chunk_size: int = 128,
     nch = dh // cs
     seed_keys = (("tp", cache_len), ("hk", spec.n_kv), ("c", nch))
     keys = tuple(seed_keys[i] for i in CACHE_KEY_ORDERS[layout])
+    if batch:
+        keys = (("seq", batch),) + keys
     shape = tuple(s for _, s in keys) + (cs,)
     env = {}
     for L in range(spec.n_layers):

@@ -29,9 +29,9 @@ from typing import Dict, List, Optional, Tuple
 from repro.core import relational as ra
 from repro.core.graph import Graph, Node
 from repro.core.relational import (
-    Collect, Filter, GroupAgg, Join, Param, Project, RelNode, RelSchema,
-    Scan, Unnest, add, call, col, const, div, floordiv, key, mod, mul, sub,
-    SCALAR, VEC,
+    Collect, Filter, GroupAgg, Join, KeyParam, Param, Project, RelNode,
+    RelSchema, Scan, Unnest, add, call, col, const, div, floordiv, key, mod,
+    mul, sub, SCALAR, VEC,
 )
 
 NEG_INF = -1e30
@@ -70,6 +70,10 @@ class Step:
     rel: Rel
     offset_name: Optional[str] = None  # append: scalar giving insert position
     append_key: Optional[str] = None   # append: cache key receiving new rows
+    # batched append: the sequence key of the cache table.  When set, the
+    # offset scalar is a per-sequence position *vector* and each sequence's
+    # new row is inserted at (seq, offset[seq]) instead of one shared offset.
+    seq_key: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -94,6 +98,9 @@ class RelPipeline:
     # map_concat_rows so the layout planner can find cache sites without
     # re-deriving them from the step list.
     cache_tables: Dict[str, str] = dataclasses.field(default_factory=dict)
+    # batched pipelines: name of the sequence key threaded through every
+    # activation/cache table (None for single-sequence pipelines)
+    seq_key: Optional[str] = None
 
 
 def _scan(name: str, keys, cols) -> Scan:
@@ -116,6 +123,7 @@ class RelCompiler:
         self.weight_schemas: Dict[str, RelSchema] = {}
         self.input_schemas: Dict[str, RelSchema] = {}
         self.cache_tables: Dict[str, str] = {}
+        self.seq_key: Optional[str] = None
 
     # -- helpers ------------------------------------------------------------
 
@@ -338,9 +346,16 @@ class RelCompiler:
         dh = node.attrs["head_dim"]
         g = n_heads // n_kv
         t_dim = q.keys[0]
-        tp_dim = k_.keys[0]
-        j = Join(left=q.plan, right=k_.plan,
-                 on=[("hk", floordiv(key("h"), const(g))), ("c", key("c"))])
+        on = []
+        if k_.keys[0][0] == t_dim[0]:
+            # batched decode: the cache carries the sequence key — each
+            # query row joins only its own sequence's cached history
+            on.append((t_dim[0], key(t_dim[0])))
+            tp_dim = k_.keys[1]
+        else:
+            tp_dim = k_.keys[0]
+        on += [("hk", floordiv(key("h"), const(g))), ("c", key("c"))]
+        j = Join(left=q.plan, right=k_.plan, on=on)
         agg = GroupAgg(
             input=j, group_keys=[t_dim[0], "h", tp_dim[0]],
             aggs=[("s", "SUM", call("scale", call("dot", col(q.col),
@@ -353,13 +368,19 @@ class RelCompiler:
         s = self.bind[node.inputs[0]]
         t_name = s.keys[0][0]
         tp_name = s.keys[2][0]
-        if node.attrs.get("offset_name"):  # dynamic decode position (§3.4)
-            off = Param(node.attrs["offset_name"])
+        if node.attrs.get("offset_vec_name"):
+            # batched decode: each sequence attends up to *its own*
+            # position — the bound parameter is a per-sequence vector and
+            # the leading key is the sequence key, not a position
+            pred = ("<=", key(tp_name),
+                    KeyParam(node.attrs["offset_vec_name"], t_name))
         else:
-            off = const(node.attrs.get("offset", 0))
-        f = Filter(input=s.plan,
-                   predicate=("<=", key(tp_name), add(key(t_name), off)),
-                   masked_value=NEG_INF)
+            if node.attrs.get("offset_name"):  # dynamic position (§3.4)
+                off = Param(node.attrs["offset_name"])
+            else:
+                off = const(node.attrs.get("offset", 0))
+            pred = ("<=", key(tp_name), add(key(t_name), off))
+        f = Filter(input=s.plan, predicate=pred, masked_value=NEG_INF)
         return Rel(plan=f, kind="scalar", keys=s.keys, col=s.col)
 
     def map_softmax(self, node: Node) -> Rel:
@@ -389,9 +410,12 @@ class RelCompiler:
         g = n_heads // n_kv
         t_dim = p.keys[0]
         tp_name = p.keys[2][0]
-        j = Join(left=p.plan, right=v.plan,
-                 on=[(tp_name, key(tp_name)),
-                     ("hk", floordiv(key("h"), const(g)))])
+        on = []
+        if v.keys[0][0] == t_dim[0]:  # batched: per-sequence cache join
+            on.append((t_dim[0], key(t_dim[0])))
+        on += [(tp_name, key(tp_name)),
+               ("hk", floordiv(key("h"), const(g)))]
+        j = Join(left=p.plan, right=v.plan, on=on)
         agg = GroupAgg(input=j, group_keys=[t_dim[0], "h", "c"],
                        aggs=[("v", "SUM", mul(col(p.col), col(v.col)))])
         return Rel(plan=agg, kind="chunked",
@@ -452,22 +476,35 @@ class RelCompiler:
 
     def map_concat_rows(self, node: Node) -> Rel:
         """KV-cache append (§3.4): INSERT the new rows into the cache table,
-        then the downstream attention scans the cache."""
+        then the downstream attention scans the cache.
+
+        Batched pipelines (``seq_key`` attr) key the cache by sequence as
+        well: the table is ``(seq, tp, …)`` and each sequence's single new
+        row is inserted at its *own* position (the offset parameter is a
+        per-sequence vector)."""
         cache_name = node.inputs[0]
         new = self.bind[node.inputs[1]]
         cache_len = node.attrs["cache_len"]
-        append_key = node.attrs.get("append_key", new.keys[0][0])
-        cache_keys = ((append_key + "p" if not append_key.endswith("p")
-                       else append_key, cache_len),) + new.keys[1:]
+        seq_key = node.attrs.get("seq_key")
+        if seq_key:
+            assert new.keys[0][0] == seq_key, (new.keys, seq_key)
+            pos_key = node.attrs.get("append_key", "tp")
+            cache_keys = (new.keys[0], (pos_key, cache_len)) + new.keys[1:]
+            self.seq_key = seq_key
+        else:
+            append_key = node.attrs.get("append_key", new.keys[0][0])
+            pos_key = (append_key + "p" if not append_key.endswith("p")
+                       else append_key)
+            cache_keys = ((pos_key, cache_len),) + new.keys[1:]
         sc = _scan(cache_name,
                    tuple(cache_keys) + (("c", new.n_chunks),),
                    ((new.col, VEC(new.chunk)),))
         self.input_schemas[cache_name] = sc.table_schema
-        self.cache_tables[cache_name] = cache_keys[0][0]
+        self.cache_tables[cache_name] = pos_key
         self.steps.append(Step(kind="append", name=cache_name, rel=new,
                                offset_name=node.attrs.get("offset_name",
                                                           "cache_position"),
-                               append_key=cache_keys[0][0]))
+                               append_key=pos_key, seq_key=seq_key))
         return Rel(plan=sc, kind="chunked", keys=tuple(cache_keys),
                    col=new.col, chunk=new.chunk, width=new.width)
 
@@ -513,6 +550,7 @@ class RelCompiler:
             bindings=self.bind,
             chunk_size=self.cs,
             cache_tables=self.cache_tables,
+            seq_key=self.seq_key,
         )
 
 

@@ -23,7 +23,7 @@ from typing import Dict
 from repro.core.graph import Graph, Node, SHAPE_OPS
 from repro.core.relational import (
     BinOp, Call, Col, Collect, Const, Expr, Filter, GroupAgg, Join, Key,
-    Project, RelNode, Scan, Unnest, walk,
+    KeyParam, Param, Project, RelNode, Scan, Unnest, walk,
 )
 from repro.core.opmap import RelPipeline
 
@@ -110,7 +110,7 @@ def _subst(expr: Expr, bindings: Dict[str, Expr]) -> Expr:
     """Substitute Col references by their defining expressions."""
     if isinstance(expr, Col):
         return bindings.get(expr.name, expr)
-    if isinstance(expr, (Key, Const)):
+    if isinstance(expr, (Key, Const, Param, KeyParam)):
         return expr
     if isinstance(expr, BinOp):
         return BinOp(expr.op, _subst(expr.lhs, bindings),

@@ -52,6 +52,33 @@ def run_pipeline(
             cache = env[step.name]
             offset = scalars.get(step.offset_name, 0)
             ax = cache.key_names.index(step.append_key)
+            if step.seq_key is not None:
+                # batched append: the new relation has one row per sequence
+                # and no position key; each sequence's row is scattered at
+                # (seq, offset[seq]) — a per-sequence INSERT position.  The
+                # cache's physical key order is planner-chosen (the seq key
+                # stays leading); align by name, then do ONE indexed
+                # scatter over (seq, append) brought to the front — no
+                # per-sequence op unroll on the decode hot path.
+                sax = cache.key_names.index(step.seq_key)
+                nseq = cache.keys[sax][1]
+                offsets = jnp.asarray(offset, jnp.int32)
+                order = [k for k in cache.key_names if k != step.append_key]
+                perm = [new.key_names.index(k) for k in order]
+                sax_new = order.index(step.seq_key)
+                cols = {}
+                for cname, arr in cache.cols.items():
+                    new_arr = new.cols[cname]
+                    vec = new_arr.ndim > len(perm)
+                    new_arr = jnp.transpose(
+                        new_arr, perm + ([len(perm)] if vec else []))
+                    a2 = jnp.moveaxis(arr, (sax, ax), (0, 1))
+                    n2 = jnp.moveaxis(new_arr, sax_new, 0).astype(arr.dtype)
+                    a2 = a2.at[jnp.arange(nseq), offsets].set(n2)
+                    cols[cname] = jnp.moveaxis(a2, (0, 1), (sax, ax))
+                env[step.name] = DenseTable(keys=cache.keys, cols=cols,
+                                            col_types=cache.col_types)
+                continue
             # the cache table's physical key order is planner-chosen
             # (row_chunk / head_major / pos_major); align the new rows'
             # axes by key name and insert at the append key's axis

@@ -76,6 +76,20 @@ class Param(Expr):
 
 
 @dataclasses.dataclass(frozen=True)
+class KeyParam(Expr):
+    """Runtime *per-key* scalar parameter: the bound value is a vector
+    indexed by the named key, so one plan serves every row of the key
+    domain with its own scalar.  Used by the batched decode pipeline for
+    the per-sequence cache position (``seq_positions[seq]``): the causal
+    mask of sequence ``s`` compares against *its* position, not a global
+    one.  SQL renders it as a 1-indexed list-parameter lookup
+    (``list_extract(:name, key + 1)``)."""
+
+    name: str
+    key: str
+
+
+@dataclasses.dataclass(frozen=True)
 class BinOp(Expr):
     """Elementwise arithmetic.  On vector columns this is the paper's
     hadamard_prod / element_sum / element_neg_sum UDF family."""
@@ -290,7 +304,7 @@ def expr_type(expr: Expr, schema: RelSchema) -> str:
     """Column type (SCALAR | vec[n]) of an expression over ``schema``."""
     if isinstance(expr, Col):
         return schema.col_type(expr.name)
-    if isinstance(expr, (Key, Const, Param)):
+    if isinstance(expr, (Key, Const, Param, KeyParam)):
         return SCALAR
     if isinstance(expr, BinOp):
         lt, rt = expr_type(expr.lhs, schema), expr_type(expr.rhs, schema)

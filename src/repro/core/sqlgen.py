@@ -19,8 +19,8 @@ from typing import Dict, List, Tuple
 
 from repro.core.relational import (
     BinOp, Call, Col, Collect, Const, Expr, Filter, GroupAgg, Join, Key,
-    Param, Project, RelNode, RelSchema, Scan, Unnest, expr_type, is_vec,
-    resolve, vec_width, SCALAR,
+    KeyParam, Param, Project, RelNode, RelSchema, Scan, Unnest, expr_type,
+    is_vec, resolve, vec_width, SCALAR,
 )
 from repro.core.opmap import RelPipeline
 
@@ -64,6 +64,12 @@ class SQLGenerator:
             return f"list_transform({arr}, x -> {body})"
         return f"map_vec({arr}, '{body}')"
 
+    def _key_param(self, name: str, key_ref: str) -> str:
+        """Per-key list-parameter lookup (1-indexed by the key column)."""
+        if self.dialect == "duckdb":
+            return f"list_extract(:{name}, {key_ref} + 1)"
+        return f":{name}[{key_ref} + 1]"
+
     def render_expr(self, e: Expr, schema: RelSchema, qual: str = "") -> str:
         q = f"{qual}." if qual else ""
 
@@ -78,6 +84,10 @@ class SQLGenerator:
                         else f"{v!r}"), False
             if isinstance(e, Param):
                 return f":{e.name}", False
+            if isinstance(e, KeyParam):
+                # per-key parameter vector bound as a list: 1-indexed lookup
+                # by the key column (batched decode's :seq_positions)
+                return self._key_param(e.name, f"{q}{_sn(e.key)}"), False
             if isinstance(e, BinOp):
                 (ls, lv), (rs, rv) = rec(e.lhs), rec(e.rhs)
                 if lv and rv:
@@ -312,9 +322,29 @@ class SQLGenerator:
                     with_clause = ",\n  ".join(
                         f"{n} AS ({sql})" for n, sql in ctes)
                     sel = f"WITH {with_clause}\n{sel}"
+                sel_s = resolve(root)
+                if step.seq_key:
+                    # batched append: the SELECT has one row per sequence
+                    # and no position key — wrap it to compute each row's
+                    # INSERT position from the per-sequence parameter
+                    # vector, in the cache table's physical key order
+                    cache_s = self.p.input_schemas[step.name]
+                    pos = self._key_param(step.offset_name,
+                                          f"S.{_sn(step.seq_key)}")
+                    parts = [f"{pos} AS {_sn(k)}" if k == step.append_key
+                             else f"S.{_sn(k)}" for k in cache_s.key_names]
+                    parts += [f"S.{_sn(c)}" for c in sel_s.col_names]
+                    sel = (f"SELECT {', '.join(parts)} FROM (\n{sel}\n"
+                           f") AS S")
+                    collist = ", ".join(
+                        _sn(c) for c in cache_s.key_names + sel_s.col_names)
+                    out.append(
+                        f"-- batched KV-cache append (per-seq rows at "
+                        f":{step.offset_name}[seq])\n"
+                        f"INSERT INTO {_sn(step.name)} ({collist})\n{sel};")
+                    continue
                 # name the target columns: the cache table's physical key
                 # order is planner-chosen and need not match the SELECT's
-                sel_s = resolve(root)
                 collist = ", ".join(
                     _sn(c) for c in sel_s.key_names + sel_s.col_names)
                 out.append(

@@ -35,8 +35,21 @@ column cost with ``m = H · dh`` output features chunked per head
 Cache layouts price the *decode attention* access pattern instead of a
 matmul: every layout scans the same ``S · H_kv · n_chunks`` cache rows per
 join, so the decision is driven by *locality* — the number of contiguous
-row segments the per-head history scan and the per-token INSERT touch
-(:func:`cache_layout_cost`), weighted by ``CostParams.seek_weight``.
+row segments the history scans and the INSERT of the new tokens touch
+(:func:`cache_layout_cost`), weighted by ``CostParams.seek_weight``.  The
+INSERT term scales with the tokens appended per invocation, so
+append-dominated (prefill-heavy) pricing can rank ``pos_major`` first
+while decode-dominated pricing keeps ``head_major`` — the measured split
+in ``BENCH_attn_layout.json``.
+
+Batch size is a pricing input, not a special case: a batched decode
+pipeline's activation tables carry the ``seq`` key, so every matmul
+site's ``seq_len`` (the product of its non-head base keys) is the batch
+size B and the matmul terms scale accordingly; cache sites carry
+``batch`` explicitly and multiply their per-sequence locality terms by
+it.  Column-layout benefit per byte therefore *grows* with B — the
+weight scan amortises over the whole batch — which is why the planner
+re-prices (rather than reuses) layouts for batched plans.
 
 Chunk size as a degree of freedom
 ---------------------------------
@@ -253,7 +266,8 @@ class CacheCost:
 
 
 def cache_layout_cost(layout: str, cache_len: int, n_heads: int,
-                      n_chunks: int, new_tokens: int = 1) -> CacheCost:
+                      n_chunks: int, new_tokens: int = 1,
+                      batch: int = 1) -> CacheCost:
     """Price one pipeline invocation (``new_tokens`` appended, then two
     attention joins scanning all ``cache_len`` positions).
 
@@ -265,9 +279,24 @@ def cache_layout_cost(layout: str, cache_len: int, n_heads: int,
       head_major (hk, tp, c): per-head history is one run of
                  ``S·n_chunks`` → 1 run/head; append scatters one
                  ``n_chunks`` run per head per token.
-      pos_major  (tp, c, hk): heads are innermost — per-head reads are
-                 fully strided (``S·n_chunks`` runs/head); append writes
-                 one contiguous block per token.
+      pos_major  (tp, c, hk): heads are innermost — the attention joins'
+                 head-group gather sweeps every head of one (position,
+                 chunk) in a single contiguous run → ``S·n_chunks`` runs
+                 per join (*not* per head: the vectorised scan reads all
+                 heads of a position together); append writes one
+                 contiguous block per token.
+
+    The append terms scale with ``new_tokens`` while the read terms scale
+    with the history, so prefill-heavy invocations (appends dominate,
+    ``T ≳ S``) rank ``pos_major`` first: its reads beat ``row_chunk``
+    whenever ``n_chunks < n_heads`` and its position-outer writes beat
+    ``head_major``'s per-head scatter once ``T·(H−1) > 2·S·C − 2·H``.
+    Decode-dominated invocations (T = 1, appends negligible) still rank
+    ``head_major`` first on reads.
+
+    ``batch`` multiplies every term: a batched decode tick runs the same
+    per-sequence access pattern for each of the ``batch`` sequences (the
+    seq key is the outermost block of the seq-keyed cache tables).
     """
     S, H, C, T = cache_len, n_heads, n_chunks, new_tokens
     scan_rows = 2 * S * H * C  # score join + attn-output join
@@ -276,20 +305,27 @@ def cache_layout_cost(layout: str, cache_len: int, n_heads: int,
     elif layout == CACHE_HEAD_MAJOR:
         read_seg, write_seg = 2 * H, T * H
     elif layout == CACHE_POS_MAJOR:
-        read_seg, write_seg = 2 * H * S * C, T
+        read_seg, write_seg = 2 * S * C, T
     else:
         raise ValueError(f"unknown cache layout {layout!r}")
-    return CacheCost(layout=layout, scan_rows=scan_rows,
-                     read_segments=read_seg, write_segments=write_seg)
+    return CacheCost(layout=layout, scan_rows=batch * scan_rows,
+                     read_segments=batch * read_seg,
+                     write_segments=batch * write_seg)
 
 
 def cache_site_costs(site: "CacheSite", params: CostParams):
-    """{layout: total} for every cache layout of a matched cache site."""
+    """{layout: total} for every cache layout of a matched cache site.
+
+    Batched sites (``seq_key`` set) price at their batch size: each of the
+    ``site.batch`` sequences appends one row and scans its own history per
+    tick, regardless of ``params.seq_len``.
+    """
     from repro.planner.layout import CACHE_LAYOUTS
+    new_tokens = 1 if site.seq_key is not None else params.seq_len
     return {
         layout: cache_layout_cost(layout, site.n_pos, site.n_heads,
-                                  site.n_chunks,
-                                  new_tokens=params.seq_len).total(params)
+                                  site.n_chunks, new_tokens=new_tokens,
+                                  batch=site.batch).total(params)
         for layout in CACHE_LAYOUTS
     }
 
@@ -308,13 +344,14 @@ def cache_chunk_costs(site: "CacheSite", params: CostParams,
     """
     from repro.planner.layout import CACHE_LAYOUTS
     head_dim = site.head_dim
+    new_tokens = 1 if site.seq_key is not None else params.seq_len
     out = {}
     for cs in site.chunk_candidates(candidates):
         nch = max(1, head_dim // cs)
         for layout in CACHE_LAYOUTS:
             out[(layout, cs)] = cache_layout_cost(
                 layout, site.n_pos, site.n_heads, nch,
-                new_tokens=params.seq_len).total(params)
+                new_tokens=new_tokens, batch=site.batch).total(params)
     return out
 
 

@@ -133,9 +133,16 @@ def colh_schema(n_heads: int, in_features: int, head_dim: int,
 
 
 def cache_schema(seed_schema: RelSchema, layout: str) -> RelSchema:
-    """Permute a seed ``(tp, hk, c)`` cache schema into ``layout``'s order."""
+    """Permute a seed ``(tp, hk, c)`` cache schema into ``layout``'s order.
+
+    Batched (4-key) cache schemas keep their leading ``seq`` key in place —
+    the layout permutes the physical clustering *within* one sequence's
+    rows; sequences stay the outermost blocks.
+    """
     perm = CACHE_KEY_ORDERS[layout]
-    return RelSchema(keys=tuple(seed_schema.keys[i] for i in perm),
+    lead = seed_schema.keys[:-3]          # () or ((seq, B),)
+    tail = seed_schema.keys[-3:]
+    return RelSchema(keys=lead + tuple(tail[i] for i in perm),
                      cols=seed_schema.cols)
 
 
@@ -388,12 +395,20 @@ class CacheSite:
     n_heads: int
     n_chunks: int
     chunk: int
+    # batched pipelines: the cache's leading sequence key and its size (the
+    # per-tick batch B) — pricing multiplies the per-sequence locality terms
+    # by the batch, and the layout permutation leaves the seq key leading
+    seq_key: Optional[str] = None
+    batch: int = 1
 
     @property
     def seed_schema(self) -> RelSchema:
-        """The seed (tp, hk, c) schema regardless of current key order."""
+        """The seed (tp, hk, c) schema — with any leading seq key kept in
+        front — regardless of current key order."""
         s = self.scans[0].table_schema
-        order = {self.pos_key: 0, self.head_key: 1, self.chunk_key: 2}
+        order = {self.pos_key: 1, self.head_key: 2, self.chunk_key: 3}
+        if self.seq_key is not None:
+            order[self.seq_key] = 0
         keys = tuple(sorted(s.keys, key=lambda k: order[k[0]]))
         return RelSchema(keys=keys, cols=s.cols)
 
@@ -416,13 +431,16 @@ def match_cache_sites(pipeline) -> Tuple[CacheSite, ...]:
     """Find every append-target cache table and all Scans referencing it.
 
     Cache tables are the targets of ``append`` steps; their seed schema is
-    ``(pos, head, chunk) + one vec column`` (``opmap.map_concat_rows``).
+    ``(pos, head, chunk) + one vec column`` (``opmap.map_concat_rows``), or
+    ``(seq, pos, head, chunk)`` for batched pipelines (the pipeline's
+    ``seq_key`` names the leading batch key).
     """
     from repro.core.relational import walk
     append_keys = dict(getattr(pipeline, "cache_tables", {}) or {})
     if not append_keys:  # pipelines from older compilers: derive from steps
         append_keys = {s.name: s.append_key for s in pipeline.steps
                        if s.kind == "append"}
+    seq_key = getattr(pipeline, "seq_key", None)
     scans: Dict[str, list] = {}
     seen: set = set()
     for step in pipeline.steps:
@@ -434,14 +452,19 @@ def match_cache_sites(pipeline) -> Tuple[CacheSite, ...]:
     sites = []
     for table, table_scans in scans.items():
         schema = table_scans[0].table_schema
-        if len(schema.keys) != 3 or len(schema.cols) != 1:
+        if len(schema.cols) != 1:
+            continue
+        names = dict(schema.keys)
+        batched = (seq_key is not None and len(schema.keys) == 4
+                   and seq_key in names)
+        if not batched and len(schema.keys) != 3:
             continue
         pos_key = append_keys[table]
-        names = dict(schema.keys)
         if pos_key not in names:
             continue
         # the chunk key is "c" by construction; the head key is the third
-        others = [k for k in schema.key_names if k not in (pos_key, "c")]
+        skip = (pos_key, "c") + ((seq_key,) if batched else ())
+        others = [k for k in schema.key_names if k not in skip]
         if "c" not in names or len(others) != 1:
             continue
         head_key = others[0]
@@ -455,5 +478,7 @@ def match_cache_sites(pipeline) -> Tuple[CacheSite, ...]:
             n_heads=names[head_key],
             n_chunks=names["c"],
             chunk=ra.vec_width(schema.cols[0][1]),
+            seq_key=seq_key if batched else None,
+            batch=names[seq_key] if batched else 1,
         ))
     return tuple(sites)

@@ -138,6 +138,10 @@ class RelationalEngine:
         self._chunk_candidates = chunk_candidates
         self._cost_params = cost_params
         self._prefill_pipes: Dict[int, object] = {}
+        # batched decode plans, keyed by batch-size bucket (powers of two):
+        # sessions join/leave the batch without replanning — only a tick
+        # whose bucket was never seen compiles a new plan
+        self._batched_pipes: Dict[int, object] = {}
         # paged residency: duplicate column copies compete with the working
         # set, so the global residency pass runs under the pager budget;
         # in-memory residency is unbounded.  One ResidencyPool is shared by
@@ -152,16 +156,9 @@ class RelationalEngine:
         # the LazyEnv so prefill planning extends it in place
         self._table_chunks: Dict[str, int] = {}
 
-        g = lg.build_decode_graph(spec, cache_len=max_len)
-        infer_shapes(g)
-        preoptimize(g)
-        self.decode_pipe = op_map(g, chunk_size=self.cs)
-        postoptimize(self.decode_pipe, layout_mode=row2col,
-                     cache_mode=cache_layout,
-                     cost_params=cost_params,
-                     chunk_mode=self._chunk_mode,
-                     chunk_candidates=chunk_candidates,
-                     pool=self._residency_pool)
+        self.decode_pipe = self._compile_pipe(
+            lg.build_decode_graph(spec, cache_len=max_len),
+            cache_mode=cache_layout)
         self._table_chunks.update(self.decode_pipe.table_chunks)
         # resolved decode-time cache layout; prefill pipelines are forced to
         # it (they share the session environment with decode steps).  When
@@ -185,6 +182,34 @@ class RelationalEngine:
             self.env_base = LazyEnv(self.pager, self.cs, _chunked_table,
                                     table_sizes=self._table_chunks)
         self._register_layouts(self.decode_pipe)
+
+    def _compile_pipe(self, g, cache_mode: str):
+        """Shared graph → planned-pipeline compile path.  Every pipeline
+        the engine builds (decode, prefill, batched decode) MUST come
+        through here so they plan under identical knobs: one drift — e.g.
+        a plan missing the shared residency pool or the pinned per-table
+        chunk sizes — and two pipelines would disagree about the physical
+        tables they share.  Only the graph and the cache mode (the seed
+        decode plan resolves the knob; later plans are forced to its
+        choice) differ per call site.
+
+        Per-table chunk pinning reads ``self._table_chunks`` at call time:
+        empty for the seed decode plan (which *makes* the choices), the
+        decode plan's choices for every later plan.
+        """
+        infer_shapes(g)
+        preoptimize(g)
+        pipe = op_map(g, chunk_size=self.cs)
+        postoptimize(pipe, layout_mode=self.row2col,
+                     cache_mode=cache_mode,
+                     cost_params=self._cost_params,
+                     chunk_mode=self._chunk_mode,
+                     chunk_candidates=self._chunk_candidates,
+                     table_chunks=(dict(self._table_chunks)
+                                   if self._chunk_mode != "off" and
+                                   self._table_chunks else None),
+                     pool=self._residency_pool)
+        return pipe
 
     def _register_layouts(self, pipe) -> None:
         """Make a pipeline's column-layout tables resolvable: materialised
@@ -215,34 +240,52 @@ class RelationalEngine:
 
     def _prefill_pipe(self, T: int):
         if T not in self._prefill_pipes:
-            g = lg.build_prefill_graph(self.spec, T, cache_len=self.max_len)
-            infer_shapes(g)
-            preoptimize(g)
-            pipe = op_map(g, chunk_size=self.cs)
             # prefill shares the session environment with decode: it draws
             # on the same residency pool and is pinned to the decode plan's
             # per-table chunk sizes (both pipelines scan the same physical
-            # tables)
-            postoptimize(pipe, layout_mode=self.row2col,
-                         cache_mode=self._prefill_cache_mode,
-                         cost_params=self._cost_params,
-                         chunk_mode=self._chunk_mode,
-                         chunk_candidates=self._chunk_candidates,
-                         table_chunks=(dict(self._table_chunks)
-                                       if self._chunk_mode != "off"
-                                       else None),
-                         pool=self._residency_pool)
+            # tables) — all enforced by the shared compile path
+            pipe = self._compile_pipe(
+                lg.build_prefill_graph(self.spec, T, cache_len=self.max_len),
+                cache_mode=self._prefill_cache_mode)
             self._register_layouts(pipe)
             self._prefill_pipes[T] = pipe
         return self._prefill_pipes[T]
 
-    def _fresh_env(self):
+    def _batched_decode_pipe(self, batch: int):
+        """Compile (once per batch-size bucket) the seq-keyed decode plan
+        that advances ``batch`` sequences in ONE ``run_pipeline`` call.
+
+        The plan is priced at batch size B (the matmul sites' seq_len *is*
+        the batch), draws on the same residency pool as the decode/prefill
+        plans, is pinned to their per-table chunk sizes, and is forced to
+        the session cache layout (the batched cache pool's key order).
+        """
+        if batch not in self._batched_pipes:
+            pipe = self._compile_pipe(
+                lg.build_decode_graph(self.spec, cache_len=self.max_len,
+                                      batch=batch),
+                cache_mode=self._prefill_cache_mode)
+            self._register_layouts(pipe)
+            self._batched_pipes[batch] = pipe
+        return self._batched_pipes[batch]
+
+    @staticmethod
+    def _decode_bucket(batch: int) -> int:
+        """Batch-size bucket (next power of two) a tick's plan is keyed by."""
+        b = 1
+        while b < batch:
+            b *= 2
+        return b
+
+    def _weights_env(self):
         if self.residency == "in_memory":
-            env = dict(self.env_base)
-        else:
-            # .copy() keeps the shared table_sizes reference so sessions
-            # wrap cold arrays at the planner's per-table chunk sizes
-            env = self.env_base.copy()
+            return dict(self.env_base)
+        # .copy() keeps the shared table_sizes reference so sessions
+        # wrap cold arrays at the planner's per-table chunk sizes
+        return self.env_base.copy()
+
+    def _fresh_env(self):
+        env = self._weights_env()
         env.update(lg.empty_cache_tables(self.spec, cache_len=self.max_len,
                                          chunk_size=self.cs,
                                          layout=self.cache_layout))
@@ -298,6 +341,96 @@ class RelationalEngine:
             sum(int(np.prod(t.cols[c].shape)) * 4
                 for t in self.env_base.values() for c in t.cols)
         return GenerationResult(tokens, ttft, tpot, peak, stats)
+
+    # -- batched serving API (one relational plan per scheduler tick) ---------
+
+    def batched_decoder(self, max_seqs: int) -> "BatchedDecoder":
+        """Seq-slotted decode front-end: ``prefill``/``decode`` callbacks
+        for :class:`~repro.serving.scheduler.ContinuousBatcher`, with
+        ``decode`` advancing ALL active sequences in ONE ``run_pipeline``
+        call on the batched plan."""
+        return BatchedDecoder(self, max_seqs)
+
+
+class BatchedDecoder:
+    """Batched relational decode over seq-slotted cache tables.
+
+    Wraps a :class:`RelationalEngine` with the scheduler's callback shape:
+
+      ``prefill(prompt, seq_id)``       — single-sequence prefill, cache
+                                          rows copied into slot ``seq_id``
+      ``decode(seq_ids, last_tokens)``  — ONE ``run_pipeline`` call on the
+                                          batch-bucketed seq-keyed plan;
+                                          per-sequence positions ride in as
+                                          the ``seq_positions`` vector
+
+    Ticks whose batch size is below the bucket pad by repeating the last
+    sequence: the padded rows recompute that sequence's step and scatter
+    back identical values, so padding is semantically free.
+    """
+
+    def __init__(self, engine: RelationalEngine, max_seqs: int):
+        from repro.serving.kvcache import BatchedCacheTables
+        self.engine = engine
+        self.pool = BatchedCacheTables(engine.spec, max_seqs, engine.max_len,
+                                       engine.cs,
+                                       layout=engine.cache_layout)
+        self.decode_calls = 0  # == run_pipeline calls for decode ticks
+        # gathered batch views cached across ticks: re-gathering the full
+        # cache_len-deep tables every tick is O(B·cache_len) read traffic
+        # when only one row per sequence changed — reuse last tick's
+        # updated views while batch membership and slot contents are
+        # unchanged.  Any slot mutation outside decode (prefill, free)
+        # invalidates.
+        self._view_ids: Optional[tuple] = None
+        self._views: Optional[dict] = None
+
+    def prefill(self, prompt: List[int], seq_id: int) -> int:
+        # write_prefill overwrites the WHOLE slot (full cache_len), so a
+        # reused slot cannot leak a previous sequence's rows even if the
+        # scheduler never called free() for it
+        sess = self.engine.start_session(list(prompt))
+        self.pool.write_prefill(seq_id, sess["env"], len(prompt))
+        self._view_ids = None
+        return sess["tok"]
+
+    def free(self, seq_id: int) -> None:
+        self.pool.free(seq_id)
+        self._view_ids = None
+
+    def decode(self, seq_ids: List[int], last_tokens: List[int]
+               ) -> List[int]:
+        eng = self.engine
+        B = len(seq_ids)
+        bucket = eng._decode_bucket(B)
+        ids = list(seq_ids) + [seq_ids[-1]] * (bucket - B)
+        toks = list(last_tokens) + [last_tokens[-1]] * (bucket - B)
+        pipe = eng._batched_decode_pipe(bucket)
+        positions = self.pool.positions[np.asarray(ids)]
+        env = eng._weights_env()
+        if self._view_ids == tuple(ids):
+            env.update(self._views)  # unchanged batch: reuse last views
+        else:
+            env.update(self.pool.gather_views(ids))
+        env["token_ids"] = lg.token_table(np.asarray(toks, np.int32),
+                                          key="seq")
+        env["freq_each_token"] = lg.rope_freq_table(
+            positions, eng.spec.head_dim, eng.spec.rope_theta, key="seq")
+        outs, env = run_pipeline(
+            pipe, env,
+            scalars={"seq_positions": jnp.asarray(positions, jnp.int32)})
+        self.decode_calls += 1
+        # the tick's only cache mutation is one appended row per sequence
+        # at positions[b] — write back just those rows; the updated views
+        # (which already contain them) serve the next tick's gather
+        self.pool.scatter_rows(ids, env, positions)
+        self._views = {name: env[name] for name in self.pool.tables}
+        self._view_ids = tuple(ids)
+        for s in seq_ids:
+            self.pool.positions[s] += 1
+        logits = np.asarray(outs["logits"].cols["v"]).reshape(
+            bucket, -1)[:B, : eng.spec.vocab]
+        return [int(t) for t in np.argmax(logits, axis=1)]
 
 
 class DirectEngine:

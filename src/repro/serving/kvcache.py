@@ -155,3 +155,100 @@ class PagedKVCache:
             k = k.transpose(0, 2, 1, 3)
             v = v.transpose(0, 2, 1, 3)
         return k, v
+
+
+class BatchedCacheTables:
+    """Seq-indexed views over the relational KV-cache *tables* for batched
+    decode (the paper's §3.4 cache relations with a leading ``seq`` key).
+
+    One device-resident pool per cache table holds ``max_seqs`` slots; the
+    batched decode pipeline sees gathered ``(seq ∈ [B), …)`` table views,
+    runs ONE plan for the whole batch, and the functionally-updated tables
+    are scattered back into their slots.  Sequences join (``write_prefill``)
+    and leave (``free``) without touching the other slots — and without any
+    replanning, since the plan is keyed only by the batch size.
+
+    The trailing key order is the planner-chosen cache layout (``layout``),
+    matching the single-sequence prefill environments that fill the slots.
+    """
+
+    def __init__(self, spec, max_seqs: int, cache_len: int, chunk_size: int,
+                 layout: str = "row_chunk"):
+        from repro.core.llama_graph import empty_cache_tables
+        self.max_seqs = max_seqs
+        self.cache_len = cache_len
+        self.tables = empty_cache_tables(spec, cache_len,
+                                         chunk_size=chunk_size,
+                                         layout=layout, batch=max_seqs)
+        self.positions = np.zeros(max_seqs, np.int32)
+
+    def write_prefill(self, seq_id: int, env, length: int) -> None:
+        """Copy a single-sequence session's cache tables into a slot —
+        the WHOLE slot is overwritten, so slot reuse never depends on
+        :meth:`free` having run.  Key orders are aligned by name (the
+        session caches may carry a different planner layout)."""
+        from repro.core.llama_graph import copy_cache_slot
+        copy_cache_slot(self.tables, seq_id, env)
+        self.positions[seq_id] = length
+
+    def free(self, seq_id: int) -> None:
+        """Release a slot: reset its position.  This is state hygiene and
+        observability, not a correctness requirement — stale rows are
+        never read (gathers cover active slots only, and reads beyond a
+        sequence's position are causally masked) and ``write_prefill``
+        overwrites the whole slot on reuse; zeroing the device arrays
+        here would cost 2·n_layers scatters per completion for nothing."""
+        self.positions[seq_id] = 0
+
+    def gather_views(self, seq_ids):
+        """Batch views: {table: DenseTable keyed (seq ∈ [B), …)}.
+
+        Duplicate ids are allowed (batch-size-bucket padding): the padded
+        rows compute redundantly and scatter back identical values.
+        """
+        from repro.core.executor import DenseTable
+        ids = np.asarray(seq_ids, np.int32)
+        out = {}
+        for name, pool in self.tables.items():
+            cn = next(iter(pool.cols))
+            out[name] = DenseTable(
+                keys=(("seq", len(ids)),) + pool.keys[1:],
+                cols={cn: pool.cols[cn][ids]},
+                col_types=dict(pool.col_types))
+        return out
+
+    def scatter(self, seq_ids, env) -> None:
+        """Write updated batch views back into their slots (full tables).
+
+        Reference/bulk path (tests, checkpoint-style state import) — the
+        decode hot path uses :meth:`scatter_rows`, which writes back only
+        the one row per sequence a tick appends."""
+        ids = np.asarray(seq_ids, np.int32)
+        for name, pool in self.tables.items():
+            cn = next(iter(pool.cols))
+            pool.cols[cn] = pool.cols[cn].at[ids].set(
+                env[name].cols[cn].astype(pool.cols[cn].dtype))
+
+    def scatter_rows(self, seq_ids, env, positions,
+                     pos_key: str = "tp") -> None:
+        """Write back only the rows a decode tick appended.
+
+        A decode tick's sole cache mutation is one new row per sequence at
+        ``(seq, positions[seq])``, so copying the full ``cache_len``-deep
+        views back (:meth:`scatter`) is O(cache_len) wasted write traffic
+        per tick — this extracts each sequence's appended row from the
+        updated view and scatters just that, at the pool's (planner-chosen)
+        position axis.  Duplicate ids (bucket padding) write identical
+        values.
+        """
+        ids = jnp.asarray(seq_ids, jnp.int32)
+        pos = jnp.asarray(positions, jnp.int32)
+        b_idx = jnp.arange(len(seq_ids))
+        for name, pool in self.tables.items():
+            cn = next(iter(pool.cols))
+            pax = pool.key_names.index(pos_key)  # seq is axis 0
+            upd = env[name].cols[cn].astype(pool.cols[cn].dtype)
+            rows = jnp.moveaxis(upd, pax, 1)[b_idx, pos]
+            p2 = jnp.moveaxis(pool.cols[cn], pax, 1)
+            p2 = p2.at[ids, pos].set(rows)
+            pool.cols[cn] = jnp.moveaxis(p2, 1, pax)

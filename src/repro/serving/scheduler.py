@@ -45,18 +45,36 @@ class ContinuousBatcher:
     ``prefill_fn(request, seq_id)`` must fill the KV cache for the prompt
     and return the first generated token; ``decode_fn(seq_ids, last_tokens)``
     advances every active sequence one step and returns the next tokens.
+    ``release_fn(seq_id)``, when given, is called whenever a sequence
+    leaves the batch (completion or preemption) so decode-side state keyed
+    by slot — e.g. a ``BatchedDecoder``'s cache pool (pass ``dec.free``) —
+    is released alongside the KV pages.
+
+    The scheduler owns ``kv.seq_lens`` end to end (prompt length at admit,
+    +1 per decode tick): prefill_fn/decode_fn implementations must NOT
+    advance it themselves.  In particular a decode_fn built on
+    ``PagedKVCache.append`` (which also bumps ``seq_lens``) would
+    double-advance — write at the pre-tick position and let the scheduler
+    account for it.
     """
 
     def __init__(self, kv: PagedKVCache, prefill_fn: Callable,
-                 decode_fn: Callable, max_batch: int):
+                 decode_fn: Callable, max_batch: int,
+                 release_fn: Optional[Callable] = None):
         self.kv = kv
         self.prefill_fn = prefill_fn
         self.decode_fn = decode_fn
+        self.release_fn = release_fn
         self.max_batch = max_batch
         self.queue: Deque[Request] = deque()
         self.active: Dict[int, Request] = {}   # seq_id -> request
         self.finished: List[Request] = []
         self.stats = SchedulerStats()
+
+    def _release(self, seq_id: int) -> None:
+        self.kv.free_seq(seq_id)
+        if self.release_fn is not None:
+            self.release_fn(seq_id)
 
     def submit(self, req: Request) -> None:
         req.arrival_s = time.perf_counter()
@@ -73,14 +91,21 @@ class ContinuousBatcher:
                           if not self.kv._active.get(i, False))
             self.kv.allocate_seq(seq_id)
             tok = self.prefill_fn(req, seq_id)
+            # the scheduler owns kv.seq_lens end to end: the prompt length
+            # here, the per-tick decode increment in tick()
+            self.kv.seq_lens[seq_id] = len(req.prompt)
             self.stats.prefills += 1
             req.generated.append(tok)
-            req.first_token_s = time.perf_counter() - req.arrival_s
+            if req.first_token_s is None:
+                # a preempted request re-prefills, but its first token was
+                # already delivered — TTFT is measured once, at the first
+                # prefill, and must not be overwritten by the re-admission
+                req.first_token_s = time.perf_counter() - req.arrival_s
             self.active[seq_id] = req
 
     def _preempt(self, seq_id: int) -> None:
         req = self.active.pop(seq_id)
-        self.kv.free_seq(seq_id)
+        self._release(seq_id)
         req.generated.clear()
         req.preemptions += 1
         self.stats.preemptions += 1
@@ -118,6 +143,11 @@ class ContinuousBatcher:
         last = [self.active[s].generated[-1] for s in seq_ids]
         next_tokens = self.decode_fn(seq_ids, last)
         self.stats.decode_steps += 1
+        # one decode step appended one token per active sequence: the
+        # scheduler owns this bookkeeping so decode_fn implementations
+        # don't each have to repeat (or forget) it
+        for s in seq_ids:
+            self.kv.seq_lens[s] += 1
 
         for seq_id, tok in zip(seq_ids, next_tokens):
             req = self.active[seq_id]
@@ -126,7 +156,7 @@ class ContinuousBatcher:
                 req.done_s = time.perf_counter() - req.arrival_s
                 self.finished.append(req)
                 self.stats.completed += 1
-                self.kv.free_seq(seq_id)
+                self._release(seq_id)
                 del self.active[seq_id]
         return bool(self.active or self.queue)
 

@@ -192,17 +192,61 @@ class TestCostModel:
         assert pipe.layouts["Q_weights_L0__colh"] == COL_CHUNK_HEADS
 
     def test_cache_layout_costs(self):
-        """head_major minimises decode read seeks; row_chunk wins appends;
-        pos_major reads are fully strided."""
+        """head_major minimises decode read seeks; position-outer layouts
+        win appends; pos_major's vectorised head-innermost reads beat
+        row_chunk's per-head strides whenever n_chunks < n_heads."""
         costs = {L: cache_layout_cost(L, cache_len=512, n_heads=8,
                                       n_chunks=2) for L in CACHE_LAYOUTS}
         # scan rows are layout-invariant
         assert len({c.scan_rows for c in costs.values()}) == 1
         p = CostParams()
         assert costs[CACHE_HEAD_MAJOR].total(p) < \
-            costs[CACHE_ROW_CHUNK].total(p) < costs[CACHE_POS_MAJOR].total(p)
+            costs[CACHE_POS_MAJOR].total(p) < costs[CACHE_ROW_CHUNK].total(p)
         assert costs[CACHE_ROW_CHUNK].write_segments < \
             costs[CACHE_HEAD_MAJOR].write_segments
+
+    def test_prefill_appends_rank_pos_major_first(self):
+        """The append-dominated prefill term (ROADMAP "prefill-aware cache
+        layouts", first half): when one invocation appends T ≈ S tokens,
+        head_major's per-head write scatter overtakes its read advantage
+        and pos_major — contiguous position-outer writes plus vectorised
+        head-innermost reads — ranks first; decode pricing (T = 1) still
+        ranks head_major first."""
+        p = CostParams()
+        S, H, C = 64, 4, 1
+        prefill = {L: cache_layout_cost(L, S, H, C, new_tokens=S).total(p)
+                   for L in CACHE_LAYOUTS}
+        assert min(prefill, key=prefill.get) == CACHE_POS_MAJOR
+        decode = {L: cache_layout_cost(L, S, H, C, new_tokens=1).total(p)
+                  for L in CACHE_LAYOUTS}
+        assert min(decode, key=decode.get) == CACHE_HEAD_MAJOR
+
+    def test_batched_cache_cost_scales_with_batch(self):
+        """A batched tick runs the same per-sequence locality pattern B
+        times; the ranking is batch-invariant."""
+        p = CostParams()
+        for L in CACHE_LAYOUTS:
+            c1 = cache_layout_cost(L, 128, 4, 2, new_tokens=1)
+            c4 = cache_layout_cost(L, 128, 4, 2, new_tokens=1, batch=4)
+            assert c4.total(p) == 4 * c1.total(p)
+
+    def test_batched_site_prices_one_token_per_seq(self):
+        """Regression: a *batched* cache site appends one token per
+        sequence per tick even under a large ``params.seq_len`` — the
+        seq key, not the batch size, is the discriminator (a B=1 batched
+        plan must not be priced as a prefill-style bulk append)."""
+        from repro.core.graph import infer_shapes
+        from repro.planner.cost import cache_site_costs
+        g = build_decode_graph(SPEC, cache_len=64, batch=1)
+        infer_shapes(g)
+        pipe = op_map(g, chunk_size=8)
+        sites = match_cache_sites(pipe)
+        assert sites and all(s.seq_key == "seq" and s.batch == 1
+                             for s in sites)
+        costs = cache_site_costs(sites[0], CostParams(seq_len=512))
+        # decode-dominated pricing: head_major first, not the
+        # append-dominated pos_major ranking
+        assert min(costs, key=costs.get) == CACHE_HEAD_MAJOR
 
 
 def _run_llama_prefill(params, ids, cs, mode, cache_len=None):

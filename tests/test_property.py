@@ -212,6 +212,97 @@ def test_moe_gates_normalised(n, k, e):
     assert np.all(np.isfinite(np.asarray(y, np.float32)))
 
 
+# --- batched-vs-looped decode equivalence (tentpole property) --------------
+
+_BD_SPEC = None
+_BD_CACHE = {}
+
+
+def _bd_setup():
+    """Tiny Llama + memoised pipelines shared across hypothesis examples."""
+    global _BD_SPEC
+    from repro.core.llama_graph import LlamaSpec, init_llama_params
+    if _BD_SPEC is None:
+        spec = LlamaSpec(vocab=32, d_model=16, n_layers=1, n_heads=2,
+                         n_kv=1, d_ff=32, rope_theta=10000.0)
+        _BD_SPEC = (spec, init_llama_params(spec, seed=7))
+    return _BD_SPEC
+
+
+def _bd_pipe(kind, arg):
+    from repro.core.graph import infer_shapes
+    from repro.core import llama_graph as lg
+    from repro.core.opmap import op_map
+    from repro.core.passes import postoptimize, preoptimize
+    if (kind, arg) not in _BD_CACHE:
+        spec, _ = _bd_setup()
+        if kind == "prefill":
+            g = lg.build_prefill_graph(spec, arg, cache_len=10)
+        else:  # decode at batch B (0 = single-seq)
+            g = lg.build_decode_graph(spec, cache_len=10, batch=arg)
+        infer_shapes(g)
+        preoptimize(g)
+        pipe = op_map(g, chunk_size=8)
+        postoptimize(pipe)
+        _BD_CACHE[(kind, arg)] = pipe
+    return _BD_CACHE[(kind, arg)]
+
+
+@settings(deadline=None, max_examples=10)
+@given(data=st.data())
+def test_batched_decode_equals_independent_runs(data):
+    """The seq-keyed batched decode plan's per-sequence logits equal B
+    independent single-sequence KV-cached decode runs — for any batch size
+    and any ragged combination of prompt lengths (ISSUE 4 acceptance)."""
+    from repro.core import llama_graph as lg
+    from repro.core.pipeline import run_pipeline
+    spec, params = _bd_setup()
+    B = data.draw(st.integers(2, 3), label="batch")
+    lengths = data.draw(st.lists(st.integers(1, 6), min_size=B, max_size=B),
+                        label="prompt_lengths")
+    rng = np.random.default_rng(data.draw(st.integers(0, 99), label="seed"))
+    prompts = [list(rng.integers(0, spec.vocab, n)) for n in lengths]
+    next_toks = list(rng.integers(0, spec.vocab, B))
+
+    def prefill_env(prompt):
+        env = lg.convert_weights(params, chunk_size=8)
+        env.update(lg.empty_cache_tables(spec, 10, chunk_size=8))
+        env["token_ids"] = lg.token_table(np.asarray(prompt, np.int32))
+        env["freq_each_token"] = lg.rope_freq_table(
+            np.arange(len(prompt)), spec.head_dim, spec.rope_theta)
+        _, env = run_pipeline(_bd_pipe("prefill", len(prompt)), env,
+                              scalars={"cache_position": 0})
+        return env
+
+    # B independent single-seq decode steps (the looped baseline)
+    refs = []
+    envs = [prefill_env(p) for p in prompts]
+    for env, prompt, tok in zip(envs, prompts, next_toks):
+        env["token_ids"] = lg.token_table(np.asarray([tok], np.int32))
+        env["freq_each_token"] = lg.rope_freq_table(
+            np.asarray([len(prompt)]), spec.head_dim, spec.rope_theta)
+        outs, _ = run_pipeline(_bd_pipe("decode", 0), env,
+                               scalars={"cache_position": len(prompt)})
+        refs.append(np.asarray(outs["logits"].cols["v"]).reshape(-1)
+                    [: spec.vocab])
+
+    # ONE batched plan over the ragged batch
+    benv = lg.convert_weights(params, chunk_size=8)
+    benv.update(lg.empty_cache_tables(spec, 10, chunk_size=8, batch=B))
+    for b, env in enumerate(envs):
+        lg.copy_cache_slot(benv, b, env)
+    positions = np.asarray(lengths, np.int32)
+    benv["token_ids"] = lg.token_table(np.asarray(next_toks, np.int32),
+                                       key="seq")
+    benv["freq_each_token"] = lg.rope_freq_table(
+        positions, spec.head_dim, spec.rope_theta, key="seq")
+    outs, _ = run_pipeline(_bd_pipe("decode", B), benv,
+                           scalars={"seq_positions": positions})
+    got = np.asarray(outs["logits"].cols["v"]).reshape(B, -1)[:, : spec.vocab]
+    for b in range(B):
+        np.testing.assert_allclose(got[b], refs[b], rtol=2e-4, atol=2e-4)
+
+
 @settings(**COMMON)
 @given(steps=st.integers(1, 5), seed=st.integers(0, 10))
 def test_data_pipeline_deterministic_resume(steps, seed):
