@@ -30,7 +30,8 @@ SPEC = LlamaSpec(vocab=256, d_model=128, n_layers=2, n_heads=8, n_kv=4,
 CACHE_LENS = (64, 256)
 CHUNK_SIZE = 16
 PROMPT = 8
-STEPS = 4
+WARM_STEPS = 3
+ROUNDS = 12
 OUT_JSON = "BENCH_attn_layout.json"
 
 
@@ -44,7 +45,9 @@ def _build(kind: str, T: int, cache_len: int, layout: str):
     return pipe
 
 
-def _time_decode(params, ids, cache_len: int, layout: str) -> float:
+def _make_stepper(params, ids, cache_len: int, layout: str):
+    """Prefill once, warm the decode path, return a ``step()`` closure
+    that times ONE decode step (advancing its own env/position)."""
     prefill = _build("prefill", len(ids), cache_len, layout)
     decode = _build("decode", 1, cache_len, layout)
     env = convert_weights(params, chunk_size=CHUNK_SIZE)
@@ -56,22 +59,40 @@ def _time_decode(params, ids, cache_len: int, layout: str) -> float:
     env["freq_each_token"] = rope_freq_table(
         np.arange(len(ids)), SPEC.head_dim, SPEC.rope_theta)
     _, env = run_pipeline(prefill, env, scalars={"cache_position": 0})
+    state = {"env": env, "pos": len(ids)}
 
-    def step(pos):
-        env["token_ids"] = token_table(np.asarray([1], np.int32))
-        env["freq_each_token"] = rope_freq_table(
+    def step() -> float:
+        e, pos = state["env"], state["pos"]
+        e["token_ids"] = token_table(np.asarray([1], np.int32))
+        e["freq_each_token"] = rope_freq_table(
             np.asarray([pos]), SPEC.head_dim, SPEC.rope_theta)
-        outs, e = run_pipeline(decode, env, scalars={"cache_position": pos})
+        t0 = time.perf_counter()
+        outs, e = run_pipeline(decode, e, scalars={"cache_position": pos})
         np.asarray(outs["logits"].cols["v"])  # block on device work
-        return e
+        dt = time.perf_counter() - t0
+        state["env"], state["pos"] = e, pos + 1
+        return dt
 
-    env = step(len(ids))  # warm: XLA compile cache
-    t0 = time.perf_counter()
-    pos = len(ids) + 1
-    for _ in range(STEPS):
-        env = step(pos)
-        pos += 1
-    return (time.perf_counter() - t0) / STEPS
+    for _ in range(WARM_STEPS):  # warm: XLA compile + dispatch caches
+        step()
+    return step
+
+
+def _time_layouts(params, ids, cache_len: int):
+    """Interleave the layouts' decode steps round-robin and take each
+    layout's median — consecutive-block timing let machine-load drift
+    bias whole layouts and degenerate the seek-weight calibration."""
+    steppers = {L: _make_stepper(params, ids, cache_len, L)
+                for L in CACHE_LAYOUTS}
+    samples = {L: [] for L in CACHE_LAYOUTS}
+    for _ in range(ROUNDS):
+        for L in CACHE_LAYOUTS:
+            samples[L].append(steppers[L]())
+    out = {}
+    for L, ts in samples.items():
+        ts.sort()
+        out[L] = ts[len(ts) // 2]
+    return out
 
 
 def run(report):
@@ -81,11 +102,11 @@ def run(report):
     results = []
     for cache_len in CACHE_LENS:
         row = {"cache_len": cache_len, "chunk_size": CHUNK_SIZE}
+        timed = _time_layouts(params, ids, cache_len)
         for layout in CACHE_LAYOUTS:
-            s = _time_decode(params, ids, cache_len, layout)
             model = cache_layout_cost(layout, cache_len, SPEC.n_kv,
                                       dh_chunks)
-            row[f"decode_{layout}_us"] = s * 1e6
+            row[f"decode_{layout}_us"] = timed[layout] * 1e6
             row[f"cost_{layout}"] = model.total(CostParams())
             row[f"read_segments_{layout}"] = model.read_segments
         base = row["decode_row_chunk_us"]

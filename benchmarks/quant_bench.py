@@ -1,0 +1,130 @@
+"""Quantised chunk-payload ablation (ISSUE 5 acceptance benchmark).
+
+Serves the same tiny Llama through ``RelationalEngine(precision=...)`` at
+f32 / int8 / nf4 and reports, per precision:
+
+  * resident weight bytes — the packed stored-table byte model the pager
+    accounts (payload codes + per-group scales; f32 tables at 4 B/elt),
+  * prefill (TTFT) and decode (TPOT) latency on the JAX columnar engine,
+  * max |Δlogit| against the f32 engine (the accuracy-budget gate's
+    measurement).
+
+Results land in ``BENCH_quant.json``; ``planner/calibrate.py`` fits the
+cost model's ``dequant_weight`` / ``byte_weight`` from them, closing the
+precision-planning calibration loop.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from repro.core import relational as ra
+from repro.core.llama_graph import LlamaSpec, init_llama_params
+from repro.quant.gate import logit_error_between
+from repro.serving.engine import RelationalEngine
+
+SPEC = LlamaSpec(vocab=256, d_model=128, n_layers=2, n_heads=8, n_kv=4,
+                 d_ff=256, rope_theta=10000.0)
+CHUNK_SIZE = 32
+PROMPT = 8
+STEPS = 8
+REPS = 3
+PRECISIONS = ("f32", "int8", "nf4")
+OUT_JSON = "BENCH_quant.json"
+
+
+def resident_weight_bytes(engine: RelationalEngine) -> int:
+    """Stored bytes of every weight table the decode plan scans, at the
+    planner-chosen precision (packed quantised payloads + scales)."""
+    pipe = engine.decode_pipe
+    plan = getattr(pipe, "layout_plan", None)
+    qdec = {d.q_table: d for d in
+            (plan.precision_decisions if plan is not None else [])}
+    total = 0
+    for name, schema in pipe.weight_schemas.items():
+        if name in qdec:
+            total += qdec[name].q_bytes
+            continue
+        n = 1
+        for _, s in schema.keys:
+            n *= s
+        for _, t in schema.cols:
+            total += n * (ra.vec_width(t) if ra.is_vec(t) else 1) * 4
+    return total
+
+
+def dequant_cost_elements(engine: RelationalEngine) -> float:
+    """Per-invocation dequant work: quantised elements × codec multiplier
+    (the cost model's ``dequant_weight`` feature)."""
+    from repro.quant.codecs import CODECS
+    plan = getattr(engine.decode_pipe, "layout_plan", None)
+    if plan is None:
+        return 0.0
+    return float(sum(d.n_elements * CODECS[d.precision].dequant_multiplier
+                     for d in plan.precision_decisions))
+
+
+def _time_engine(engine: RelationalEngine, prompt):
+    """Median TTFT / TPOT over REPS generate calls (one warm-up)."""
+    engine.generate(prompt, 2)  # warm the XLA compile caches
+    ttfts, tpots = [], []
+    for _ in range(REPS):
+        r = engine.generate(prompt, STEPS)
+        ttfts.append(r.ttft_s)
+        tpots.append(r.tpot_s)
+    return float(np.median(ttfts)), float(np.median(tpots))
+
+
+def run(report):
+    params = init_llama_params(SPEC, seed=0)
+    prompt = [int(t) for t in
+              np.random.default_rng(0).integers(0, SPEC.vocab, PROMPT)]
+    max_len = PROMPT + STEPS + 4
+    results = []
+    engines = {}
+    for prec in PRECISIONS:
+        eng = RelationalEngine(SPEC, params, chunk_size=CHUNK_SIZE,
+                               max_len=max_len, precision=prec)
+        engines[prec] = eng
+        ttft, tpot = _time_engine(eng, prompt)
+        err = (0.0 if prec == "f32" else
+               logit_error_between(eng, engines["f32"], prompt))
+        results.append({
+            "precision": prec,
+            "resident_weight_bytes": resident_weight_bytes(eng),
+            "quantised_tables": len(eng.table_precision_choices),
+            "dequant_cost_elements": dequant_cost_elements(eng),
+            "prefill_us": ttft * 1e6,
+            "decode_us": tpot * 1e6,
+            "max_logit_err": float(err),
+        })
+    base = results[0]
+    for row in results:
+        row["bytes_reduction_vs_f32"] = (
+            base["resident_weight_bytes"] / row["resident_weight_bytes"])
+        row["decode_slowdown_vs_f32"] = row["decode_us"] / base["decode_us"]
+        report(f"quant/{row['precision']}", row["decode_us"],
+               f"bytes={row['resident_weight_bytes']};"
+               f"reduction={row['bytes_reduction_vs_f32']:.2f}x;"
+               f"slowdown={row['decode_slowdown_vs_f32']:.2f};"
+               f"logit_err={row['max_logit_err']:.4f}")
+    payload = {
+        "spec": {"vocab": SPEC.vocab, "d_model": SPEC.d_model,
+                 "n_layers": SPEC.n_layers, "n_heads": SPEC.n_heads,
+                 "n_kv": SPEC.n_kv, "d_ff": SPEC.d_ff},
+        "chunk_size": CHUNK_SIZE,
+        "prompt_tokens": PROMPT,
+        "cache_len": max_len,
+        "precisions": list(PRECISIONS),
+        "results": results,
+    }
+    with open(OUT_JSON, "w") as f:
+        json.dump(payload, f, indent=2)
+    report("quant/json", 0.0, OUT_JSON)
+
+
+if __name__ == "__main__":
+    run(lambda n, us, d="": print(f"{n},{us:.1f},{d}"))

@@ -37,6 +37,11 @@ def main():
                              "pos_major"],
                     help="KV-cache physical key order (planner cache "
                          "layouts); annotates the cache DDL")
+    ap.add_argument("--precision", default="off",
+                    choices=["off", "auto", "int8", "nf4"],
+                    help="stored payload precision (quantised chunk "
+                         "tables); emits quantised DDL + the f32 -> "
+                         "quantised conversion SQL when enabled")
     args = ap.parse_args()
 
     spec = LlamaSpec(vocab=256, d_model=64, n_layers=2, n_heads=4, n_kv=2,
@@ -46,13 +51,17 @@ def main():
     parts = ["-- ============ TranSQL+ compiled pipeline ============"]
 
     # plan decode first: its cost-chosen cache layout binds the prefill
-    # pipeline too (both read/write the same cache tables)
+    # pipeline too (both read/write the same cache tables), and a shared
+    # residency pool pins per-table precisions across both plans
+    from repro.planner import ResidencyPool
+    pool = ResidencyPool(None)
     gd = build_decode_graph(spec, cache_len=args.max_len)
     infer_shapes(gd)
     preoptimize(gd)
     pipe_d = op_map(gd, chunk_size=args.chunk_size)
     postoptimize(pipe_d, layout_mode=args.row2col,
-                 cache_mode=args.cache_layout)
+                 cache_mode=args.cache_layout, pool=pool,
+                 precision_mode=args.precision)
     plan_d = pipe_d.layout_plan
     cache_layout = (plan_d.cache_decisions[0].layout
                     if plan_d is not None and plan_d.cache_decisions
@@ -62,7 +71,8 @@ def main():
     infer_shapes(gp)
     preoptimize(gp)
     pipe_p = op_map(gp, chunk_size=args.chunk_size)
-    postoptimize(pipe_p, layout_mode=args.row2col, cache_mode=cache_layout)
+    postoptimize(pipe_p, layout_mode=args.row2col, cache_mode=cache_layout,
+                 pool=pool, precision_mode=args.precision)
     parts.append("-- ---- prefill pipeline (prompt length "
                  f"{args.prompt_len}) ----")
     # the ROW2COL conversion is emitted after the weight INSERTs below, so
@@ -82,13 +92,13 @@ def main():
         if limit is not None:
             parts.append(f"-- ... truncated (use --full for all rows)")
 
-    # ROW2COL conversions after the data load; prefill and decode pipelines
-    # are planned independently, so union their column-table choices
+    # ROW2COL + quantisation conversions after the data load; prefill and
+    # decode pipelines are planned independently, so union their choices
     from repro.planner import union_conversion_sql
     conv = union_conversion_sql((pipe_p, pipe_d), dialect="duckdb")
     if conv:
-        parts.append("\n-- ---- ROW2COL data conversion (row tables -> "
-                     "column tables) ----")
+        parts.append("\n-- ---- physical-design data conversion (ROW2COL "
+                     "column tables, then quantised payloads) ----")
         parts.append(conv)
 
     parts.append("\n-- ---- final sampling query (greedy) ----")

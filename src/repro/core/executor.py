@@ -324,6 +324,13 @@ def _eval_expr(expr: Expr, table: DenseTable) -> Tuple[jnp.ndarray, bool]:
         if expr.fn == "second_half":
             a, _ = _eval_expr(expr.args[0], table)
             return a[..., a.shape[-1] // 2:], True
+        if expr.fn == "nf4_dequant":
+            # NF4 codebook lookup (repro.quant): integer codes -> the 16
+            # normalised NormalFloat levels; the scale multiply is an
+            # ordinary vec x scalar BinOp around this call
+            from repro.quant.codecs import nf4_dequant_levels
+            a, _ = _eval_expr(expr.args[0], table)
+            return nf4_dequant_levels(a), True
         if expr.fn in _UNARY:
             a, av = _eval_expr(expr.args[0], table)
             return _UNARY[expr.fn](a), av

@@ -94,6 +94,12 @@ class RelPipeline:
     # plan_layouts under chunk_mode="auto"; tables absent here keep the
     # pipeline chunking)
     table_chunks: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # planner-chosen payload precisions: *quantised* table name -> codec
+    # name (filled by plan_layouts under precision_mode != "off"; tables
+    # absent here store f32 payloads).  sqlgen keys DDL dtypes and the
+    # "precision:" annotation off this map.
+    table_precisions: Dict[str, str] = dataclasses.field(
+        default_factory=dict)
     # append-target cache tables: name -> append (position) key.  Filled by
     # map_concat_rows so the layout planner can find cache sites without
     # re-deriving them from the step list.

@@ -162,7 +162,8 @@ def postoptimize(pipeline: RelPipeline, layout_mode: str = "off",
                  cost_params=None, cache_mode: str = "off",
                  budget_bytes=None, chunk_mode: str = "off",
                  chunk_candidates=None, table_chunks=None,
-                 pool=None) -> Dict[str, int]:
+                 pool=None, precision_mode: str = "off",
+                 table_precisions=None) -> Dict[str, int]:
     """Apply relational post-optimisations in place across all steps.
 
     ``layout_mode`` invokes the physical-layout planner (ROW2COL) as a
@@ -177,8 +178,11 @@ def postoptimize(pipeline: RelPipeline, layout_mode: str = "off",
     ``ResidencyPool``) instead to share one budget across pipelines.
     ``chunk_mode="auto"`` makes per-table physical chunk sizes a planner
     decision priced over ``chunk_candidates`` (``table_chunks`` pins
-    specific tables to sizes an earlier plan chose).  The resulting
-    ``LayoutPlan`` is recorded on ``pipeline.layout_plan``.
+    specific tables to sizes an earlier plan chose).  ``precision_mode``
+    makes the stored payload precision a planner decision too — eligible
+    weight tables are rewritten to scan quantised twins through inline
+    dequant projections (``table_precisions`` pins per-table choices).
+    The resulting ``LayoutPlan`` is recorded on ``pipeline.layout_plan``.
     """
     before = count_nodes(pipeline)
     memo: Dict[int, RelNode] = {}
@@ -187,18 +191,21 @@ def postoptimize(pipeline: RelPipeline, layout_mode: str = "off",
     for name, rel in pipeline.bindings.items():
         rel.plan = fuse_projections(rel.plan, memo)
     stats = {"rel_nodes_before": before}
-    if layout_mode != "off" or cache_mode != "off":
+    if layout_mode != "off" or cache_mode != "off" or precision_mode != "off":
         from repro.planner import plan_layouts
         plan = plan_layouts(pipeline, mode=layout_mode, params=cost_params,
                             budget_bytes=budget_bytes, cache_mode=cache_mode,
                             chunk_mode=chunk_mode,
                             chunk_candidates=chunk_candidates,
-                            table_chunks=table_chunks, pool=pool)
+                            table_chunks=table_chunks, pool=pool,
+                            precision_mode=precision_mode,
+                            table_precisions=table_precisions)
         stats["row2col_sites"] = len(plan.decisions)
         stats["row2col_rewrites"] = len(plan.col_decisions)
         stats["cache_relayouts"] = sum(
             1 for d in plan.cache_decisions if d.layout != "row_chunk")
         stats["chunk_planned_tables"] = len(pipeline.table_chunks)
+        stats["quantised_tables"] = len(plan.precision_decisions)
     stats["rel_nodes_after"] = count_nodes(pipeline)
     return stats
 

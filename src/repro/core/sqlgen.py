@@ -120,6 +120,10 @@ class SQLGenerator:
         if fn == "vsum":
             return (f"list_sum({a0})" if self.dialect == "duckdb"
                     else f"vsum({a0})"), False
+        if fn == "nf4_dequant":
+            # NF4 codebook lookup (quantised chunk payloads): a prelude
+            # macro in duckdb, a plain UDF name in ansi
+            return f"nf4_dequant({a0})", True
         if fn == "scale":
             a1, _ = args[1]
             if v0:
@@ -274,6 +278,7 @@ class SQLGenerator:
         out: List[str] = []
         layouts = getattr(self.p, "layouts", {}) or {}
         chunks = getattr(self.p, "table_chunks", {}) or {}
+        precisions = getattr(self.p, "table_precisions", {}) or {}
         plan = getattr(self.p, "layout_plan", None)
 
         def annotate(name: str, ddl: str) -> str:
@@ -286,14 +291,25 @@ class SQLGenerator:
                 ann.append(f"layout: {layouts[name]}")
             if name in chunks:
                 ann.append(f"chunk_size: {chunks[name]} (planner)")
+            if name in precisions:
+                ann.append(f"precision: {precisions[name]} (planner)")
             return f"-- {'; '.join(ann)}\n{ddl}" if ann else ddl
+
+        def table_ddl(name: str, schema: RelSchema) -> str:
+            if name in precisions:
+                from repro.quant.sql import quant_ddl
+                return quant_ddl(name, schema, precisions[name])
+            return self._ddl(name, schema)
 
         if include_ddl:
             if self.dialect == "duckdb":
                 out.append(UDF_PRELUDE_DUCKDB)
+                if precisions:
+                    from repro.quant.sql import UDF_PRELUDE_QUANT_DUCKDB
+                    out.append(UDF_PRELUDE_QUANT_DUCKDB)
             out.append("-- weight table DDL (paper §3.1 data conversion)")
             for name, schema in self.p.weight_schemas.items():
-                out.append(annotate(name, self._ddl(name, schema)))
+                out.append(annotate(name, table_ddl(name, schema)))
             if plan is not None and plan.col_decisions:
                 # the rewritten pipeline no longer scans the row-layout
                 # sources, but the conversion reads them — keep their DDL
@@ -301,12 +317,21 @@ class SQLGenerator:
                            "weights here, then run the conversion)")
                 for d in plan.col_decisions:
                     out.append(self._ddl(d.table, d.row_schema))
+            if plan is not None and plan.precision_decisions:
+                # likewise the f32 sources of quantised tables: the
+                # quantisation conversion reads them (a column copy's
+                # f32 twin, or the row table itself)
+                out.append("-- QUANTISE source tables (f32; load/convert "
+                           "here, then run the quantisation)")
+                for pd in plan.precision_decisions:
+                    out.append(self._ddl(pd.table, pd.schema))
             out.append("-- input / cache table DDL")
             for name, schema in self.p.input_schemas.items():
                 # planner-chosen cache layout: the key-column order IS
                 # the physical clustering (row_chunk / head_major / …)
                 out.append(annotate(name, self._ddl(name, schema)))
-        if include_conversion and plan is not None and plan.col_decisions:
+        if include_conversion and plan is not None and (
+                plan.col_decisions or plan.precision_decisions):
             out.append("-- ROW2COL data conversion (planner layout "
                        "choices; run after loading the row tables)")
             out.append(plan.conversion_sql(self.dialect))

@@ -63,8 +63,10 @@ from repro.planner.cost import (CHUNK_CANDIDATES, CacheCost, CostParams,
                                 MatmulCost, best_chunk, cache_chunk_costs,
                                 cache_layout_cost, cache_site_costs,
                                 choose_cache_layout, choose_layout,
-                                col_chunk_cost, colh_chunk_cost,
-                                row_chunk_cost, site_chunk_costs, site_costs)
+                                choose_precision, col_chunk_cost,
+                                colh_chunk_cost, precision_cost,
+                                precision_costs, row_chunk_cost,
+                                site_chunk_costs, site_costs)
 from repro.planner.layout import (CACHE_HEAD_MAJOR, CACHE_KEY_ORDERS,
                                   CACHE_LAYOUTS, CACHE_POS_MAJOR,
                                   CACHE_ROW_CHUNK, COL_CHUNK,
@@ -73,23 +75,29 @@ from repro.planner.layout import (CACHE_HEAD_MAJOR, CACHE_KEY_ORDERS,
                                   cache_schema, col_schema, col_table_name,
                                   colh_schema, colh_table_name,
                                   divisor_candidates, match_cache_sites,
-                                  match_matmul_site)
-from repro.planner.row2col import (CACHE_MODES, CHUNK_MODES, CacheDecision,
+                                  match_matmul_site,
+                                  match_value_join_tables)
+from repro.planner.row2col import (CACHE_MODES, CHUNK_MODES,
+                                   PRECISION_MODES, CacheDecision,
                                    LayoutDecision, LayoutPlan, MODES,
-                                   ResidencyPool, conversion_sql,
-                                   plan_layouts, union_conversion_sql)
+                                   PrecisionDecision, ResidencyPool,
+                                   conversion_sql, plan_layouts,
+                                   union_conversion_sql)
 
 __all__ = [
     "CACHE_HEAD_MAJOR", "CACHE_KEY_ORDERS", "CACHE_LAYOUTS", "CACHE_MODES",
     "CACHE_POS_MAJOR", "CACHE_ROW_CHUNK", "CHUNK_CANDIDATES", "CHUNK_MODES",
-    "COL_CHUNK", "COL_CHUNK_HEADS", "MODES", "ROW_CHUNK",
+    "COL_CHUNK", "COL_CHUNK_HEADS", "MODES", "PRECISION_MODES", "ROW_CHUNK",
     "CacheCost", "CacheDecision", "CacheSite", "CostParams", "MatmulCost",
-    "MatmulSite", "LayoutDecision", "LayoutPlan", "ResidencyPool",
+    "MatmulSite", "LayoutDecision", "LayoutPlan", "PrecisionDecision",
+    "ResidencyPool",
     "admissible_layouts", "best_chunk", "cache_chunk_costs",
     "cache_layout_cost", "cache_schema", "cache_site_costs",
-    "choose_cache_layout", "choose_layout", "col_chunk_cost", "col_schema",
-    "col_table_name", "colh_chunk_cost", "colh_schema", "colh_table_name",
-    "conversion_sql", "divisor_candidates", "match_cache_sites",
-    "match_matmul_site", "plan_layouts", "row_chunk_cost",
-    "site_chunk_costs", "site_costs", "union_conversion_sql",
+    "choose_cache_layout", "choose_layout", "choose_precision",
+    "col_chunk_cost", "col_schema", "col_table_name", "colh_chunk_cost",
+    "colh_schema", "colh_table_name", "conversion_sql",
+    "divisor_candidates", "match_cache_sites", "match_matmul_site",
+    "match_value_join_tables", "plan_layouts", "precision_cost",
+    "precision_costs", "row_chunk_cost", "site_chunk_costs", "site_costs",
+    "union_conversion_sql",
 ]

@@ -19,6 +19,12 @@ hardware the reproduction actually runs on:
   decode steps across the cache key orders; the analogous fit over
   ``scan_rows`` and contiguous-run counts recovers ``seek_weight`` — the
   ROADMAP's "calibrate the cache-layout locality model" item.
+* ``BENCH_quant.json`` (``benchmarks/quant_bench.py``) times the same
+  engine at f32/int8/nf4 payload precisions; the fit over the per-
+  invocation dequant-element and stored-byte features recovers
+  ``dequant_weight`` and ``byte_weight`` (the precision-planning
+  weights).  Degenerate fits keep the analytic defaults, so calibration
+  only moves precision decisions where the measurements support it.
 
 :func:`choose_base_chunk_size` is the consumer: it prices every candidate
 base chunk size for a spec's prefill + decode pipelines under the
@@ -49,6 +55,7 @@ from repro.planner.layout import match_matmul_site
 
 ROW2COL_BENCH = "BENCH_row2col.json"
 ATTN_BENCH = "BENCH_attn_layout.json"
+QUANT_BENCH = "BENCH_quant.json"
 # Payloads written before row2col_bench.py emitted head counts lack
 # n_heads/n_kv; these are that benchmark's (fixed) values.  Regenerated
 # payloads carry the full spec and never hit these defaults.
@@ -220,6 +227,63 @@ def matmul_points_from_payload(payload: Dict) -> List[Tuple[float, float,
     return points
 
 
+def fit_quant_weights(points: Sequence[Tuple[float, float, float, float]]
+                      ) -> Tuple[float, float, float, float, float]:
+    """Fit ``time ≈ s·feat + s·dq·dequant_elems + s·bw·bytes + c0``.
+
+    ``points``: (weighted_row_feature, dequant_elems, table_bytes,
+    time_us) — one per (pipeline kind, precision) measurement from
+    ``BENCH_quant.json``.  Returns ``(dequant_weight, byte_weight,
+    scale_us, intercept_us, rms_residual)``.  Degenerate directions keep
+    safe values: a non-positive row scale, or a non-positive *dequant*
+    slope (noise measuring quantised decode as faster than f32), keeps
+    the analytic dequant default — clamping it to zero would make
+    dequantisation free and flip ``precision="auto"`` to quantise
+    everything with no memory pressure.  A non-positive byte slope clamps
+    to zero, which is the conservative direction (f32 keeps winning).
+    """
+    A = np.array([[f, d, b, 1.0] for f, d, b, _ in points],
+                 dtype=np.float64)
+    t = np.array([tt for *_, tt in points], dtype=np.float64)
+    x, resid = _lstsq(A, t)
+    s_r, s_d, s_b, c0 = x
+    base = CostParams()
+    if s_r <= 0:
+        return base.dequant_weight, base.byte_weight, max(s_r, 1e-9), \
+            c0, resid
+    dq = base.dequant_weight if s_d <= 0 else s_d / s_r
+    return dq, max(s_b / s_r, 0.0), s_r, c0, resid
+
+
+def quant_points_from_payload(payload: Dict,
+                              params: Optional[CostParams] = None
+                              ) -> List[Tuple[float, float, float, float]]:
+    """(row_feature, dequant_elems, bytes, time_us) points from a
+    BENCH_quant payload — one per (prefill/decode, precision) pair, with
+    the matmul row/group feature rebuilt for that pipeline (precision
+    changes neither rows nor groups; it moves bytes and dequant work)."""
+    spec = _spec_from_payload(payload["spec"])
+    cs = payload["chunk_size"]
+    T = payload.get("prompt_tokens", 8)
+    cache_len = payload.get("cache_len", T + 8)
+    p = params or CostParams()
+    feats = {}
+    for kind, Teff in (("prefill", T), ("decode", 1)):
+        rows, groups = pipeline_features(spec, kind, Teff, cs, "auto",
+                                         cache_len=cache_len, params=p)
+        feats[kind] = rows + p.group_weight * groups
+    points = []
+    for rec in payload["results"]:
+        for kind in ("prefill", "decode"):
+            key = f"{kind}_us"
+            if key not in rec:
+                continue
+            points.append((feats[kind],
+                           rec.get("dequant_cost_elements", 0.0),
+                           rec["resident_weight_bytes"], rec[key]))
+    return points
+
+
 def cache_points_from_payload(payload: Dict) -> List[Tuple[float, float,
                                                            float]]:
     """(scan_rows, segments, time_us) points from a BENCH_attn_layout
@@ -259,14 +323,18 @@ def _resolve_bench(path: Optional[str]) -> Optional[str]:
 
 def fit_cost_params(row2col_path: Optional[str] = ROW2COL_BENCH,
                     attn_path: Optional[str] = ATTN_BENCH,
-                    base: Optional[CostParams] = None) -> CalibrationFit:
+                    base: Optional[CostParams] = None,
+                    quant_path: Optional[str] = QUANT_BENCH
+                    ) -> CalibrationFit:
     """Fit :class:`CostParams` from the benchmark JSONs.
 
     Relative paths resolve against the CWD first, then the repo root
     (where ``benchmarks/run.py`` writes them).  Missing files warn and
     leave the corresponding weights at their analytic defaults (the fit
-    degrades gracefully to ``base``).  The returned params keep
-    ``row_weight = 1`` — only ratios matter.
+    degrades gracefully to ``base``).  ``BENCH_quant.json`` supplies the
+    precision-planning weights: ``dequant_weight`` (per dequantised
+    element) and ``byte_weight`` (per stored byte streamed).  The
+    returned params keep ``row_weight = 1`` — only ratios matter.
     """
     base = base or CostParams()
     gw, scale, c0, resid, n = (base.group_weight, 1.0, 0.0, 0.0, 0)
@@ -295,8 +363,24 @@ def fit_cost_params(row2col_path: Optional[str] = ROW2COL_BENCH,
                 f"{attn_path!r} holds only {len(cpoints)} measurement(s) "
                 "(need 4 for a determined fit); seek_weight keeps its "
                 "analytic default")
+    dq, bw = base.dequant_weight, base.byte_weight
+    quant_path = _resolve_bench(quant_path)
+    if quant_path:
+        with open(quant_path) as f:
+            qpoints = quant_points_from_payload(
+                json.load(f), params=dataclasses.replace(
+                    base, group_weight=gw))
+        if len(qpoints) >= 5:  # 4 unknowns: need an overdetermined system
+            dq, bw, _, _, _ = fit_quant_weights(qpoints)
+            n += len(qpoints)
+        else:
+            warnings.warn(
+                f"{quant_path!r} holds only {len(qpoints)} measurement(s) "
+                "(need 5 for a determined fit); dequant/byte weights keep "
+                "their analytic defaults")
     params = dataclasses.replace(base, row_weight=1.0, group_weight=gw,
-                                 seek_weight=sw)
+                                 seek_weight=sw, dequant_weight=dq,
+                                 byte_weight=bw)
     return CalibrationFit(params=params, scale_us=scale, intercept_us=c0,
                           residual_us=resid, n_points=n)
 

@@ -100,6 +100,16 @@ class CostParams:
     row_weight: float = 1.0    # relative cost of touching one row
     seek_weight: float = 4.0   # relative cost of starting a new contiguous
     #                            row segment (cache-layout locality term)
+    # -- precision pricing (quantised chunk payloads) ----------------------
+    # byte_weight prices one byte of a weight table streamed through the
+    # working set per invocation; dequant_weight prices dequantising one
+    # element in the projection (scaled by the codec's multiplier).  The
+    # analytic defaults keep f32 preferred when memory is unconstrained
+    # (4·bw < bw·bpe + dq for both codecs) — quantisation wins on byte
+    # pressure (the residency budget pass) or once calibration measures
+    # bytes as expensive relative to dequant compute (cold-cache regimes).
+    byte_weight: float = 1.0 / 16.0
+    dequant_weight: float = 0.25
 
 
 @dataclasses.dataclass(frozen=True)
@@ -353,6 +363,49 @@ def cache_chunk_costs(site: "CacheSite", params: CostParams,
                 layout, site.n_pos, site.n_heads, nch,
                 new_tokens=new_tokens, batch=site.batch).total(params)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Precision pricing — quantised chunk payloads (ISSUE 5)
+# ---------------------------------------------------------------------------
+
+
+def precision_cost(precision: str, n_elements: int, n_groups: int,
+                   params: CostParams) -> float:
+    """Per-invocation cost of scanning one weight table at ``precision``.
+
+    The scan streams the stored bytes (payload + per-group scales) through
+    the working set — quantised payloads shrink that term — while the
+    inline dequant projection touches every element once per invocation
+    (zero for f32), weighted by the codec's dequant multiplier.
+    """
+    from repro.quant.codecs import CODECS, precision_bytes
+    nbytes = precision_bytes(precision, n_elements, n_groups)
+    if precision == "f32":
+        return params.byte_weight * nbytes
+    codec = CODECS[precision]
+    return (params.byte_weight * nbytes
+            + params.dequant_weight * codec.dequant_multiplier * n_elements)
+
+
+def precision_costs(n_elements: int, n_groups: int, params: CostParams,
+                    precisions=None):
+    """{precision: cost} over the candidate precisions of one table."""
+    from repro.quant.codecs import PRECISIONS
+    return {p: precision_cost(p, n_elements, n_groups, params)
+            for p in (precisions or PRECISIONS)}
+
+
+def choose_precision(n_elements: int, n_groups: int, params: CostParams,
+                     precisions=None):
+    """(precision, costs) minimising :func:`precision_cost`; ties prefer
+    the earlier (higher-fidelity) candidate — f32, then int8, then nf4."""
+    costs = precision_costs(n_elements, n_groups, params, precisions)
+    best = None
+    for p, c in costs.items():
+        if best is None or c < costs[best]:
+            best = p
+    return best, costs
 
 
 def choose_cache_layout(site: "CacheSite",

@@ -427,6 +427,35 @@ class CacheSite:
                                   always=(self.chunk,))
 
 
+def match_value_join_tables(pipeline) -> Dict[str, RelSchema]:
+    """Weight tables consumed through a *value* join (an embedding-style
+    lookup: the join binds a key of the table to a data column, e.g.
+    ``vocabulary.tok = ids.s``).
+
+    These are not matmul sites — no layout rewrite applies — but their
+    payloads are chunk vectors like any weight table, so they are legal
+    *precision* candidates (the vocabulary table is typically among the
+    largest tables in the model).  Norm vectors joined on shared keys
+    (``Key`` expressions) are deliberately excluded: their byte footprint
+    is negligible and quantising them buys nothing.
+    """
+    from repro.core.relational import Col, Join, walk
+    out: Dict[str, RelSchema] = {}
+    for step in pipeline.steps:
+        for node in walk(step.rel.plan):
+            if not isinstance(node, Join) or not isinstance(node.right, Scan):
+                continue
+            scan = node.right
+            if scan.table not in pipeline.weight_schemas:
+                continue
+            if not any(isinstance(e, Col) for _, e in node.on):
+                continue
+            s = scan.table_schema
+            if len(s.cols) == 1 and ra.is_vec(s.cols[0][1]):
+                out[scan.table] = s
+    return out
+
+
 def match_cache_sites(pipeline) -> Tuple[CacheSite, ...]:
     """Find every append-target cache table and all Scans referencing it.
 

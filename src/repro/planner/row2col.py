@@ -73,6 +73,9 @@ from repro.planner.layout import (
 MODES = ("off", "auto", "col")
 CACHE_MODES = ("off", "auto") + CACHE_LAYOUTS
 CHUNK_MODES = ("off", "auto")
+# precision planning: "off" keeps f32 payloads, "auto" is cost/budget-based,
+# or force a codec everywhere it is legal
+PRECISION_MODES = ("off", "auto", "int8", "nf4")
 
 
 @dataclasses.dataclass
@@ -97,6 +100,11 @@ class ResidencyPool:
     spent: int = 0
     tables: Dict[str, int] = dataclasses.field(default_factory=dict)
     chunks: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # pinned payload precisions: stored table -> "f32" | codec name.  Like
+    # ``chunks``, the first plan to decide a shared table's precision pins
+    # it for every later plan on the pool — one physical table, one
+    # payload format.
+    precisions: Dict[str, str] = dataclasses.field(default_factory=dict)
 
     def admits(self, table: str, nbytes: int) -> bool:
         return (table in self.tables or self.budget_bytes is None
@@ -112,6 +120,13 @@ class ResidencyPool:
             self.chunks[table] = chunk_size
         self.spent += nbytes
         return nbytes
+
+    def requantise(self, table: str, nbytes: int) -> None:
+        """Shrink (or grow) a committed copy's accounted bytes after a
+        precision decision changed its stored payload format."""
+        if table in self.tables:
+            self.spent += nbytes - self.tables[table]
+            self.tables[table] = nbytes
 
 
 @dataclasses.dataclass(frozen=True)
@@ -166,6 +181,34 @@ class CacheDecision:
     #                                for the global chunk-size choice)
 
 
+@dataclasses.dataclass(frozen=True)
+class PrecisionDecision:
+    """One stored weight table and the payload precision chosen for it.
+
+    ``table`` is the f32 source (a row table, or a planner column copy);
+    ``q_table`` its quantised twin the rewritten plan scans.  The chunk
+    size doubles as the quantisation group size, so ``n_groups`` scales
+    columns ride one per relational row.
+    """
+
+    table: str
+    q_table: str
+    precision: str               # codec name ("int8" | "nf4")
+    chunk_size: int              # payload width == quantisation group size
+    vec_col: str                 # f32 source's payload column name
+    key_names: tuple
+    schema: object               # RelSchema of the f32 source
+    q_schema: object             # RelSchema of the quantised table
+    n_elements: int              # payload elements (padding included)
+    n_groups: int
+    f32_bytes: int
+    q_bytes: int
+    costs: dict = dataclasses.field(default_factory=dict)
+    #                              precision -> priced per-invocation total
+    budget_driven: bool = False  # quantised to fit the residency budget
+    #                              (auto mode), not by raw cost preference
+
+
 @dataclasses.dataclass
 class LayoutPlan:
     """Outcome of layout planning over one pipeline."""
@@ -173,6 +216,8 @@ class LayoutPlan:
     mode: str
     decisions: List[LayoutDecision] = dataclasses.field(default_factory=list)
     cache_decisions: List[CacheDecision] = dataclasses.field(
+        default_factory=list)
+    precision_decisions: List[PrecisionDecision] = dataclasses.field(
         default_factory=list)
     budget_bytes: Optional[int] = None   # residency budget the pass ran under
     residency_bytes: int = 0             # duplicate bytes the plan commits
@@ -193,6 +238,13 @@ class LayoutPlan:
             if d.table == table:
                 return d.layout
         return CACHE_ROW_CHUNK
+
+    def precision_of(self, table: str) -> str:
+        """Stored payload precision of a (source) weight table."""
+        for d in self.precision_decisions:
+            if d.table == table:
+                return d.precision
+        return "f32"
 
     def ensure_env(self, env):
         """Materialise planned physical layouts into an executor environment.
@@ -233,6 +285,15 @@ class LayoutPlan:
                 else:
                     env[d.col_table] = transpose_chunked_table(
                         env[d.table], d.physical_chunk)
+            # quantised payloads: materialise each quantised twin from its
+            # resident f32 source (row table, or the column copy built
+            # just above) — the executor-side §3.1 quantisation conversion
+            for pd in self.precision_decisions:
+                if pd.q_table in env:
+                    continue
+                from repro.quant.codecs import CODECS, quantise_chunked_table
+                env[pd.q_table] = quantise_chunked_table(
+                    env[pd.table], CODECS[pd.precision])
         for cd in self.cache_decisions:
             tbl = env.get(cd.table) if hasattr(env, "get") else None
             if tbl is not None and tbl.key_names != cd.key_order:
@@ -241,10 +302,17 @@ class LayoutPlan:
 
     def conversion_sql(self, dialect: str = "duckdb") -> str:
         """SQL data-conversion script: row tables → column tables (§3.1
-        conversion re-run under the new physical layout).  Must run *after*
-        the row tables are populated — ``CREATE OR REPLACE TABLE ... AS``
-        both creates and fills each column table."""
-        return conversion_sql(self.col_decisions, dialect)
+        conversion re-run under the new physical layout), then f32 tables →
+        quantised twins (which may read the column copies, so quantisation
+        comes second).  Must run *after* the row tables are populated —
+        ``CREATE OR REPLACE TABLE ... AS`` both creates and fills each
+        table."""
+        parts = [conversion_sql(self.col_decisions, dialect)]
+        if self.precision_decisions:
+            from repro.quant.sql import quant_conversion_sql
+            parts.append(quant_conversion_sql(self.precision_decisions,
+                                              dialect))
+        return "\n\n".join(p for p in parts if p)
 
 
 def conversion_sql(decisions, dialect: str = "duckdb") -> str:
@@ -285,8 +353,10 @@ def conversion_sql(decisions, dialect: str = "duckdb") -> str:
 def union_conversion_sql(pipelines, dialect: str = "duckdb") -> str:
     """One conversion script covering several planned pipelines (e.g.
     prefill + decode, which are planned independently), deduplicated by
-    column table."""
+    column / quantised table.  ROW2COL conversions come first — a
+    quantised column copy reads the converted column table."""
     seen, fresh = set(), []
+    qseen, qfresh = set(), []
     for pipe in pipelines:
         plan = getattr(pipe, "layout_plan", None)
         if plan is None:
@@ -295,7 +365,15 @@ def union_conversion_sql(pipelines, dialect: str = "duckdb") -> str:
             if d.col_table not in seen:
                 seen.add(d.col_table)
                 fresh.append(d)
-    return conversion_sql(fresh, dialect)
+        for pd in plan.precision_decisions:
+            if pd.q_table not in qseen:
+                qseen.add(pd.q_table)
+                qfresh.append(pd)
+    parts = [conversion_sql(fresh, dialect)]
+    if qfresh:
+        from repro.quant.sql import quant_conversion_sql
+        parts.append(quant_conversion_sql(qfresh, dialect))
+    return "\n\n".join(p for p in parts if p)
 
 
 # ---------------------------------------------------------------------------
@@ -512,7 +590,10 @@ def plan_layouts(pipeline: RelPipeline, mode: str = "auto",
                  chunk_mode: str = "off",
                  chunk_candidates=None,
                  table_chunks: Optional[Dict[str, int]] = None,
-                 pool: Optional[ResidencyPool] = None) -> LayoutPlan:
+                 pool: Optional[ResidencyPool] = None,
+                 precision_mode: str = "off",
+                 table_precisions: Optional[Dict[str, str]] = None
+                 ) -> LayoutPlan:
     """Run the layout planner over a compiled pipeline (in place).
 
     ``budget_bytes`` bounds the *duplicate* residency column copies add on
@@ -538,6 +619,21 @@ def plan_layouts(pipeline: RelPipeline, mode: str = "auto",
     both pipelines scan the same physical tables).  Chosen sizes are
     recorded on ``pipeline.table_chunks``.
 
+    ``precision_mode`` makes the stored payload *precision* a planner
+    decision on top of (layout, chunk_size): ``"off"`` keeps f32,
+    ``"int8"``/``"nf4"`` force a codec on every eligible table, and
+    ``"auto"`` is cost-based — quantised payloads shrink the per-
+    invocation byte traffic (``CostParams.byte_weight``) but pay a
+    per-element dequant term (``dequant_weight``), and when the pool
+    carries a budget the f32 tables exceed, tables are quantised greedily
+    by bytes saved until the working set fits (the residency pass
+    admitting precision by benefit per byte).  Winning tables are
+    rewritten in place: every Scan of the stored table becomes an inline
+    dequant projection over its quantised twin.  ``table_precisions``
+    forces per-table choices (keyed by the stored or the source row name;
+    ``"f32"`` exempts a table).  Chosen codecs are recorded on
+    ``pipeline.table_precisions`` and pinned on the pool for later plans.
+
     Returns the :class:`LayoutPlan`; also records it on
     ``pipeline.layout_plan`` and the per-table choices on
     ``pipeline.layouts`` so downstream stages (``run_pipeline``,
@@ -552,6 +648,9 @@ def plan_layouts(pipeline: RelPipeline, mode: str = "auto",
     if chunk_mode == "auto" and mode == "off":
         raise ValueError("chunk_mode='auto' requires layout planning "
                          "(mode 'auto' or 'col')")
+    if precision_mode not in PRECISION_MODES:
+        raise ValueError(
+            f"precision mode {precision_mode!r} not in {PRECISION_MODES}")
     if pool is None:
         pool = ResidencyPool(budget_bytes=budget_bytes)
     plan = LayoutPlan(mode=mode, budget_bytes=pool.budget_bytes)
@@ -563,6 +662,9 @@ def plan_layouts(pipeline: RelPipeline, mode: str = "auto",
         forced.update(table_chunks or {})
         _plan_weight_layouts(pipeline, plan, mode, params, pool,
                              chunk_mode, chunk_candidates, forced)
+    if precision_mode != "off":
+        _plan_precisions(pipeline, plan, precision_mode, params, pool,
+                         table_precisions or {})
     if cache_mode != "off":
         _plan_cache_layouts(pipeline, plan, cache_mode, params,
                             chunk_mode, chunk_candidates)
@@ -720,6 +822,208 @@ def _plan_weight_layouts(pipeline: RelPipeline, plan: LayoutPlan, mode: str,
 
     if mapping:
         _replace_nodes(pipeline, mapping)
+
+
+# ---------------------------------------------------------------------------
+# Precision planning — quantised chunk payloads (ISSUE 5)
+# ---------------------------------------------------------------------------
+
+
+def _precision_candidates(pipeline: RelPipeline, plan: LayoutPlan):
+    """Stored weight tables eligible for quantisation, in deterministic
+    (step) order: ``{stored_table: (schema, source_row_name)}``.
+
+    With layout planning on, the stored tables come from the layout
+    decisions (the column copy where the site was rewritten, the row table
+    otherwise); with layout planning off, matmul sites are matched
+    directly.  Embedding-style value-join tables (``vocabulary``) are
+    eligible either way; norm vectors and input tables are not.
+    """
+    from repro.planner.layout import match_value_join_tables
+    out: Dict[str, tuple] = {}
+    if plan.decisions:
+        for d in plan.decisions:
+            stored = d.table if d.layout == ROW_CHUNK else d.col_table
+            schema = pipeline.weight_schemas.get(stored)
+            if schema is not None:
+                out.setdefault(stored, (schema, d.table))
+    else:
+        for step in pipeline.steps:
+            if step.kind != "bind":
+                continue
+            site = match_matmul_site(step.name, step.rel.plan)
+            if site is not None:
+                out.setdefault(site.table,
+                               (site.weight_scan.table_schema, site.table))
+    for table, schema in match_value_join_tables(pipeline).items():
+        out.setdefault(table, (schema, table))
+    return out
+
+
+def _rewrite_quant_scans(pipeline: RelPipeline, table: str, q_table: str,
+                         codec) -> None:
+    """Replace every Scan of ``table`` with the inline dequant projection
+    over its quantised twin — the paper-idiomatic dequantise-in-the-
+    projection rewrite.  The projection's output schema is identical to
+    the f32 scan's (same keys, same vector column), so no consumer
+    changes."""
+    from repro.quant.codecs import quant_schema
+    wrapped: Dict[int, RelNode] = {}
+
+    def make(scan: Scan) -> RelNode:
+        if id(scan) not in wrapped:
+            vec_col, vec_type = scan.table_schema.cols[0]
+            wrapped[id(scan)] = Project(
+                input=Scan(table=q_table,
+                           table_schema=quant_schema(scan.table_schema)),
+                keys=None,
+                exprs=[(vec_col, vec_type, codec.dequant_expr())])
+        return wrapped[id(scan)]
+
+    seen: set = set()
+
+    def fix(node: RelNode) -> None:
+        if id(node) in seen or isinstance(node, Scan):
+            return
+        seen.add(id(node))
+        for f in dataclasses.fields(node):
+            v = getattr(node, f.name)
+            if isinstance(v, Scan) and v.table == table:
+                setattr(node, f.name, make(v))
+            elif isinstance(v, RelNode):
+                fix(v)
+
+    for step in pipeline.steps:
+        fix(step.rel.plan)
+    for rel in pipeline.bindings.values():
+        fix(rel.plan)
+
+
+def _plan_precisions(pipeline: RelPipeline, plan: LayoutPlan, mode: str,
+                     params: Optional[CostParams], pool: ResidencyPool,
+                     forced: Dict[str, str]) -> None:
+    """Choose and apply a stored payload precision per weight table.
+
+    Stage 1 prices every eligible table under every precision
+    (:func:`repro.planner.cost.precision_cost`: bytes streamed per
+    invocation vs the per-element dequant term) and takes the per-table
+    argmin (forced modes and per-table pins override).  Stage 2 — the
+    residency pass — only runs in ``"auto"`` mode under a pool budget:
+    while the stored weight set exceeds the budget, the table with the
+    most bytes saved is flipped to int8, then (if still over) to nf4, so
+    quantisation is admitted exactly where it buys the most bytes.  Stage
+    3 rewrites every Scan of a quantised table into a dequant projection,
+    re-declares the physical schema, and pins the choice on the pool so
+    every later plan sharing the environment agrees.
+    """
+    from repro.quant.codecs import (CODECS, PRECISIONS, precision_bytes,
+                                    q_table_name)
+    p = params or CostParams()
+    cands = _precision_candidates(pipeline, plan)
+    infos: Dict[str, dict] = {}
+    for stored, (schema, source) in cands.items():
+        vec_col, vec_type = schema.cols[0]
+        cs = ra.vec_width(vec_type)
+        n_groups = 1
+        for _, s in schema.keys:
+            n_groups *= s
+        infos[stored] = dict(schema=schema, source=source, vec_col=vec_col,
+                             cs=cs, n_groups=n_groups,
+                             n_elements=n_groups * cs)
+
+    # -- stage 1: per-table wanted precision
+    chosen: Dict[str, str] = {}
+    costs_by: Dict[str, dict] = {}
+    pinned: set = set()
+    for stored, info in infos.items():
+        costs_by[stored] = cost_mod.precision_costs(
+            info["n_elements"], info["n_groups"], p)
+        pin = forced.get(stored, forced.get(info["source"]))
+        if pin is None:
+            pin = pool.precisions.get(stored)
+        if pin is not None:
+            if pin not in PRECISIONS:
+                raise ValueError(
+                    f"unknown precision {pin!r} for table {stored!r} "
+                    f"(choose from {PRECISIONS})")
+            chosen[stored] = pin
+            pinned.add(stored)
+        elif mode in CODECS:
+            chosen[stored] = mode
+        else:  # auto: cheapest precision (ties keep higher fidelity)
+            chosen[stored], _ = cost_mod.choose_precision(
+                info["n_elements"], info["n_groups"], p)
+
+    # -- stage 2 (auto): residency pass.  The stored weight tables ARE the
+    # pager working set; when their bytes exceed the pool budget, flip
+    # the biggest tables to quantised payloads — greedily by bytes saved
+    # (benefit per byte of budget reclaimed) — until the set fits.
+    budget_driven: set = set()
+    if mode == "auto" and pool.budget_bytes is not None:
+        def tbytes(t: str) -> int:
+            return precision_bytes(chosen[t], infos[t]["n_elements"],
+                                   infos[t]["n_groups"])
+
+        free = [t for t in infos if t not in pinned]
+        for target in ("int8", "nf4"):
+            while sum(tbytes(t) for t in infos) > pool.budget_bytes:
+                flips = [(precision_bytes(chosen[t], infos[t]["n_elements"],
+                                          infos[t]["n_groups"])
+                          - precision_bytes(target, infos[t]["n_elements"],
+                                            infos[t]["n_groups"]), t)
+                         for t in free if chosen[t] != target]
+                flips = [(gain, t) for gain, t in flips if gain > 0]
+                if not flips:
+                    break
+                _, pick = max(flips)
+                chosen[pick] = target
+                budget_driven.add(pick)
+
+    # -- stage 3: record, rewrite, pin
+    for stored, info in infos.items():
+        prec = chosen[stored]
+        pool.precisions.setdefault(stored, prec)
+        if prec == "f32":
+            continue
+        codec = CODECS[prec]
+        from repro.quant.codecs import quant_schema
+        q_table = q_table_name(stored, prec)
+        q_schema = quant_schema(info["schema"])
+        q_bytes = precision_bytes(prec, info["n_elements"],
+                                  info["n_groups"])
+        plan.precision_decisions.append(PrecisionDecision(
+            table=stored,
+            q_table=q_table,
+            precision=prec,
+            chunk_size=info["cs"],
+            vec_col=info["vec_col"],
+            key_names=info["schema"].key_names,
+            schema=info["schema"],
+            q_schema=q_schema,
+            n_elements=info["n_elements"],
+            n_groups=info["n_groups"],
+            f32_bytes=4 * info["n_elements"],
+            q_bytes=q_bytes,
+            costs=costs_by[stored],
+            budget_driven=stored in budget_driven,
+        ))
+        _rewrite_quant_scans(pipeline, stored, q_table, codec)
+        # the pipeline now scans the quantised twin; the f32 source DDL
+        # survives through the decision (conversion input), mirroring the
+        # ROW2COL source-table convention
+        pipeline.weight_schemas.pop(stored, None)
+        pipeline.weight_schemas[q_table] = q_schema
+        pipeline.table_precisions[q_table] = prec
+        if stored in pipeline.table_chunks:
+            pipeline.table_chunks[q_table] = pipeline.table_chunks[stored]
+        if stored in pipeline.layouts:
+            pipeline.layouts[q_table] = pipeline.layouts[stored]
+        # a committed column copy now stores quantised bytes — shrink the
+        # pool accounting (and this plan's, when it committed the copy)
+        if stored in pool.tables:
+            if any(d.col_table == stored for d in plan.col_decisions):
+                plan.residency_bytes -= pool.tables[stored] - q_bytes
+            pool.requantise(stored, q_bytes)
 
 
 def _root_weight_schema(root: RelNode, table: str):

@@ -54,33 +54,64 @@ class LazyEnv(dict):
 
     ``table_sizes`` maps table names to planner-chosen physical chunk
     sizes (``chunk_size="auto"``); tables absent there wrap at the
-    engine's base chunking.  The dict is shared by reference with the
-    engine so later-planned pipelines (prefill) extend it in place.
+    engine's base chunking.  ``quant_specs`` maps quantised table names to
+    ``(precision, chunk_size, schema)``: their packed integer codes and
+    per-group scales page as two cold entries (``name::q`` /
+    ``name::scale``) whose *quantised* byte sizes are what the pager
+    accounts — the working set holds ~4× more tables at int8 (~8× at
+    packed nf4) under the same budget.  Both dicts are shared by
+    reference with the engine so later-planned pipelines (prefill,
+    batched decode) extend them in place.
     """
 
     resolves_layouts = True
 
     def __init__(self, pager: WeightPager, chunk_size: int, make_table,
-                 table_sizes=None):
+                 table_sizes=None, quant_specs=None):
         super().__init__()
         self.pager = pager
         self.cs = chunk_size
         self.make_table = make_table
         self.table_sizes = table_sizes if table_sizes is not None else {}
+        self.quant_specs = quant_specs if quant_specs is not None else {}
 
     def __missing__(self, key):
+        spec = self.quant_specs.get(key)
+        if spec is not None:
+            return self._quant_table(key, *spec)
         arr = self.pager.get(key)
         cs = self.table_sizes.get(key, self.cs)
         tbl = self.make_table(key, np.asarray(arr), cs)
         # don't retain: the pager owns residency, we re-wrap per access
         return tbl
 
+    def _quant_table(self, key, precision, chunk_size, schema):
+        """Wrap a quantised table's paged code/scale arrays (zero f32
+        inflation: codes stay integer; the dequant happens inside the
+        projection the planner emitted)."""
+        from repro.core import relational as ra
+        from repro.core.executor import DenseTable
+        from repro.quant.codecs import CODECS
+        codec = CODECS[precision]
+        codes = codec.unpack(self.pager.get(key + "::q"), chunk_size)
+        scales = self.pager.get(key + "::scale")
+        (q_col, q_type), (s_col, _) = schema.cols
+        want = tuple(s for _, s in schema.keys)
+        if codes.shape != want + (chunk_size,):
+            raise ValueError(
+                f"quantised table {key!r}: stored code shape {codes.shape} "
+                f"!= schema {want + (chunk_size,)}")
+        return DenseTable(keys=schema.keys,
+                          cols={q_col: codes, s_col: scales},
+                          col_types={q_col: q_type, s_col: ra.SCALAR})
+
     def __contains__(self, key):
-        return dict.__contains__(self, key) or key in self.pager._cold
+        return (dict.__contains__(self, key) or key in self.pager._cold
+                or key in self.quant_specs)
 
     def copy(self):
         new = LazyEnv(self.pager, self.cs, self.make_table,
-                      self.table_sizes)
+                      self.table_sizes, self.quant_specs)
         new.update(self)
         return new
 
@@ -103,23 +134,46 @@ class RelationalEngine:
     (``plan_layouts(chunk_mode="auto")``).  Pass ``cost_params`` (e.g.
     from ``calibrate.fit_cost_params()``) to plan under
     measurement-calibrated weights instead of the analytic defaults.
+
+    ``precision`` makes the stored payload format of the weight tables a
+    planner decision alongside layout and chunk size: ``"int8"`` /
+    ``"nf4"`` force a codec on every eligible table, ``"auto"`` prices
+    byte traffic against dequant compute and — under a paged residency
+    budget — quantises the biggest tables until the working set fits.
+    Per-table overrides ride in ``table_precisions`` (e.g.
+    ``{"lm_head": "f32"}``); ``accuracy_budget`` runs the quant gate
+    (max |Δlogit| vs the f32 engine) at construction.
     """
+
+    PRECISION_KNOBS = ("f32", "auto", "int8", "nf4")
 
     def __init__(self, spec: lg.LlamaSpec, params: Dict[str, np.ndarray],
                  chunk_size=64, residency: str = "in_memory",
                  budget_bytes: Optional[int] = None,
                  disk_dir: Optional[str] = None, max_len: int = 1024,
                  pager_policy: str = "pin", row2col: str = "auto",
-                 cache_layout: str = "off",
-                 chunk_candidates=None, cost_params=None):
-        # cache_layout defaults to "off" (seed order): the locality cost
-        # model prices relational row/seek traffic, which the dense JAX
-        # executor does not exhibit 1:1 — "auto" is opt-in until the model
-        # is calibrated against BENCH_attn_layout (see ROADMAP)
+                 cache_layout: str = "auto",
+                 chunk_candidates=None, cost_params=None,
+                 precision: str = "f32",
+                 table_precisions: Optional[Dict[str, str]] = None,
+                 accuracy_budget: Optional[float] = None):
+        # cache_layout defaults to "auto": the locality model is
+        # prefill-aware and calibrated against BENCH_attn_layout (ISSUE 5
+        # satellite — pass "off" to keep the seed (tp, hk, c) order).
+        #
+        # precision selects the stored payload format of the weight
+        # tables: "f32" (seed), "int8"/"nf4" (force a codec on every
+        # eligible table), or "auto" (cost/budget-based — under a paged
+        # residency budget the planner quantises the biggest tables until
+        # the working set fits).  table_precisions forces per-table
+        # choices; accuracy_budget (max |Δlogit| vs the f32 engine on a
+        # probe prompt) runs the quant accuracy gate at construction.
         from repro.planner import CACHE_MODES, MODES, ResidencyPool
         assert row2col in MODES, f"row2col must be one of {MODES}"
         assert cache_layout in CACHE_MODES, \
             f"cache_layout must be one of {CACHE_MODES}"
+        assert precision in self.PRECISION_KNOBS, \
+            f"precision must be one of {self.PRECISION_KNOBS}"
         self._chunk_mode = "off"
         if chunk_size == "auto":
             from repro.planner.calibrate import choose_base_chunk_size
@@ -135,6 +189,13 @@ class RelationalEngine:
         self.max_len = max_len
         self.residency = residency
         self.row2col = row2col
+        self.precision = precision
+        self._precision_mode = "off" if precision == "f32" else precision
+        self._table_precisions = dict(table_precisions or {})
+        # quantised-table wrap specs shared by reference with the LazyEnv
+        # (paged residency): q_table -> (precision, chunk_size, schema)
+        self._quant_specs: Dict[str, tuple] = {}
+        self._params = params  # kept for the accuracy gate's f32 reference
         self._chunk_candidates = chunk_candidates
         self._cost_params = cost_params
         self._prefill_pipes: Dict[int, object] = {}
@@ -180,8 +241,22 @@ class RelationalEngine:
             for k, v in params.items():
                 self.pager.add(k, v)
             self.env_base = LazyEnv(self.pager, self.cs, _chunked_table,
-                                    table_sizes=self._table_chunks)
+                                    table_sizes=self._table_chunks,
+                                    quant_specs=self._quant_specs)
         self._register_layouts(self.decode_pipe)
+        # the gate builds a full in-memory f32 reference engine (a second
+        # chunked weight copy + compile) — an opt-in construction cost,
+        # skipped when the plan quantised nothing (logits are trivially
+        # identical, and constrained-budget callers shouldn't pay for a
+        # resident f32 twin they provably don't need)
+        if accuracy_budget is not None and self._precision_mode != "off" \
+                and self.table_precision_choices:
+            from repro.quant.gate import check_accuracy
+            ref = RelationalEngine(
+                spec, params, chunk_size=self.cs, residency="in_memory",
+                max_len=max_len, row2col=row2col, cache_layout=cache_layout,
+                cost_params=cost_params, precision="f32")
+            check_accuracy(self, ref, tolerance=accuracy_budget)
 
     def _compile_pipe(self, g, cache_mode: str):
         """Shared graph → planned-pipeline compile path.  Every pipeline
@@ -208,7 +283,9 @@ class RelationalEngine:
                      table_chunks=(dict(self._table_chunks)
                                    if self._chunk_mode != "off" and
                                    self._table_chunks else None),
-                     pool=self._residency_pool)
+                     pool=self._residency_pool,
+                     precision_mode=self._precision_mode,
+                     table_precisions=self._table_precisions or None)
         return pipe
 
     def _register_layouts(self, pipe) -> None:
@@ -237,6 +314,21 @@ class RelationalEngine:
             else:
                 dense = np.ascontiguousarray(dense.T)
             self.pager.add(d.col_table, dense, pad_to=d.physical_chunk)
+        # quantised payloads: convert each f32 source (row table, or the
+        # column copy registered just above) into packed codes + scales in
+        # the cold store — the offline quantisation conversion.  The paged
+        # working set then holds *quantised* bytes for these tables.
+        for pd in plan.precision_decisions:
+            if pd.q_table in self._quant_specs:
+                continue
+            from repro.quant.codecs import CODECS, quantise_dense
+            codec = CODECS[pd.precision]
+            dense = np.asarray(self.pager._cold[pd.table])
+            packed, scales = quantise_dense(dense, pd.chunk_size, codec)
+            self.pager.add(pd.q_table + "::q", packed)
+            self.pager.add(pd.q_table + "::scale", scales)
+            self._quant_specs[pd.q_table] = (pd.precision, pd.chunk_size,
+                                             pd.q_schema)
 
     def _prefill_pipe(self, T: int):
         if T not in self._prefill_pipes:
@@ -292,9 +384,21 @@ class RelationalEngine:
         return env
 
     def _argmax_token(self, out_table) -> int:
-        logits = np.asarray(out_table.cols["v"]).reshape(
+        return int(np.argmax(self._final_logits(out_table)))
+
+    def _final_logits(self, out_table) -> np.ndarray:
+        """Final-position logits row (un-padded vocab)."""
+        return np.asarray(out_table.cols["v"]).reshape(
             out_table.cols["v"].shape[0], -1)[-1, : self.spec.vocab]
-        return int(np.argmax(logits))
+
+    @property
+    def table_precision_choices(self) -> Dict[str, str]:
+        """Planner-chosen payload precision per stored weight table (the
+        decode plan's decisions; tables absent here store f32)."""
+        plan = getattr(self.decode_pipe, "layout_plan", None)
+        if plan is None:
+            return {}
+        return {d.table: d.precision for d in plan.precision_decisions}
 
     # -- incremental session API (used by the continuous-batching scheduler) --
 
@@ -309,8 +413,13 @@ class RelationalEngine:
             self.pager.prefetch(["vocabulary"])
         outs, env = run_pipeline(self._prefill_pipe(T), env,
                                  scalars={"cache_position": 0})
-        tok = self._argmax_token(outs["logits"])
-        return {"env": env, "pos": T, "tok": tok}
+        logits = self._final_logits(outs["logits"])
+        return {"env": env, "pos": T, "tok": int(np.argmax(logits)),
+                "logits": logits}
+
+    def prefill_logits(self, prompt: List[int]) -> np.ndarray:
+        """Final-position prefill logits (the accuracy gate's probe)."""
+        return self.start_session(list(prompt))["logits"]
 
     def session_step(self, sess) -> int:
         """One KV-cached decode step (the §3.4 compact queries)."""
@@ -380,23 +489,26 @@ class BatchedDecoder:
         # cache_len-deep tables every tick is O(B·cache_len) read traffic
         # when only one row per sequence changed — reuse last tick's
         # updated views while batch membership and slot contents are
-        # unchanged.  Any slot mutation outside decode (prefill, free)
-        # invalidates.
-        self._view_ids: Optional[tuple] = None
+        # unchanged.  The cache key is (slot ids, slot *generations*): the
+        # pool bumps a slot's generation on every mutation outside decode
+        # (prefill fill, free, bulk scatter), so invalidation also fires
+        # when a freed slot is reused by a NEW sequence — same ids tuple,
+        # different contents — even through pool-level writes this decoder
+        # never sees.
+        self._view_key: Optional[tuple] = None
         self._views: Optional[dict] = None
 
     def prefill(self, prompt: List[int], seq_id: int) -> int:
         # write_prefill overwrites the WHOLE slot (full cache_len), so a
         # reused slot cannot leak a previous sequence's rows even if the
-        # scheduler never called free() for it
+        # scheduler never called free() for it; it also bumps the slot
+        # generation, invalidating any cached batch view over it
         sess = self.engine.start_session(list(prompt))
         self.pool.write_prefill(seq_id, sess["env"], len(prompt))
-        self._view_ids = None
         return sess["tok"]
 
     def free(self, seq_id: int) -> None:
         self.pool.free(seq_id)
-        self._view_ids = None
 
     def decode(self, seq_ids: List[int], last_tokens: List[int]
                ) -> List[int]:
@@ -408,7 +520,8 @@ class BatchedDecoder:
         pipe = eng._batched_decode_pipe(bucket)
         positions = self.pool.positions[np.asarray(ids)]
         env = eng._weights_env()
-        if self._view_ids == tuple(ids):
+        view_key = (tuple(ids), self.pool.slot_generations(ids))
+        if self._view_key == view_key:
             env.update(self._views)  # unchanged batch: reuse last views
         else:
             env.update(self.pool.gather_views(ids))
@@ -425,7 +538,7 @@ class BatchedDecoder:
         # (which already contain them) serve the next tick's gather
         self.pool.scatter_rows(ids, env, positions)
         self._views = {name: env[name] for name in self.pool.tables}
-        self._view_ids = tuple(ids)
+        self._view_key = view_key
         for s in seq_ids:
             self.pool.positions[s] += 1
         logits = np.asarray(outs["logits"].cols["v"]).reshape(

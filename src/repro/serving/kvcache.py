@@ -181,6 +181,18 @@ class BatchedCacheTables:
                                          chunk_size=chunk_size,
                                          layout=layout, batch=max_seqs)
         self.positions = np.zeros(max_seqs, np.int32)
+        # per-slot generation counters: bumped on every slot mutation that
+        # does NOT go through a decode tick (prefill fill, free).  Cached
+        # batch views (BatchedDecoder) key on these, so view invalidation
+        # fires even when a freed slot is reused by a NEW sequence through
+        # pool-level writes the decoder never sees — same slot id, same
+        # batch tuple, different contents.
+        self.generations = np.zeros(max_seqs, np.int64)
+
+    def slot_generations(self, seq_ids) -> tuple:
+        """Generation stamp of a batch of slots (view-cache key)."""
+        return tuple(int(g) for g in
+                     self.generations[np.asarray(seq_ids, np.int32)])
 
     def write_prefill(self, seq_id: int, env, length: int) -> None:
         """Copy a single-sequence session's cache tables into a slot —
@@ -190,6 +202,7 @@ class BatchedCacheTables:
         from repro.core.llama_graph import copy_cache_slot
         copy_cache_slot(self.tables, seq_id, env)
         self.positions[seq_id] = length
+        self.generations[seq_id] += 1
 
     def free(self, seq_id: int) -> None:
         """Release a slot: reset its position.  This is state hygiene and
@@ -199,6 +212,7 @@ class BatchedCacheTables:
         overwrites the whole slot on reuse; zeroing the device arrays
         here would cost 2·n_layers scatters per completion for nothing."""
         self.positions[seq_id] = 0
+        self.generations[seq_id] += 1
 
     def gather_views(self, seq_ids):
         """Batch views: {table: DenseTable keyed (seq ∈ [B), …)}.
@@ -228,6 +242,7 @@ class BatchedCacheTables:
             cn = next(iter(pool.cols))
             pool.cols[cn] = pool.cols[cn].at[ids].set(
                 env[name].cols[cn].astype(pool.cols[cn].dtype))
+        self.generations[ids] += 1  # external slot mutation: views go stale
 
     def scatter_rows(self, seq_ids, env, positions,
                      pos_key: str = "tp") -> None:

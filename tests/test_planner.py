@@ -825,6 +825,21 @@ class TestEngineKnob:
         got = eng.generate(prompt, 4)
         assert got.tokens == ref.tokens
 
+    def test_cache_layout_defaults_to_auto(self, params):
+        """ISSUE 5 satellite: the engine default flipped from "off" to
+        "auto" — the decode plan resolves it to the locality model's
+        choice (head_major: the layout the fresh BENCH_attn_layout sweep
+        measures fastest at the largest cache length) and generation
+        stays identical to the seed key order."""
+        from repro.serving.engine import RelationalEngine
+        prompt = [3, 17, 42, 5, 9]
+        eng = RelationalEngine(SPEC, params, chunk_size=8, max_len=16)
+        assert eng.cache_layout == CACHE_HEAD_MAJOR
+        ref = RelationalEngine(SPEC, params, chunk_size=8, max_len=16,
+                               cache_layout="off")
+        assert eng.generate(prompt, 4).tokens == ref.generate(prompt,
+                                                              4).tokens
+
     def test_paged_matches_off(self, params, tmp_path):
         from repro.serving.engine import RelationalEngine
         prompt = [3, 17, 42, 5, 9]

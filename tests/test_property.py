@@ -303,6 +303,130 @@ def test_batched_decode_equals_independent_runs(data):
         np.testing.assert_allclose(got[b], refs[b], rtol=2e-4, atol=2e-4)
 
 
+# --- quantised chunk payloads (ISSUE 5 tentpole properties) ----------------
+
+
+@settings(**COMMON)
+@given(rows=st.integers(1, 8), width=st.integers(1, 33),
+       cs=st.integers(1, 12), codec_name=st.sampled_from(["int8", "nf4"]))
+def test_quant_roundtrip_error_bound(rows, width, cs, codec_name):
+    """quantise∘dequantise stays within each codec's analytic per-element
+    bound for any shape / chunk (group) size, and the cold-store packing
+    round-trips the codes exactly."""
+    from repro.quant.codecs import CODECS
+    codec = CODECS[codec_name]
+    x = np.random.default_rng(rows * 100 + width).standard_normal(
+        (rows, width)).astype(np.float32)
+    ct = ChunkedTensor.from_dense("t", x, chunk_size=cs)
+    codes, scales = codec.quantise(ct.data)
+    y = np.asarray(codec.dequantise(codes, scales))
+    bound = np.asarray(codec.roundtrip_bound(scales))[..., None]
+    assert np.all(np.abs(y - np.asarray(ct.data)) <= bound + 1e-6)
+    np.testing.assert_array_equal(
+        np.asarray(codec.unpack(codec.pack(np.asarray(codes)),
+                                ct.schema.chunk_size)),
+        np.asarray(codes))
+
+
+def _dequant_scan(wq, codec, table_name="wq"):
+    """Scan(quantised table) wrapped in the inline dequant projection —
+    the exact plan shape the precision planner emits."""
+    from repro.core.relational import VEC as _VEC
+    cs = wq.cols["qchunk"].shape[-1]
+    return Project(
+        input=Scan(table_name, wq.schema()),
+        keys=None,
+        exprs=[("chunk", _VEC(cs), codec.dequant_expr())])
+
+
+@settings(**COMMON)
+@given(m=st.integers(1, 8), t=st.integers(1, 6), k=st.integers(1, 24),
+       cs=st.integers(1, 10), codec_name=st.sampled_from(["int8", "nf4"]))
+def test_quantised_row_matmul_within_codec_tolerance(m, t, k, cs,
+                                                     codec_name):
+    """The ROW_CHUNK matmul against a dequant-projected quantised weight
+    equals the dense product of the dequantised weight exactly, and stays
+    within the codec's analytic matmul bound of the f32 product — any
+    chunk size (the quantisation group), padding included (both codecs
+    encode 0.0 exactly, so the zero tail cannot contribute)."""
+    from repro.core.executor import table_from_chunked
+    from repro.quant.codecs import CODECS, quantise_chunked_table
+    codec = CODECS[codec_name]
+    rng = np.random.default_rng(m * 1000 + t * 10 + cs)
+    x = rng.standard_normal((t, k)).astype(np.float32)
+    w = rng.standard_normal((m, k)).astype(np.float32)
+    xt = ChunkedTensor.from_dense("x", x, chunk_size=cs, key_names=("t",))
+    wt = ChunkedTensor.from_dense("w", w, chunk_size=cs, key_names=("j",))
+    xd = DenseTable(keys=(("t", t), ("c", xt.schema.n_chunks)),
+                    cols={"v": table_from_chunked(xt).cols["chunk"]},
+                    col_types={"v": VEC(xt.schema.chunk_size)})
+    wq = quantise_chunked_table(
+        DenseTable(keys=(("j", m), ("c", wt.schema.n_chunks)),
+                   cols={"chunk": table_from_chunked(wt).cols["chunk"]},
+                   col_types={"chunk": VEC(wt.schema.chunk_size)}),
+        codec)
+    plan = GroupAgg(
+        input=Join(left=Scan("x", xd.schema()),
+                   right=_dequant_scan(wq, codec),
+                   on=[("c", key("c"))]),
+        group_keys=["t", "j"],
+        aggs=[("s", "SUM", call("dot", col("v"), col("chunk")))])
+    out = execute(plan, {"x": xd, "wq": wq})
+    got = np.asarray(out.cols["s"])
+    wq_dense = np.asarray(codec.dequantise(
+        wq.cols["qchunk"], wq.cols["scale"])).reshape(m, -1)[:, :k]
+    np.testing.assert_allclose(got, x @ wq_dense.T, rtol=1e-4, atol=1e-4)
+    bound = np.asarray(codec.matmul_bound(
+        np.asarray(wq.cols["scale"]), np.asarray(xt.data)))
+    assert np.all(np.abs(got - x @ w.T) <= bound + 1e-4)
+
+
+@settings(**COMMON)
+@given(m=st.integers(1, 8), t=st.integers(1, 6), k=st.integers(1, 16),
+       cs=st.integers(1, 8), cs_col=st.integers(1, 10),
+       codec_name=st.sampled_from(["int8", "nf4"]))
+def test_quantised_col_matmul_within_codec_tolerance(t, m, k, cs, cs_col,
+                                                     codec_name):
+    """The COL_CHUNK matmul shape against a dequant-projected quantised
+    column table matches the dense dequantised product for any
+    (activation, column) chunk-size pair — the (layout × chunk ×
+    precision) joint axis the planner prices."""
+    from repro.core.executor import col_table_from_dense, table_from_chunked
+    from repro.quant.codecs import CODECS, quantise_chunked_table
+    codec = CODECS[codec_name]
+    rng = np.random.default_rng(m * 777 + k * 13 + cs_col)
+    x = rng.standard_normal((t, k)).astype(np.float32)
+    w = rng.standard_normal((m, k)).astype(np.float32)
+    xt = ChunkedTensor.from_dense("x", x, chunk_size=cs, key_names=("t",))
+    nch, csx = xt.schema.n_chunks, xt.schema.chunk_size
+    n_feat = nch * csx
+    xd = DenseTable(keys=(("t", t), ("c", nch)),
+                    cols={"v": table_from_chunked(xt).cols["chunk"]},
+                    col_types={"v": VEC(csx)})
+    wcol = col_table_from_dense(np.pad(w, ((0, 0), (0, n_feat - k))),
+                                cs_col)
+    wq = quantise_chunked_table(wcol, codec)
+    n_out = wcol.keys[1][1]
+    u = Unnest(input=Scan("x", xd.schema()), vec_col="v", elem_key="e",
+               elem_col="xs")
+    p = Project(input=u,
+                keys=[("t", t, key("t")),
+                      ("d", n_feat, add(mul(key("c"), const(csx)),
+                                        key("e")))],
+                exprs=[("xs", None, col("xs"))])
+    plan = GroupAgg(
+        input=Join(left=p, right=_dequant_scan(wq, codec), on=[("d",
+                                                                key("d"))]),
+        group_keys=["t", "c"],
+        aggs=[("o", "SUM", mul(col("xs"), col("chunk")))])
+    out = execute(plan, {"x": xd, "wq": wq})
+    got = np.asarray(out.cols["o"]).reshape(t, n_out * cs_col)[:, :m]
+    wq_dense = np.asarray(codec.dequantise(
+        wq.cols["qchunk"], wq.cols["scale"]))          # [n_feat, n_out, cs']
+    wq_dense = wq_dense.reshape(n_feat, n_out * cs_col).T[:m, :k]
+    np.testing.assert_allclose(got, x @ wq_dense.T, rtol=1e-4, atol=1e-4)
+
+
 @settings(**COMMON)
 @given(steps=st.integers(1, 5), seed=st.integers(0, 10))
 def test_data_pipeline_deterministic_resume(steps, seed):

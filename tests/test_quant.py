@@ -1,0 +1,520 @@
+"""Quantised chunk payloads (ISSUE 5): codec kernels and error bounds,
+precision planning (eligibility, forced/auto/budget modes, pool pinning),
+executor equivalence within codec tolerance, golden SQL snapshots for the
+quantised DDL + dequant projections (both dialects), and the engine knob
+(in-memory, paged, auto-under-budget, accuracy gate)."""
+
+import numpy as np
+import pytest
+
+from repro.core.chunked import ChunkedTensor
+from repro.core.executor import table_from_chunked
+from repro.core.graph import Graph, infer_shapes
+from repro.core.llama_graph import (LlamaSpec, build_decode_graph,
+                                    build_prefill_graph, convert_weights,
+                                    empty_cache_tables, init_llama_params,
+                                    rope_freq_table, token_table)
+from repro.core.opmap import op_map
+from repro.core.passes import postoptimize, preoptimize
+from repro.core.pipeline import run_pipeline
+from repro.core.sqlgen import generate_sql
+from repro.planner import CostParams, ResidencyPool, plan_layouts
+from repro.quant import (CODECS, NF4_LEVELS, PRECISIONS, precision_bytes,
+                         quant_schema, quantise_chunked_table)
+
+SPEC = LlamaSpec(vocab=64, d_model=32, n_layers=2, n_heads=4, n_kv=2,
+                 d_ff=64, rope_theta=10000.0)
+
+
+def _linear_pipe(cs=4):
+    g = Graph(name="lin")
+    g.inputs = ["ids"]
+    g.annotate("ids", (("t", 4),))
+    g.annotate("vocab", (("tok", 16), ("d", 8)))
+    g.initializers["vocab"] = None
+    g.initializers["W"] = None
+    g.annotate("W", (("j", 8), ("d", 8)))
+    x = g.add("embedding", ["vocab", "ids"])
+    g.add("linear", [x, "W"], out_features=8, output="y")
+    g.outputs = ["y"]
+    infer_shapes(g)
+    return op_map(g, chunk_size=cs)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_llama_params(SPEC, seed=0)
+
+
+class TestCodecs:
+    @pytest.mark.parametrize("name", list(CODECS))
+    def test_roundtrip_within_bound(self, name):
+        codec = CODECS[name]
+        x = np.random.default_rng(0).standard_normal((6, 3, 16)).astype(
+            np.float32)
+        codes, scales = codec.quantise(x)
+        y = np.asarray(codec.dequantise(codes, scales))
+        bound = np.asarray(codec.roundtrip_bound(scales))[..., None]
+        assert np.all(np.abs(y - x) <= bound + 1e-7)
+
+    @pytest.mark.parametrize("name", list(CODECS))
+    def test_pack_unpack_inverse(self, name):
+        codec = CODECS[name]
+        x = np.random.default_rng(1).standard_normal((5, 2, 8)).astype(
+            np.float32)
+        codes, _ = codec.quantise(x)
+        packed = codec.pack(np.asarray(codes))
+        if name == "nf4":  # two codes per byte
+            assert packed.dtype == np.uint8 and packed.shape[-1] == 4
+        np.testing.assert_array_equal(np.asarray(codec.unpack(packed, 8)),
+                                      np.asarray(codes))
+
+    def test_int8_codes_in_range(self):
+        codec = CODECS["int8"]
+        x = np.random.default_rng(2).standard_normal((4, 32)).astype(
+            np.float32) * 10
+        codes, _ = codec.quantise(x)
+        assert np.asarray(codes).dtype == np.int8
+        assert np.abs(np.asarray(codes)).max() <= 127
+
+    def test_nf4_codebook_exact_on_levels(self):
+        """Values exactly on NF4 levels (× a scale) round-trip exactly."""
+        codec = CODECS["nf4"]
+        x = 3.25 * np.asarray(NF4_LEVELS, np.float32).reshape(1, 16)
+        codes, scales = codec.quantise(x)
+        np.testing.assert_array_equal(np.asarray(codes)[0], np.arange(16))
+        np.testing.assert_allclose(
+            np.asarray(codec.dequantise(codes, scales)), x, rtol=1e-6)
+
+    def test_zero_chunk_is_safe(self):
+        for codec in CODECS.values():
+            codes, scales = codec.quantise(np.zeros((2, 4), np.float32))
+            y = np.asarray(codec.dequantise(codes, scales))
+            np.testing.assert_array_equal(y, 0.0)
+
+    def test_precision_bytes_model(self):
+        # 1024 elements in 128 groups of 8
+        assert precision_bytes("f32", 1024, 128) == 4096
+        assert precision_bytes("int8", 1024, 128) == 1024 + 512
+        assert precision_bytes("nf4", 1024, 128) == 512 + 512
+
+    def test_quantise_chunked_table_schema(self):
+        w = np.random.default_rng(3).standard_normal((8, 12)).astype(
+            np.float32)
+        t = table_from_chunked(ChunkedTensor.from_dense("w", w,
+                                                        chunk_size=4))
+        q = quantise_chunked_table(t, CODECS["int8"])
+        assert set(q.cols) == {"qchunk", "scale"}
+        assert q.keys == t.keys
+        qs = quant_schema(t.schema("w"))
+        assert qs.col_names == ("qchunk", "scale")
+
+
+class TestPrecisionPlanning:
+    def test_eligibility(self):
+        """Matmul weights AND the embedding value-join table quantise;
+        norms and input tables never do."""
+        g = build_prefill_graph(SPEC, 4)
+        infer_shapes(g)
+        pipe = op_map(g, chunk_size=8)
+        plan = plan_layouts(pipe, mode="off", precision_mode="int8")
+        tables = {d.table for d in plan.precision_decisions}
+        assert "vocabulary" in tables and "lm_head" in tables
+        assert "o_weights_L0" in tables and "GLU_W2_L1" in tables
+        assert not any("Norm" in t for t in tables)
+        assert not any(t in ("freq_each_token", "token_ids")
+                       for t in tables)
+        # the quantised twins took over the weight schemas
+        assert "lm_head__int8" in pipe.weight_schemas
+        assert "lm_head" not in pipe.weight_schemas
+        assert pipe.table_precisions["lm_head__int8"] == "int8"
+
+    def test_auto_unbounded_keeps_f32(self):
+        """Under the analytic defaults with no budget pressure, f32 wins
+        (quantisation is not free: the dequant term)."""
+        g = build_decode_graph(SPEC, cache_len=8)
+        infer_shapes(g)
+        pipe = op_map(g, chunk_size=8)
+        plan = plan_layouts(pipe, mode="auto", precision_mode="auto")
+        assert plan.precision_decisions == []
+
+    def test_auto_budget_quantises_biggest_first(self):
+        """The residency pass flips tables by bytes saved until the
+        working set fits the pool budget."""
+        g = build_decode_graph(SPEC, cache_len=8)
+        infer_shapes(g)
+        pipe = op_map(g, chunk_size=8)
+        # f32 weights of the 2-layer spec are ~120 KB; a 60 KB budget
+        # forces roughly half the bytes out
+        pool = ResidencyPool(budget_bytes=60_000)
+        plan = plan_layouts(pipe, mode="off", pool=pool,
+                            precision_mode="auto")
+        assert plan.precision_decisions
+        assert all(d.budget_driven for d in plan.precision_decisions)
+        assert all(d.precision == "int8" for d in plan.precision_decisions)
+        # the flips really reclaim bytes: every decision shrinks its table
+        assert all(d.q_bytes < d.f32_bytes
+                   for d in plan.precision_decisions)
+
+    def test_auto_budget_escalates_to_nf4(self):
+        """A budget int8 alone cannot satisfy escalates to nf4."""
+        g = build_decode_graph(SPEC, cache_len=8)
+        infer_shapes(g)
+        pipe = op_map(g, chunk_size=8)
+        pool = ResidencyPool(budget_bytes=1)  # nothing fits: max compression
+        plan = plan_layouts(pipe, mode="off", pool=pool,
+                            precision_mode="auto")
+        assert plan.precision_decisions
+        assert all(d.precision == "nf4" for d in plan.precision_decisions)
+
+    def test_table_precision_overrides(self):
+        g = build_decode_graph(SPEC, cache_len=8)
+        infer_shapes(g)
+        pipe = op_map(g, chunk_size=8)
+        plan = plan_layouts(pipe, mode="off", precision_mode="int8",
+                            table_precisions={"lm_head": "f32",
+                                              "vocabulary": "nf4"})
+        by = {d.table: d.precision for d in plan.precision_decisions}
+        assert "lm_head" not in by           # exempted
+        assert by["vocabulary"] == "nf4"     # overridden codec
+        assert by["o_weights_L0"] == "int8"  # mode applies elsewhere
+
+    def test_unknown_precision_rejected(self):
+        g = build_decode_graph(SPEC, cache_len=8)
+        infer_shapes(g)
+        pipe = op_map(g, chunk_size=8)
+        with pytest.raises(ValueError, match="unknown precision"):
+            plan_layouts(pipe, mode="off", precision_mode="auto",
+                         table_precisions={"lm_head": "fp8"})
+        g2 = build_decode_graph(SPEC, cache_len=8)
+        infer_shapes(g2)
+        pipe2 = op_map(g2, chunk_size=8)
+        with pytest.raises(ValueError, match="precision mode"):
+            plan_layouts(pipe2, mode="off", precision_mode="int4")
+
+    def test_pool_pins_precisions_across_plans(self):
+        """Two pipelines over one pool must agree on every shared table's
+        payload format — including tables the first plan kept f32."""
+        pool = ResidencyPool(budget_bytes=60_000)
+
+        def plan(kind):
+            g = (build_prefill_graph(SPEC, 4) if kind == "prefill"
+                 else build_decode_graph(SPEC, cache_len=8))
+            infer_shapes(g)
+            pipe = op_map(g, chunk_size=8)
+            plan_layouts(pipe, mode="off", pool=pool,
+                         precision_mode="auto")
+            return pipe
+
+        dec = plan("decode")
+        pre = plan("prefill")
+        dprec = dict(dec.table_precisions)
+        pprec = dict(pre.table_precisions)
+        assert dprec  # the budget really quantised something
+        assert dprec == pprec  # identical table sets -> identical choices
+        # pinned entries include the f32 keeps
+        assert any(p == "f32" for p in pool.precisions.values()) or \
+            len(pool.precisions) == len(dprec)
+
+    def test_precision_cost_model_shape(self):
+        """f32 wins at the analytic defaults; int8 wins once bytes are
+        expensive; the codec dequant multiplier orders int8 before nf4
+        at moderate byte pressure."""
+        from repro.planner import choose_precision, precision_cost
+        p = CostParams()
+        best, costs = choose_precision(64 * 64, 64 * 8, p)
+        assert best == "f32"
+        expensive = CostParams(byte_weight=2.0, dequant_weight=0.25)
+        best2, costs2 = choose_precision(64 * 64, 64 * 8, expensive)
+        assert best2 != "f32"
+        assert precision_cost("int8", 4096, 512, p) < \
+            precision_cost("nf4", 4096, 512, p)
+
+
+class TestExecutorEquivalence:
+    def _prefill(self, params, ids, mode, precision, cs=8):
+        g = build_prefill_graph(SPEC, len(ids))
+        infer_shapes(g)
+        preoptimize(g)
+        pipe = op_map(g, chunk_size=cs)
+        postoptimize(pipe, layout_mode=mode, precision_mode=precision)
+        env = convert_weights(params, chunk_size=cs)
+        env.update(empty_cache_tables(SPEC, len(ids), chunk_size=cs))
+        env["token_ids"] = token_table(ids)
+        env["freq_each_token"] = rope_freq_table(
+            np.arange(len(ids)), SPEC.head_dim, SPEC.rope_theta)
+        outs, _ = run_pipeline(pipe, env, scalars={"cache_position": 0})
+        return np.asarray(outs["logits"].cols["v"]).reshape(
+            len(ids), -1)[:, : SPEC.vocab]
+
+    @pytest.mark.parametrize("mode", ["off", "auto", "col"])
+    @pytest.mark.parametrize("precision,tol", [("int8", 0.35),
+                                               ("nf4", 2.5)])
+    def test_prefill_logits_within_codec_tolerance(self, params, mode,
+                                                   precision, tol):
+        ids = np.array([3, 17, 42, 5, 9], np.int32)
+        ref = self._prefill(params, ids, mode, "off")
+        got = self._prefill(params, ids, mode, precision)
+        err = np.abs(got - ref).max()
+        assert err <= tol, (mode, precision, err)
+        assert err > 0  # the quantised path really took effect
+
+    def test_decode_kv_cached_quantised(self, params):
+        """KV-cached decode with quantised weights tracks the f32 decode
+        within int8 tolerance at every step."""
+        ids = np.array([3, 17, 42, 5, 9], np.int32)
+        MAXT = 9
+        outs = {}
+        for precision in ("off", "int8"):
+            g = build_prefill_graph(SPEC, len(ids), cache_len=MAXT)
+            infer_shapes(g)
+            preoptimize(g)
+            pre = op_map(g, chunk_size=8)
+            postoptimize(pre, layout_mode="auto",
+                         precision_mode=precision)
+            g2 = build_decode_graph(SPEC, cache_len=MAXT)
+            infer_shapes(g2)
+            preoptimize(g2)
+            dec = op_map(g2, chunk_size=8)
+            postoptimize(dec, layout_mode="auto",
+                         precision_mode=precision)
+            env = convert_weights(params, chunk_size=8)
+            env.update(empty_cache_tables(SPEC, MAXT, chunk_size=8))
+            env["token_ids"] = token_table(ids)
+            env["freq_each_token"] = rope_freq_table(
+                np.arange(len(ids)), SPEC.head_dim, SPEC.rope_theta)
+            _, env = run_pipeline(pre, env, scalars={"cache_position": 0})
+            logs, cur = [], len(ids)
+            for tok in [21, 33, 7]:
+                env["token_ids"] = token_table(np.asarray([tok], np.int32))
+                env["freq_each_token"] = rope_freq_table(
+                    np.asarray([cur]), SPEC.head_dim, SPEC.rope_theta)
+                o, env = run_pipeline(dec, env,
+                                      scalars={"cache_position": cur})
+                logs.append(np.asarray(o["logits"].cols["v"]).reshape(-1)
+                            [: SPEC.vocab])
+                cur += 1
+            outs[precision] = np.stack(logs)
+        err = np.abs(outs["int8"] - outs["off"]).max()
+        assert 0 < err <= 0.5
+
+    def test_quantised_matmul_within_analytic_bound(self):
+        """The relational quantised matmul's error respects the codec's
+        analytic matmul bound (scales × activation L1 mass)."""
+        pipe = _linear_pipe()
+        plan_layouts(pipe, mode="off", precision_mode="int8")
+        rng = np.random.default_rng(0)
+        w = {"vocab": rng.standard_normal((16, 8)).astype(np.float32),
+             "W": rng.standard_normal((8, 8)).astype(np.float32)}
+        env = convert_weights(w, chunk_size=4)
+        env["ids"] = token_table(np.asarray([3, 0, 15, 7], np.int32))
+        outs, _ = run_pipeline(pipe, env)
+        got = np.asarray(outs["y"].cols["v"]).reshape(4, 8)
+        codec = CODECS["int8"]
+        # reference through the *quantised embedding* (x itself dequants)
+        xq = np.asarray(codec.dequantise(*codec.quantise(
+            w["vocab"].reshape(16, 2, 4)))).reshape(16, 8)[[3, 0, 15, 7]]
+        ref = xq @ w["W"].T
+        _, scales = codec.quantise(w["W"].reshape(8, 2, 4))
+        bound = np.asarray(codec.matmul_bound(
+            scales, xq.reshape(4, 2, 4))).reshape(4, 8)
+        assert np.all(np.abs(got - ref) <= bound + 1e-5)
+
+
+GOLDEN_QUANT_DDL_DUCKDB = """\
+-- precision: int8 (planner)
+CREATE TABLE W__int8 (j INT32, c INT32, qchunk TINYINT[4], scale FLOAT);"""
+
+GOLDEN_NF4_DDL_DUCKDB = """\
+-- precision: nf4 (planner)
+CREATE TABLE W__nf4 (j INT32, c INT32, qchunk UTINYINT[4], scale FLOAT);"""
+
+GOLDEN_QUANT_CONVERSION_DUCKDB = """\
+-- QUANTISE (int8): W -> W__int8
+CREATE OR REPLACE TABLE W__int8 AS
+SELECT j, c, list_transform(chunk, x -> CAST(round(x / scale) AS TINYINT)) AS qchunk, scale
+FROM (SELECT j, c, chunk, greatest(absmax(chunk), 1e-12) / 127.0 AS scale FROM W);"""
+
+GOLDEN_NF4_CONVERSION_DUCKDB = """\
+-- QUANTISE (nf4): W -> W__nf4
+CREATE OR REPLACE TABLE W__nf4 AS
+SELECT j, c, list_transform(chunk, x -> nf4_encode(x / scale)) AS qchunk, scale
+FROM (SELECT j, c, chunk, greatest(absmax(chunk), 1e-12) AS scale FROM W);"""
+
+GOLDEN_QUANT_CONVERSION_ANSI = """\
+-- QUANTISE (int8): W -> W__int8
+CREATE OR REPLACE TABLE W__int8 AS
+SELECT j, c, quantise_int8(chunk, scale) AS qchunk, scale
+FROM (SELECT j, c, chunk, greatest(absmax(chunk), 1e-12) / 127.0 AS scale FROM W);"""
+
+# the dequant projection is inlined as a CTE feeding the matmul join
+GOLDEN_QUANT_VIEW_DUCKDB = """\
+CREATE OR REPLACE VIEW y AS
+WITH t6 AS (SELECT j, c, list_transform(qchunk, x -> x * (scale)) AS chunk FROM W__int8),
+  t5 AS (SELECT L.t, L.c, R.j, L.v, R.chunk AS chunk FROM embedding_1 AS L JOIN t6 AS R ON R.c = L.c),
+  t4 AS (SELECT t, j, SUM(list_dot_product(v, chunk)) AS s FROM t5 GROUP BY t, j),
+  t3 AS (SELECT t AS t, (j // 4) AS c, (j % 4) AS e, s AS x FROM t4)
+SELECT t, c, collect_as_array(LIST(e), LIST(x)) AS v FROM t3 GROUP BY t, c;"""
+
+GOLDEN_QUANT_VIEW_ANSI = """\
+CREATE OR REPLACE VIEW y AS
+WITH t6 AS (SELECT j, c, map_vec(qchunk, 'x * (scale)') AS chunk FROM W__int8),
+  t5 AS (SELECT L.t, L.c, R.j, L.v, R.chunk AS chunk FROM embedding_1 AS L JOIN t6 AS R ON R.c = L.c),
+  t4 AS (SELECT t, j, SUM(dot(v, chunk)) AS s FROM t5 GROUP BY t, j),
+  t3 AS (SELECT t AS t, (j / 4) AS c, (j % 4) AS e, s AS x FROM t4)
+SELECT t, c, collect_as_array(LIST(e), LIST(x)) AS v FROM t3 GROUP BY t, c;"""
+
+GOLDEN_NF4_VIEW_FRAGMENT_DUCKDB = (
+    "SELECT j, c, list_transform(nf4_dequant(qchunk), x -> x * (scale)) "
+    "AS chunk FROM W__nf4")
+
+
+class TestQuantSQLSnapshots:
+    """Pinned snapshots: quantised DDL, f32 → quantised conversion and
+    the inline dequant projection, both dialects."""
+
+    def _sql(self, dialect, precision="int8"):
+        pipe = _linear_pipe()
+        plan_layouts(pipe, mode="off", precision_mode=precision)
+        return generate_sql(pipe, dialect=dialect, include_conversion=True)
+
+    def test_duckdb_int8_script(self):
+        sql = self._sql("duckdb")
+        assert GOLDEN_QUANT_DDL_DUCKDB in sql
+        assert GOLDEN_QUANT_CONVERSION_DUCKDB in sql
+        assert GOLDEN_QUANT_VIEW_DUCKDB in sql
+        # the f32 source DDL survives as the conversion input
+        assert "CREATE TABLE W (j INT32, c INT32, chunk FLOAT[4]);" in sql
+        # the quant UDF prelude ships with the script
+        assert "CREATE OR REPLACE MACRO absmax(arr)" in sql
+        assert "CREATE OR REPLACE MACRO nf4_encode(v)" in sql
+
+    def test_duckdb_nf4_script(self):
+        sql = self._sql("duckdb", precision="nf4")
+        assert GOLDEN_NF4_DDL_DUCKDB in sql
+        assert GOLDEN_NF4_CONVERSION_DUCKDB in sql
+        assert GOLDEN_NF4_VIEW_FRAGMENT_DUCKDB in sql
+
+    def test_ansi_int8_script(self):
+        sql = self._sql("ansi")
+        assert GOLDEN_QUANT_DDL_DUCKDB in sql  # DDL is dialect-invariant
+        assert GOLDEN_QUANT_CONVERSION_ANSI in sql
+        assert GOLDEN_QUANT_VIEW_ANSI in sql
+
+    def test_quantised_col_table_chains_conversions(self):
+        """A quantised column copy emits ROW2COL first, then the
+        quantisation reading the column table."""
+        pipe = _linear_pipe()
+        plan_layouts(pipe, mode="col", precision_mode="int8")
+        sql = generate_sql(pipe, dialect="duckdb", include_conversion=True)
+        i_col = sql.find("-- ROW2COL: W -> W__col")
+        i_q = sql.find("-- QUANTISE (int8): W__col -> W__col__int8")
+        assert 0 <= i_col < i_q
+        assert ("-- layout: col_chunk; precision: int8 (planner)\n"
+                "CREATE TABLE W__col__int8 (d INT32, c INT32, "
+                "qchunk TINYINT[4], scale FLOAT);") in sql
+        # the intermediate f32 column table is declared for the chain
+        assert "CREATE TABLE W__col (d INT32, c INT32, chunk FLOAT[4]);" \
+            in sql
+
+    def test_llama_decode_script_quantised(self, params):
+        g = build_decode_graph(SPEC, cache_len=16)
+        infer_shapes(g)
+        pipe = op_map(g, chunk_size=8)
+        postoptimize(pipe, layout_mode="off", precision_mode="int8")
+        for dialect in ("duckdb", "ansi"):
+            sql = generate_sql(pipe, dialect=dialect)
+            assert "CREATE TABLE vocabulary__int8" in sql
+            assert "CREATE TABLE lm_head__int8" in sql
+            assert "JOIN" in sql and "qchunk" in sql
+
+
+class TestEngineKnob:
+    def test_forced_codec_generates(self, params):
+        from repro.serving.engine import RelationalEngine
+        from repro.quant.gate import logit_error_between
+        prompt = [3, 17, 42, 5, 9]
+        ref = RelationalEngine(SPEC, params, chunk_size=8, max_len=16,
+                               precision="f32")
+        for precision, tol in (("int8", 0.5), ("nf4", 2.5)):
+            eng = RelationalEngine(SPEC, params, chunk_size=8, max_len=16,
+                                   precision=precision)
+            assert len(eng.table_precision_choices) >= SPEC.n_layers * 7
+            r = eng.generate(prompt, 4)
+            assert len(r.tokens) == 4
+            err = logit_error_between(eng, ref, prompt)
+            assert 0 < err <= tol
+
+    def test_paged_matches_in_memory(self, params, tmp_path):
+        """Quantisation is deterministic: the paged engine (packed cold
+        codes, LazyEnv wraps) generates exactly the in-memory quantised
+        tokens, with a working set far below f32's."""
+        from repro.serving.engine import RelationalEngine
+        prompt = [3, 17, 42, 5, 9]
+        inm = RelationalEngine(SPEC, params, chunk_size=8, max_len=16,
+                               precision="int8")
+        pag = RelationalEngine(SPEC, params, chunk_size=8, max_len=16,
+                               precision="int8", residency="paged",
+                               budget_bytes=1 << 20,
+                               disk_dir=str(tmp_path))
+        gi = inm.generate(prompt, 4)
+        gp = pag.generate(prompt, 4)
+        assert gp.tokens == gi.tokens
+        f32 = RelationalEngine(SPEC, params, chunk_size=8, max_len=16,
+                               precision="f32", residency="paged",
+                               budget_bytes=1 << 20,
+                               disk_dir=str(tmp_path / "f32"))
+        gf = f32.generate(prompt, 4)
+        # the paged hot set shrank by more than 2x (int8 payload + scales
+        # at the test's tiny chunk size; bigger chunks approach 4x)
+        assert gp.peak_working_set * 2 < gf.peak_working_set
+
+    def test_auto_admits_quantised_under_budget(self, params, tmp_path):
+        """Acceptance: precision="auto" admits >= 1 quantised table under
+        a constrained pager budget, and the engine still generates."""
+        from repro.serving.engine import RelationalEngine
+        eng = RelationalEngine(SPEC, params, chunk_size=8, max_len=16,
+                               precision="auto", residency="paged",
+                               budget_bytes=40_000, disk_dir=str(tmp_path))
+        assert len(eng.table_precision_choices) >= 1
+        assert len(eng.generate([3, 17, 42], 3).tokens) == 3
+
+    def test_auto_in_memory_keeps_f32(self, params):
+        from repro.serving.engine import RelationalEngine
+        eng = RelationalEngine(SPEC, params, chunk_size=8, max_len=16,
+                               precision="auto")
+        assert eng.table_precision_choices == {}
+
+    def test_accuracy_gate(self, params):
+        from repro.serving.engine import RelationalEngine
+        from repro.quant.gate import AccuracyBudgetExceeded
+        RelationalEngine(SPEC, params, chunk_size=8, max_len=16,
+                         precision="int8", accuracy_budget=0.5)
+        with pytest.raises(AccuracyBudgetExceeded):
+            RelationalEngine(SPEC, params, chunk_size=8, max_len=16,
+                             precision="nf4", accuracy_budget=1e-4)
+
+    def test_batched_decode_with_quantised_weights(self, params):
+        """The seq-keyed batched plan runs against the same quantised
+        tables (pool-pinned precisions) and matches the sequential
+        quantised engine exactly."""
+        from repro.serving.engine import RelationalEngine
+        eng = RelationalEngine(SPEC, params, chunk_size=8, max_len=24,
+                               precision="int8")
+        prompts = [[5, 9, 2, 7], [1, 2, 3]]
+        refs = [eng.generate(p, max_new_tokens=3).tokens for p in prompts]
+        dec = eng.batched_decoder(max_seqs=2)
+        toks = [dec.prefill(p, i) for i, p in enumerate(prompts)]
+        outs = [[t] for t in toks]
+        for _ in range(2):
+            nxt = dec.decode([0, 1], [o[-1] for o in outs])
+            for o, t in zip(outs, nxt):
+                o.append(t)
+        for got, ref in zip(outs, refs):
+            assert got == ref
+
+    def test_invalid_precision_rejected(self, params):
+        from repro.serving.engine import RelationalEngine
+        with pytest.raises(AssertionError):
+            RelationalEngine(SPEC, params, chunk_size=8, max_len=16,
+                             precision="fp16")

@@ -276,6 +276,33 @@ class TestBatchedRelationalDecode:
         for rid, ref in enumerate(refs):
             assert got[rid] == ref
 
+    def test_view_cache_invalidated_on_pool_level_slot_reuse(self, engine):
+        """Regression (ISSUE 5 satellite): when a freed slot is reused by
+        a NEW sequence through *pool-level* writes in the same tick —
+        ``pool.free`` + ``pool.write_prefill``, never touching the
+        decoder — the decoder's cached batch views must still be
+        invalidated.  The old id-tuple cache key matched (same slots,
+        same batch) and served the previous sequence's stale rows."""
+        ref0 = engine.generate([5, 9, 2], max_new_tokens=3).tokens
+        ref1 = engine.generate([7, 1, 4, 2], max_new_tokens=2).tokens
+
+        dec = engine.batched_decoder(max_seqs=4)
+        t0 = dec.prefill([5, 9, 2], 0)
+        t1 = dec.prefill([1, 2, 3], 1)
+        # one tick populates the decoder's cached views for slots (0, 1)
+        step1 = dec.decode([0, 1], [t0, t1])
+        assert step1[0] == ref0[1]
+        # slot 1 leaves and is refilled by a NEW sequence via the pool
+        # directly (a scheduler or state-import path the decoder can't
+        # observe) — the ids tuple for the next tick is unchanged
+        dec.pool.free(1)
+        sess = engine.start_session([7, 1, 4, 2])
+        dec.pool.write_prefill(1, sess["env"], 4)
+        step2 = dec.decode([0, 1], [step1[0], sess["tok"]])
+        # both sequences must decode against their OWN cache contents
+        assert step2[0] == ref0[2]
+        assert sess["tok"] == ref1[0] and step2[1] == ref1[1]
+
     def test_batched_cache_pool_roundtrip(self, engine):
         """Slot gather/scatter is exact and leaves other slots untouched."""
         pool = BatchedCacheTables(engine.spec, max_seqs=3,
