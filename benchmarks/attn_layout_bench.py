@@ -15,6 +15,8 @@ import time
 
 import numpy as np
 
+from benchmarks.common import stamp
+
 from repro.core.graph import infer_shapes
 from repro.core.llama_graph import (LlamaSpec, build_decode_graph,
                                     build_prefill_graph, convert_weights,
@@ -126,7 +128,7 @@ def run(report):
         "results": results,
     }
     with open(OUT_JSON, "w") as f:
-        json.dump(payload, f, indent=2)
+        json.dump(stamp(payload), f, indent=2)
     report("attn_layout/json", 0.0, OUT_JSON)
 
 

@@ -15,6 +15,8 @@ import json
 
 import numpy as np
 
+from benchmarks.common import stamp
+
 from repro.core.llama_graph import LlamaSpec, init_llama_params
 from repro.planner.calibrate import choose_base_chunk_size, fit_cost_params
 from repro.serving.engine import RelationalEngine
@@ -83,7 +85,7 @@ def run(report):
         "measured_best": {"prefill": best_prefill, "decode": best_decode},
     }
     with open(OUT_JSON, "w") as f:
-        json.dump(payload, f, indent=2)
+        json.dump(stamp(payload), f, indent=2)
     report("chunk_sweep/json", 0.0, OUT_JSON)
 
     # acceptance: the calibrated pick brackets the measured optimum

@@ -10,7 +10,10 @@ full-size model would.
 
 from __future__ import annotations
 
+import datetime
 import functools
+import os
+import platform
 
 import numpy as np
 
@@ -36,3 +39,35 @@ def prompt(n: int, vocab: int, seed: int = 0):
 
 def param_bytes(params) -> int:
     return sum(a.size * a.dtype.itemsize for a in params.values())
+
+
+def run_metadata() -> dict:
+    """Environment fingerprint stamped into every BENCH_*.json payload,
+    so calibration fits (``planner/calibrate.py``) and drift comparisons
+    can tell whether two payloads came from comparable machines/runs."""
+    meta = {
+        "timestamp_utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "python": platform.python_version(),
+        "platform": platform.platform(),
+        "machine": platform.machine(),
+        "cpu_count": os.cpu_count(),
+        "numpy": np.__version__,
+    }
+    try:
+        import jax
+        meta["jax"] = jax.__version__
+    except ImportError:
+        pass
+    try:
+        import duckdb
+        meta["duckdb"] = duckdb.__version__
+    except ImportError:
+        meta["duckdb"] = None
+    return meta
+
+
+def stamp(payload: dict) -> dict:
+    """Attach :func:`run_metadata` to a benchmark payload (in place)."""
+    payload["run_metadata"] = run_metadata()
+    return payload

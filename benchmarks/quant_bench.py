@@ -21,6 +21,8 @@ import time
 
 import numpy as np
 
+from benchmarks.common import stamp
+
 from repro.core import relational as ra
 from repro.core.llama_graph import LlamaSpec, init_llama_params
 from repro.quant.gate import logit_error_between
@@ -122,7 +124,7 @@ def run(report):
         "results": results,
     }
     with open(OUT_JSON, "w") as f:
-        json.dump(payload, f, indent=2)
+        json.dump(stamp(payload), f, indent=2)
     report("quant/json", 0.0, OUT_JSON)
 
 

@@ -13,6 +13,8 @@ import time
 
 import numpy as np
 
+from benchmarks.common import stamp
+
 from repro.core.graph import infer_shapes
 from repro.core.llama_graph import (LlamaSpec, build_decode_graph,
                                     build_prefill_graph, convert_weights,
@@ -136,7 +138,7 @@ def run(report):
         "results": results,
     }
     with open(OUT_JSON, "w") as f:
-        json.dump(payload, f, indent=2)
+        json.dump(stamp(payload), f, indent=2)
     report("row2col/json", 0.0, OUT_JSON)
 
 

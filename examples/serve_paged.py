@@ -15,9 +15,43 @@ import time
 import numpy as np
 
 from repro.core.llama_graph import LlamaSpec, init_llama_params
+from repro.obs import MetricsRegistry
 from repro.serving.engine import RelationalEngine
 from repro.serving.kvcache import PagedKVCache, PagedKVConfig
 from repro.serving.scheduler import ContinuousBatcher, Request
+
+
+def _pct(h, p):
+    v = h.percentile(p)
+    return f"{v*1e3:.1f} ms" if v == v else "n/a"  # NaN-safe
+
+
+def print_metrics_summary(reg: MetricsRegistry) -> None:
+    """End-of-run serving summary straight from the metrics registry."""
+
+    def get(kind, name, **labels):
+        return getattr(reg, kind)(name, **labels)
+
+    ttft = get("histogram", "serving_ttft_seconds")
+    tick = get("histogram", "serving_tick_seconds")
+    occ = get("gauge", "serving_batch_occupancy")
+    hits = get("counter", "pager_hits_total").value
+    pf_hits = get("counter", "pager_prefetch_hits_total").value
+    misses = get("counter", "pager_misses_total").value
+    total = hits + pf_hits + misses
+    print("\nmetrics summary:")
+    print(f"  ttft: p50={_pct(ttft, 50)} p95={_pct(ttft, 95)} "
+          f"(n={ttft.count})")
+    print(f"  decode tick: p50={_pct(tick, 50)} p95={_pct(tick, 95)} "
+          f"mean={tick.mean*1e3:.1f} ms (n={tick.count})")
+    print(f"  batch occupancy (last tick): {occ.value:.2f}")
+    print(f"  pager hit rate: "
+          f"{(hits + pf_hits) / total if total else 0.0:.2%} "
+          f"({int(hits)} hot + {int(pf_hits)} prefetched / {int(total)})")
+    print(f"  preemptions: "
+          f"{int(get('counter', 'serving_preemptions_total').value)}  "
+          f"completed: "
+          f"{int(get('counter', 'serving_completed_total').value)}")
 
 
 def main():
@@ -25,6 +59,7 @@ def main():
                      d_ff=256, rope_theta=10000.0)
     params = init_llama_params(spec, seed=0)
     model_bytes = sum(a.size * a.dtype.itemsize for a in params.values())
+    metrics = MetricsRegistry()
 
     with tempfile.TemporaryDirectory() as disk:
         print(f"model: {model_bytes/1e6:.1f} MB; cap: "
@@ -32,7 +67,8 @@ def main():
         eng = RelationalEngine(spec, params, chunk_size=64,
                                residency="paged",
                                budget_bytes=model_bytes // 4,
-                               disk_dir=disk, max_len=96)
+                               disk_dir=disk, max_len=96,
+                               metrics=metrics)
 
         # --- single-request latency under the cap -------------------------
         rng = np.random.default_rng(0)
@@ -61,7 +97,7 @@ def main():
         # decode_fn IS the batched decoder — the scheduler owns the
         # kv.seq_lens bookkeeping, so no wrapper is needed
         sched = ContinuousBatcher(kv, prefill, dec.decode, max_batch=3,
-                                  release_fn=dec.free)
+                                  release_fn=dec.free, metrics=metrics)
         t0 = time.perf_counter()
         for r in range(5):
             sched.submit(Request(rid=r,
@@ -78,6 +114,16 @@ def main():
         for req in done:
             print(f"  req{req.rid}: prompt={len(req.prompt)}t "
                   f"gen={req.generated} ttft={req.first_token_s:.2f}s")
+
+        print_metrics_summary(metrics)
+        out = os.environ.get("OBS_ARTIFACT_DIR")
+        if out:
+            os.makedirs(out, exist_ok=True)
+            metrics.save_json(os.path.join(out, "serve_paged_metrics.json"))
+            with open(os.path.join(out, "serve_paged_metrics.prom"),
+                      "w") as f:
+                f.write(metrics.render_prometheus())
+            print(f"metrics dumped to {out}/")
 
 
 if __name__ == "__main__":

@@ -219,6 +219,54 @@ def rechunk_chunked_table(table: DenseTable, chunk_size: int,
 
 
 # ---------------------------------------------------------------------------
+# Plan-op classification (observability: statement↔op provenance)
+# ---------------------------------------------------------------------------
+
+# relational node type → op class.  The same vocabulary names the DB-side
+# operators (repro.obs.profile.OPERATOR_CLASSES) so JAX-side step spans
+# and DuckDB per-operator profiles attribute to comparable classes.
+OP_CLASSES = {
+    Scan: "scan",
+    Project: "project",
+    Join: "join",
+    GroupAgg: "aggregate",
+    Filter: "filter",
+    Unnest: "unnest",
+    Collect: "collect",
+}
+
+
+def iter_plan_nodes(root: RelNode):
+    """Every node of a relational plan, root first."""
+    stack = [root]
+    while stack:
+        node = stack.pop()
+        yield node
+        if isinstance(node, (Project, Filter, Unnest, Collect, GroupAgg)):
+            stack.append(node.input)
+        elif isinstance(node, Join):
+            stack.append(node.left)
+            stack.append(node.right)
+
+
+def classify_plan_node(node: RelNode) -> str:
+    return OP_CLASSES.get(type(node), "other")
+
+
+def plan_provenance(root: RelNode) -> Tuple[Tuple[str, ...],
+                                            Tuple[str, ...]]:
+    """(op classes, scanned base tables) of a plan — the provenance tag
+    the SQL generator stamps on each emitted statement so DB profiles
+    can be attributed back to relational ops (repro.obs)."""
+    ops, tables = set(), set()
+    for node in iter_plan_nodes(root):
+        ops.add(classify_plan_node(node))
+        if isinstance(node, Scan):
+            tables.add(node.table)
+    return tuple(sorted(ops)), tuple(sorted(tables))
+
+
+# ---------------------------------------------------------------------------
 # Expression evaluation
 # ---------------------------------------------------------------------------
 
@@ -466,7 +514,8 @@ def _join_index(e: Expr, left: DenseTable) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 
-def _try_fused_join_agg(node: GroupAgg, env, memo, scalars=None):
+def _try_fused_join_agg(node: GroupAgg, env, memo, scalars=None,
+                        tracer=None):
     """Recognise γ_{G, SUM(f(l_col, r_col))}(L ⋈ R) and run it as einsum.
 
     Conditions: single SUM aggregate whose expression is ``dot(a, b)``,
@@ -496,8 +545,8 @@ def _try_fused_join_agg(node: GroupAgg, env, memo, scalars=None):
         return None
 
     join = node.input
-    left = execute(join.left, env, memo, scalars)
-    right = execute(join.right, env, memo, scalars)
+    left = execute(join.left, env, memo, scalars, tracer)
+    right = execute(join.right, env, memo, scalars, tracer)
     ls, rs = left.schema(), right.schema()
     if a.name in left.cols and b.name in right.cols:
         lcol, rcol = a.name, b.name
@@ -574,12 +623,20 @@ def _try_fused_join_agg(node: GroupAgg, env, memo, scalars=None):
 
 def execute(node: RelNode, env: Dict[str, DenseTable],
             memo: Optional[Dict[int, DenseTable]] = None,
-            scalars: Optional[Dict] = None) -> DenseTable:
+            scalars: Optional[Dict] = None,
+            tracer=None) -> DenseTable:
     """Execute a relational plan against ``env`` (table name → DenseTable).
 
     Scan nodes are never memoised (cache tables mutate between pipeline
     steps); every other node is memoised by identity so shared subplans
     across steps evaluate once.
+
+    ``tracer`` (an ``Optional[repro.obs.trace.TraceRecorder]``) records
+    one ``cat="op"`` span per executed plan node.  JAX dispatch is
+    asynchronous, so per-op spans measure dispatch/build time — step-level
+    wall time comes from ``run_pipeline``'s ``cat="step"`` spans, which
+    block on the step's outputs.  With ``tracer=None`` (the default) the
+    only overhead is this ``None`` check — do not trace under ``jit``.
     """
     if memo is None:
         memo = {}
@@ -601,15 +658,21 @@ def execute(node: RelNode, env: Dict[str, DenseTable],
         return t
     if id(node) in memo:
         return memo[id(node)]
-    out = _execute(node, env, memo, scalars)
+    if tracer is None:
+        out = _execute(node, env, memo, scalars)
+    else:
+        with tracer.span(classify_plan_node(node), cat="op",
+                         node=type(node).__name__):
+            out = _execute(node, env, memo, scalars, tracer)
     memo[id(node)] = out
     return out
 
 
-def _execute(node: RelNode, env, memo, scalars=None) -> DenseTable:
+def _execute(node: RelNode, env, memo, scalars=None,
+             tracer=None) -> DenseTable:
 
     if isinstance(node, Project):
-        t = execute(node.input, env, memo, scalars)
+        t = execute(node.input, env, memo, scalars, tracer)
         schema = resolve(node)
         cols, col_types = {}, {}
         for (cname, _, e), (_, ctype) in zip(node.exprs, schema.cols):
@@ -623,8 +686,8 @@ def _execute(node: RelNode, env, memo, scalars=None) -> DenseTable:
         return DenseTable(keys=schema.keys, cols=cols, col_types=col_types)
 
     if isinstance(node, Join):
-        left = execute(node.left, env, memo, scalars)
-        right = execute(node.right, env, memo, scalars)
+        left = execute(node.left, env, memo, scalars, tracer)
+        right = execute(node.right, env, memo, scalars, tracer)
         schema = resolve(node)
         out_cols, out_types = {}, {}
         surv = [(k, s) for k, s in right.keys if k not in dict(node.on)]
@@ -648,10 +711,10 @@ def _execute(node: RelNode, env, memo, scalars=None) -> DenseTable:
         return DenseTable(keys=schema.keys, cols=out_cols, col_types=out_types)
 
     if isinstance(node, GroupAgg):
-        fused = _try_fused_join_agg(node, env, memo, scalars)
+        fused = _try_fused_join_agg(node, env, memo, scalars, tracer)
         if fused is not None:
             return fused
-        t = execute(node.input, env, memo, scalars)
+        t = execute(node.input, env, memo, scalars, tracer)
         schema = resolve(node)
         consumed = [i for i, (k, _) in enumerate(t.keys)
                     if k not in node.group_keys]
@@ -667,7 +730,7 @@ def _execute(node: RelNode, env, memo, scalars=None) -> DenseTable:
         return DenseTable(keys=schema.keys, cols=cols, col_types=col_types)
 
     if isinstance(node, Filter):
-        t = execute(node.input, env, memo, scalars)
+        t = execute(node.input, env, memo, scalars, tracer)
         op, lhs, rhs = node.predicate
         l = _eval_key_expr(lhs, t.key_names, t.key_sizes, scalars)
         r = _eval_key_expr(rhs, t.key_names, t.key_sizes, scalars)
@@ -685,7 +748,7 @@ def _execute(node: RelNode, env, memo, scalars=None) -> DenseTable:
         return DenseTable(keys=t.keys, cols=cols, col_types=col_types)
 
     if isinstance(node, Unnest):
-        t = execute(node.input, env, memo, scalars)
+        t = execute(node.input, env, memo, scalars, tracer)
         schema = resolve(node)
         varr = t.cols[node.vec_col]
         cols = {node.elem_col: varr}
@@ -699,7 +762,7 @@ def _execute(node: RelNode, env, memo, scalars=None) -> DenseTable:
         return DenseTable(keys=schema.keys, cols=cols, col_types=col_types)
 
     if isinstance(node, Collect):
-        t = execute(node.input, env, memo, scalars)
+        t = execute(node.input, env, memo, scalars, tracer)
         schema = resolve(node)
         ax = t.key_names.index(node.fold_key)
         arr = jnp.broadcast_to(t.cols[node.scalar_col], t.key_sizes)

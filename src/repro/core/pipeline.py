@@ -12,7 +12,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.executor import DenseTable, execute
+from repro.core.executor import DenseTable, execute, plan_provenance
 from repro.core.opmap import RelPipeline
 
 
@@ -21,6 +21,7 @@ def run_pipeline(
     env: Dict[str, DenseTable],
     scalars: Optional[Dict[str, jnp.ndarray]] = None,
     layout_plan=None,
+    tracer=None,
 ) -> Tuple[Dict[str, DenseTable], Dict[str, DenseTable]]:
     """Execute all steps. Returns (outputs, updated_env).
 
@@ -34,6 +35,13 @@ def run_pipeline(
     (``chunk_mode="auto"``) are replaced by their re-chunked twins so the
     Scans see the declared physical schema; pass ``layout_plan`` to
     override the plan recorded on the pipeline.
+
+    ``tracer`` (an ``Optional[repro.obs.trace.TraceRecorder]``) records one
+    ``cat="step"`` span per pipeline step, blocking on the step's result so
+    the span measures real compute (JAX dispatch is asynchronous), plus the
+    executor's per-node ``cat="op"`` sub-spans.  With ``tracer=None`` (the
+    default) the only cost is one ``None`` check per step — tracing must
+    not be enabled under ``jit`` (the block would fail on traced values).
     """
     scalars = scalars or {}
     # .copy() (not dict(...)) so lazy paging environments keep their
@@ -44,11 +52,12 @@ def run_pipeline(
         env = layout_plan.ensure_env(env)
     memo: Dict[int, DenseTable] = {}
 
-    for step in pipeline.steps:
+    def _run_step(step) -> None:
         if step.kind == "bind":
-            env[step.name] = execute(step.rel.plan, env, memo, scalars)
+            env[step.name] = execute(step.rel.plan, env, memo, scalars,
+                                     tracer)
         elif step.kind == "append":
-            new = execute(step.rel.plan, env, memo, scalars)
+            new = execute(step.rel.plan, env, memo, scalars, tracer)
             cache = env[step.name]
             offset = scalars.get(step.offset_name, 0)
             ax = cache.key_names.index(step.append_key)
@@ -78,7 +87,7 @@ def run_pipeline(
                     cols[cname] = jnp.moveaxis(a2, (0, 1), (sax, ax))
                 env[step.name] = DenseTable(keys=cache.keys, cols=cols,
                                             col_types=cache.col_types)
-                continue
+                return
             # the cache table's physical key order is planner-chosen
             # (row_chunk / head_major / pos_major); align the new rows'
             # axes by key name and insert at the append key's axis
@@ -97,6 +106,17 @@ def run_pipeline(
                                         col_types=cache.col_types)
         else:
             raise ValueError(step.kind)
+
+    for step in pipeline.steps:
+        if tracer is None:
+            _run_step(step)
+        else:
+            ops, tables = plan_provenance(step.rel.plan)
+            with tracer.span(step.name, cat="step", kind=step.kind,
+                             ops=list(ops), tables=list(tables)):
+                _run_step(step)
+                # block so the span measures compute, not dispatch
+                jax.block_until_ready(list(env[step.name].cols.values()))
 
     outputs = {o: env[o] for o in pipeline.outputs}
     return outputs, env

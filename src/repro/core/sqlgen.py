@@ -14,14 +14,16 @@ ORDINALITY unnest) for portability.
 
 from __future__ import annotations
 
+import dataclasses
 import re
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.relational import (
     BinOp, Call, Col, Collect, Const, Expr, Filter, GroupAgg, Join, Key,
     KeyParam, Param, Project, RelNode, RelSchema, Scan, Unnest, expr_type,
     is_vec, resolve, vec_width, SCALAR,
 )
+from repro.core.executor import plan_provenance
 from repro.core.opmap import RelPipeline
 
 UDF_PRELUDE_DUCKDB = """\
@@ -46,6 +48,28 @@ CREATE OR REPLACE MACRO sumForEach(arrs) AS
 def _sn(name: str) -> str:
     """Sanitise a tensor name into a SQL identifier."""
     return re.sub(r"[^A-Za-z0-9_]", "_", name)
+
+
+@dataclasses.dataclass(frozen=True)
+class StatementProvenance:
+    """What a generated SQL segment *is* in pipeline terms.
+
+    The statement↔op provenance tag the observability layer
+    (:mod:`repro.obs`) keys DB profiles by: each emitted script segment
+    records the pipeline step it implements, the relational op classes
+    in that step's plan, the base tables it scans and — for precision-
+    planned pipelines — which of those are quantised (their projections
+    are dequantising projections).
+    """
+
+    kind: str                            # prelude|comment|ddl|conversion|
+    #                                      bind|append
+    step: Optional[str] = None           # pipeline step name (bind/append)
+    target: Optional[str] = None         # created view/table, INSERT target
+    tables: Tuple[str, ...] = ()         # base tables the plan scans
+    ops: Tuple[str, ...] = ()            # relational op classes in the plan
+    quantised: Tuple[str, ...] = ()      # scanned tables storing quantised
+    #                                      payloads (dequant-projection)
 
 
 class SQLGenerator:
@@ -264,7 +288,8 @@ class SQLGenerator:
         return f"CREATE OR REPLACE {create} {_sn(name)} AS\n{body};"
 
     def generate(self, include_ddl: bool = True,
-                 include_conversion: bool = False) -> str:
+                 include_conversion: bool = False,
+                 step_create: str = "VIEW") -> str:
         """Emit the full SQL script for the pipeline.
 
         The ROW2COL conversion (``CREATE OR REPLACE TABLE W__col AS
@@ -275,11 +300,39 @@ class SQLGenerator:
         ``LayoutPlan.conversion_sql`` / ``planner.union_conversion_sql``
         after your data-load step (see ``examples/sql_dump.py``).
         """
-        out: List[str] = []
+        return "\n\n".join(
+            sql for sql, _ in self.generate_with_provenance(
+                include_ddl, include_conversion=include_conversion,
+                step_create=step_create))
+
+    def generate_with_provenance(
+            self, include_ddl: bool = True,
+            include_conversion: bool = False,
+            step_create: str = "VIEW",
+    ) -> List[Tuple[str, StatementProvenance]]:
+        """Emit the script as (segment, provenance-tag) pairs.
+
+        Same segments, same order, same text as :meth:`generate` — the
+        script is the ``"\\n\\n"``-join of the first elements.  Each
+        segment carries a :class:`StatementProvenance` tag mapping it
+        back to the pipeline step / relational ops that generated it, so
+        per-operator DB profiles can be attributed (:mod:`repro.obs`).
+
+        ``step_create="TABLE"`` materialises every bind step as a table
+        instead of a view: views are lazy (their operators execute — and
+        profile — wherever they are *read*), so per-step tracing runs the
+        pipeline step by step the way the JAX executor does.
+        """
+        out: List[Tuple[str, StatementProvenance]] = []
+
+        def emit(sql: str, **prov) -> None:
+            out.append((sql, StatementProvenance(**prov)))
+
         layouts = getattr(self.p, "layouts", {}) or {}
         chunks = getattr(self.p, "table_chunks", {}) or {}
         precisions = getattr(self.p, "table_precisions", {}) or {}
         plan = getattr(self.p, "layout_plan", None)
+        qset = set(precisions)
 
         def annotate(name: str, ddl: str) -> str:
             # planner annotations: physical layout and (when the chunk
@@ -301,44 +354,65 @@ class SQLGenerator:
                 return quant_ddl(name, schema, precisions[name])
             return self._ddl(name, schema)
 
+        def step_prov(step, root) -> Dict:
+            ops, tables = plan_provenance(root)
+            quant = tuple(t for t in tables if t in qset)
+            if step.kind == "append":
+                ops = tuple(sorted(ops + ("cache_append",)))
+            return dict(step=step.name, tables=tables, ops=ops,
+                        quantised=quant)
+
         if include_ddl:
             if self.dialect == "duckdb":
-                out.append(UDF_PRELUDE_DUCKDB)
+                emit(UDF_PRELUDE_DUCKDB, kind="prelude")
                 if precisions:
                     from repro.quant.sql import UDF_PRELUDE_QUANT_DUCKDB
-                    out.append(UDF_PRELUDE_QUANT_DUCKDB)
-            out.append("-- weight table DDL (paper §3.1 data conversion)")
+                    emit(UDF_PRELUDE_QUANT_DUCKDB, kind="prelude")
+            emit("-- weight table DDL (paper §3.1 data conversion)",
+                 kind="comment")
             for name, schema in self.p.weight_schemas.items():
-                out.append(annotate(name, table_ddl(name, schema)))
+                emit(annotate(name, table_ddl(name, schema)),
+                     kind="ddl", target=name,
+                     quantised=(name,) if name in qset else ())
             if plan is not None and plan.col_decisions:
                 # the rewritten pipeline no longer scans the row-layout
                 # sources, but the conversion reads them — keep their DDL
-                out.append("-- ROW2COL source tables (row_chunk; load "
-                           "weights here, then run the conversion)")
+                emit("-- ROW2COL source tables (row_chunk; load "
+                     "weights here, then run the conversion)",
+                     kind="comment")
                 for d in plan.col_decisions:
-                    out.append(self._ddl(d.table, d.row_schema))
+                    emit(self._ddl(d.table, d.row_schema),
+                         kind="ddl", target=d.table)
             if plan is not None and plan.precision_decisions:
                 # likewise the f32 sources of quantised tables: the
                 # quantisation conversion reads them (a column copy's
                 # f32 twin, or the row table itself)
-                out.append("-- QUANTISE source tables (f32; load/convert "
-                           "here, then run the quantisation)")
+                emit("-- QUANTISE source tables (f32; load/convert "
+                     "here, then run the quantisation)", kind="comment")
                 for pd in plan.precision_decisions:
-                    out.append(self._ddl(pd.table, pd.schema))
-            out.append("-- input / cache table DDL")
+                    emit(self._ddl(pd.table, pd.schema),
+                         kind="ddl", target=pd.table)
+            emit("-- input / cache table DDL", kind="comment")
             for name, schema in self.p.input_schemas.items():
                 # planner-chosen cache layout: the key-column order IS
                 # the physical clustering (row_chunk / head_major / …)
-                out.append(annotate(name, self._ddl(name, schema)))
+                emit(annotate(name, self._ddl(name, schema)),
+                     kind="ddl", target=name)
         if include_conversion and plan is not None and (
                 plan.col_decisions or plan.precision_decisions):
-            out.append("-- ROW2COL data conversion (planner layout "
-                       "choices; run after loading the row tables)")
-            out.append(plan.conversion_sql(self.dialect))
+            emit("-- ROW2COL data conversion (planner layout "
+                 "choices; run after loading the row tables)",
+                 kind="comment")
+            emit(plan.conversion_sql(self.dialect), kind="conversion",
+                 tables=tuple(sorted(
+                     {d.table for d in plan.col_decisions}
+                     | {pd.table for pd in plan.precision_decisions})))
         for step in self.p.steps:
             root = step.rel.plan
             if step.kind == "bind":
-                out.append(self.render_step_sql(step.name, root))
+                emit(self.render_step_sql(step.name, root,
+                                          create=step_create),
+                     kind="bind", target=step.name, **step_prov(step, root))
                 self.named_roots[id(root)] = _sn(step.name)
             else:  # append — KV-cache INSERT (§3.4)
                 ctes: List[Tuple[str, str]] = []
@@ -363,19 +437,22 @@ class SQLGenerator:
                            f") AS S")
                     collist = ", ".join(
                         _sn(c) for c in cache_s.key_names + sel_s.col_names)
-                    out.append(
-                        f"-- batched KV-cache append (per-seq rows at "
-                        f":{step.offset_name}[seq])\n"
-                        f"INSERT INTO {_sn(step.name)} ({collist})\n{sel};")
+                    emit(f"-- batched KV-cache append (per-seq rows at "
+                         f":{step.offset_name}[seq])\n"
+                         f"INSERT INTO {_sn(step.name)} ({collist})\n{sel};",
+                         kind="append", target=step.name,
+                         **step_prov(step, root))
                     continue
                 # name the target columns: the cache table's physical key
                 # order is planner-chosen and need not match the SELECT's
                 collist = ", ".join(
                     _sn(c) for c in sel_s.key_names + sel_s.col_names)
-                out.append(
-                    f"-- KV-cache append (new rows at :{step.offset_name})\n"
-                    f"INSERT INTO {_sn(step.name)} ({collist})\n{sel};")
-        return "\n\n".join(out)
+                emit(f"-- KV-cache append (new rows at "
+                     f":{step.offset_name})\n"
+                     f"INSERT INTO {_sn(step.name)} ({collist})\n{sel};",
+                     kind="append", target=step.name,
+                     **step_prov(step, root))
+        return out
 
     @staticmethod
     def _ddl(name: str, schema: RelSchema) -> str:
@@ -390,6 +467,20 @@ class SQLGenerator:
 
 def generate_sql(pipeline: RelPipeline, dialect: str = "duckdb",
                  include_ddl: bool = True,
-                 include_conversion: bool = False) -> str:
+                 include_conversion: bool = False,
+                 step_create: str = "VIEW") -> str:
     return SQLGenerator(pipeline, dialect=dialect).generate(
-        include_ddl, include_conversion=include_conversion)
+        include_ddl, include_conversion=include_conversion,
+        step_create=step_create)
+
+
+def generate_sql_with_provenance(
+        pipeline: RelPipeline, dialect: str = "duckdb",
+        include_ddl: bool = True, include_conversion: bool = False,
+        step_create: str = "VIEW") -> List[Tuple[str, StatementProvenance]]:
+    """Like :func:`generate_sql` but returns ``(sql, provenance)`` pairs —
+    the observability layer's entry point for per-statement attribution
+    (:mod:`repro.obs.dbtrace`)."""
+    return SQLGenerator(pipeline, dialect=dialect).generate_with_provenance(
+        include_ddl, include_conversion=include_conversion,
+        step_create=step_create)

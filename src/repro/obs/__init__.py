@@ -1,0 +1,42 @@
+"""Observability for the relational inference engine (ISSUE 6).
+
+Three layers, each usable on its own:
+
+* :mod:`repro.obs.metrics` — a dependency-free in-process metrics
+  registry (counters / gauges / histograms) with Prometheus-style text
+  exposition and a JSON dump.  The serving layer
+  (``RelationalEngine`` / ``BatchedDecoder`` / ``ContinuousBatcher`` /
+  ``WeightPager``) takes an optional registry and records TTFT,
+  per-tick decode latency, batch occupancy, plan-cache and pager
+  hit/miss, resident quantised bytes and preemptions.
+* :mod:`repro.obs.trace` — a span recorder with Chrome-trace
+  (``chrome://tracing`` / Perfetto) JSON export.  ``run_pipeline``
+  takes an optional recorder and emits one span per pipeline step;
+  :mod:`repro.obs.dbtrace` runs the *SQL* form of a pipeline under
+  DuckDB ``EXPLAIN ANALYSE`` (JSON profiling) or SQLite timing and
+  attributes per-operator wall time back to the pipeline steps and
+  relational op classes that generated each statement
+  (:mod:`repro.obs.profile` is the engine-free profile parser).
+* :mod:`repro.obs.drift` — predicted-vs-observed cost drift per plan:
+  per-step planner cost features paired with observed step timings,
+  reported as a :class:`~repro.obs.drift.DriftReport` and fed back
+  into ``planner/calibrate.py`` as a calibration source
+  (``fit_from_step_timings``).
+
+Everything is zero-cost when disabled: call sites guard on
+``tracer is None`` / ``metrics is None`` — no null-object dispatch on
+the decode hot path.
+"""
+
+from repro.obs.metrics import (Counter, Gauge, Histogram,  # noqa: F401
+                               MetricsRegistry)
+from repro.obs.trace import SpanEvent, TraceRecorder  # noqa: F401
+from repro.obs.log import log_event, set_event_registry  # noqa: F401
+from repro.obs.profile import (AttributedOp, OpNode,  # noqa: F401
+                               attribute_statement, classify_operator,
+                               coverage, flatten_profile, parse_profile,
+                               step_times_us)
+from repro.obs.drift import DriftReport, StepDrift, drift_report  # noqa: F401
+from repro.obs.dbtrace import (StatementTrace, TickTrace,  # noqa: F401
+                               run_statements, run_timed, run_traced,
+                               split_statements, substitute_params)

@@ -1,0 +1,38 @@
+"""Structured event logging for planner/serving diagnostics.
+
+``log_event("calibration_fallback", weight="dequant_weight", ...)``
+emits one structured record through the stdlib ``repro.obs`` logger —
+a human-readable ``event key=value`` line whose fields also ride on the
+record (``record.obs_fields``) for structured handlers — and, when an
+event registry is installed, bumps an ``obs_events_total`` counter
+labelled by event name so silent degradations (e.g. a calibration fit
+falling back to analytic defaults) are visible in the metrics dump,
+not just in a log nobody tails.
+"""
+
+from __future__ import annotations
+
+import logging
+from typing import Optional
+
+from repro.obs.metrics import MetricsRegistry
+
+logger = logging.getLogger("repro.obs")
+
+_event_registry: Optional[MetricsRegistry] = None
+
+
+def set_event_registry(registry: Optional[MetricsRegistry]) -> None:
+    """Install (or clear, with None) the registry that counts events."""
+    global _event_registry
+    _event_registry = registry
+
+
+def log_event(event: str, level: int = logging.WARNING, **fields) -> None:
+    kv = " ".join(f"{k}={v}" for k, v in sorted(fields.items()))
+    logger.log(level, "%s %s", event, kv,
+               extra={"obs_fields": {"event": event, **fields}})
+    if _event_registry is not None:
+        _event_registry.counter(
+            "obs_events_total", "structured obs events by name",
+            event=event).inc()

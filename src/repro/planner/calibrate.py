@@ -92,13 +92,20 @@ def _spec_from_payload(sp: Dict) -> LlamaSpec:
         d_ff=sp.get("d_ff", sp["d_model"] * 2), rope_theta=10000.0)
 
 
-def pipeline_features(spec: LlamaSpec, kind: str, T: int, cs: int,
-                      mode: str = "off",
-                      cache_len: Optional[int] = None,
-                      params: Optional[CostParams] = None
-                      ) -> Tuple[int, int]:
-    """(rows, groups) the matmul cost model predicts one invocation of the
-    ``kind`` pipeline touches at base chunk size ``cs``.
+def step_features(spec: LlamaSpec, kind: str, T: int, cs: int,
+                  mode: str = "off",
+                  cache_len: Optional[int] = None,
+                  params: Optional[CostParams] = None
+                  ) -> Dict[str, Tuple[int, int]]:
+    """Per-step ``{step_name: (rows, groups)}`` the matmul cost model
+    predicts for one invocation of the ``kind`` pipeline at base chunk
+    size ``cs`` — only the matched matmul sites appear (the priced steps).
+
+    This is the join key for observed per-step timings: the step names
+    match both ``run_pipeline``'s ``cat="step"`` spans and the
+    ``StatementProvenance.step`` tags on the generated SQL, so a
+    :func:`repro.obs.drift.drift_report` (or :func:`fit_from_step_timings`)
+    can pair each prediction with where the time actually went.
 
     ``mode`` selects which layout each matched site is priced under:
     ``"off"`` (all ROW_CHUNK), ``"col"`` (column wherever legal — the
@@ -116,7 +123,7 @@ def pipeline_features(spec: LlamaSpec, kind: str, T: int, cs: int,
     infer_shapes(g)
     pipe = op_map(g, chunk_size=cs)
     p = params or CostParams()
-    rows = groups = 0
+    out: Dict[str, Tuple[int, int]] = {}
     for step in pipe.steps:
         if step.kind != "bind":
             continue
@@ -141,9 +148,25 @@ def pipeline_features(spec: LlamaSpec, kind: str, T: int, cs: int,
             c = col_c
         else:  # auto: the cheaper side under the (calibrated) weights
             c = col_c if col_c.total(p) < row_c.total(p) else row_c
-        rows += c.scan_rows + c.join_rows + c.aux_rows + c.rechunk_rows
-        groups += c.agg_groups + c.rechunk_groups
-    return rows, groups
+        out[step.name] = (
+            c.scan_rows + c.join_rows + c.aux_rows + c.rechunk_rows,
+            c.agg_groups + c.rechunk_groups)
+    return out
+
+
+def pipeline_features(spec: LlamaSpec, kind: str, T: int, cs: int,
+                      mode: str = "off",
+                      cache_len: Optional[int] = None,
+                      params: Optional[CostParams] = None
+                      ) -> Tuple[int, int]:
+    """(rows, groups) the matmul cost model predicts one invocation of the
+    ``kind`` pipeline touches at base chunk size ``cs`` — the sum of
+    :func:`step_features` over the pipeline's matched matmul sites (see
+    there for ``mode`` semantics and the chunk-clamp ``ValueError``)."""
+    feats = step_features(spec, kind, T, cs, mode, cache_len=cache_len,
+                          params=params)
+    return (sum(r for r, _ in feats.values()),
+            sum(g for _, g in feats.values()))
 
 
 def cache_features(spec: LlamaSpec, cs: int, cache_len: int,
@@ -171,6 +194,15 @@ def _lstsq(A: np.ndarray, b: np.ndarray) -> Tuple[np.ndarray, float]:
     return x, resid
 
 
+def _log_fallback(reason: str, **fields) -> None:
+    """Structured record of a calibration fallback through the obs event
+    logger (lazy import — the planner must not hard-depend on repro.obs):
+    a fit that silently keeps its analytic defaults is the failure mode
+    the drift report exists to catch, so make the keep visible."""
+    from repro.obs.log import log_event
+    log_event("calibration_fallback", reason=reason, **fields)
+
+
 def fit_matmul_weights(points: Sequence[Tuple[float, float, float]]
                        ) -> Tuple[float, float, float, float]:
     """Fit ``time ≈ scale·rows + scale·group_weight·groups + intercept``.
@@ -185,6 +217,9 @@ def fit_matmul_weights(points: Sequence[Tuple[float, float, float]]
     x, resid = _lstsq(A, b)
     s_r, s_g, c0 = x
     if s_r <= 0:  # degenerate measurement set: keep the analytic default
+        _log_fallback("non_positive_row_scale", fit="matmul",
+                      row_scale=float(s_r), n_points=len(points),
+                      kept="group_weight")
         return CostParams().group_weight, max(s_r, 1e-9), c0, resid
     return max(s_g / s_r, 0.0), s_r, c0, resid
 
@@ -202,6 +237,9 @@ def fit_cache_weights(points: Sequence[Tuple[float, float, float]]
     x, resid = _lstsq(A, b)
     s_r, s_k, c0 = x
     if s_r <= 0:
+        _log_fallback("non_positive_row_scale", fit="cache",
+                      row_scale=float(s_r), n_points=len(points),
+                      kept="seek_weight")
         return CostParams().seek_weight, max(s_r, 1e-9), c0, resid
     return max(s_k / s_r, 0.0), s_r, c0, resid
 
@@ -249,8 +287,15 @@ def fit_quant_weights(points: Sequence[Tuple[float, float, float, float]]
     s_r, s_d, s_b, c0 = x
     base = CostParams()
     if s_r <= 0:
+        _log_fallback("non_positive_row_scale", fit="quant",
+                      row_scale=float(s_r), n_points=len(points),
+                      kept="dequant_weight,byte_weight")
         return base.dequant_weight, base.byte_weight, max(s_r, 1e-9), \
             c0, resid
+    if s_d <= 0:
+        _log_fallback("non_positive_dequant_slope", fit="quant",
+                      dequant_slope=float(s_d), n_points=len(points),
+                      kept="dequant_weight")
     dq = base.dequant_weight if s_d <= 0 else s_d / s_r
     return dq, max(s_b / s_r, 0.0), s_r, c0, resid
 
@@ -318,6 +363,7 @@ def _resolve_bench(path: Optional[str]) -> Optional[str]:
             return cand
     warnings.warn(f"calibration data {path!r} not found; the affected "
                   "cost weights keep their analytic defaults")
+    _log_fallback("bench_file_missing", path=path)
     return None
 
 
@@ -350,6 +396,8 @@ def fit_cost_params(row2col_path: Optional[str] = ROW2COL_BENCH,
                 f"{row2col_path!r} holds only {len(points)} measurement(s) "
                 "(need 4 for a determined fit); group_weight keeps its "
                 "analytic default")
+            _log_fallback("too_few_points", fit="matmul",
+                          path=row2col_path, n_points=len(points), need=4)
     sw = base.seek_weight
     attn_path = _resolve_bench(attn_path)
     if attn_path:
@@ -363,6 +411,8 @@ def fit_cost_params(row2col_path: Optional[str] = ROW2COL_BENCH,
                 f"{attn_path!r} holds only {len(cpoints)} measurement(s) "
                 "(need 4 for a determined fit); seek_weight keeps its "
                 "analytic default")
+            _log_fallback("too_few_points", fit="cache",
+                          path=attn_path, n_points=len(cpoints), need=4)
     dq, bw = base.dequant_weight, base.byte_weight
     quant_path = _resolve_bench(quant_path)
     if quant_path:
@@ -378,11 +428,51 @@ def fit_cost_params(row2col_path: Optional[str] = ROW2COL_BENCH,
                 f"{quant_path!r} holds only {len(qpoints)} measurement(s) "
                 "(need 5 for a determined fit); dequant/byte weights keep "
                 "their analytic defaults")
+            _log_fallback("too_few_points", fit="quant",
+                          path=quant_path, n_points=len(qpoints), need=5)
     params = dataclasses.replace(base, row_weight=1.0, group_weight=gw,
                                  seek_weight=sw, dequant_weight=dq,
                                  byte_weight=bw)
     return CalibrationFit(params=params, scale_us=scale, intercept_us=c0,
                           residual_us=resid, n_points=n)
+
+
+def fit_from_step_timings(features: Dict[str, Tuple[float, float]],
+                          observed_us: Dict[str, float],
+                          base: Optional[CostParams] = None
+                          ) -> CalibrationFit:
+    """Calibrate ``group_weight`` from *observed* per-step timings — the
+    plan-feedback calibration source the benchmarks can't provide.
+
+    ``features``: step → (rows, groups) from :func:`step_features`;
+    ``observed_us``: step → measured µs, from a traced ``run_pipeline``
+    (``TraceRecorder.step_times_us()``) or a DB-profiled tick
+    (``repro.obs.profile.step_times_us``).  Each priced step is one fit
+    point, so a single traced invocation yields an overdetermined system
+    (unlike the benchmark fits, which get one point per whole-pipeline
+    measurement).  Steps present on only one side are ignored; fewer than
+    4 joined points keeps the analytic defaults (with a structured
+    fallback event).  The fitted scale/intercept feed
+    ``repro.obs.drift.drift_report(scale_us=..., intercept_us=...)`` to
+    measure later runs' absolute drift against this calibration.
+    """
+    base = base or CostParams()
+    common = sorted(set(features) & set(observed_us))
+    points = [(features[s][0], features[s][1], observed_us[s])
+              for s in common]
+    if len(points) < 4:
+        warnings.warn(
+            f"only {len(points)} step timing(s) join the cost features "
+            "(need 4 for a determined fit); group_weight keeps its "
+            "analytic default")
+        _log_fallback("too_few_points", fit="step_timings",
+                      n_points=len(points), need=4)
+        return CalibrationFit(params=base, scale_us=1.0, intercept_us=0.0,
+                              residual_us=0.0, n_points=len(points))
+    gw, scale, c0, resid = fit_matmul_weights(points)
+    params = dataclasses.replace(base, row_weight=1.0, group_weight=gw)
+    return CalibrationFit(params=params, scale_us=scale, intercept_us=c0,
+                          residual_us=resid, n_points=len(points))
 
 
 # ---------------------------------------------------------------------------

@@ -156,7 +156,8 @@ class RelationalEngine:
                  chunk_candidates=None, cost_params=None,
                  precision: str = "f32",
                  table_precisions: Optional[Dict[str, str]] = None,
-                 accuracy_budget: Optional[float] = None):
+                 accuracy_budget: Optional[float] = None,
+                 metrics=None, tracer=None):
         # cache_layout defaults to "auto": the locality model is
         # prefill-aware and calibrated against BENCH_attn_layout (ISSUE 5
         # satellite — pass "off" to keep the seed (tp, hk, c) order).
@@ -187,6 +188,12 @@ class RelationalEngine:
         self.spec = spec
         self.cs = int(chunk_size)
         self.max_len = max_len
+        # observability (repro.obs): both optional and zero-cost when None —
+        # every site guards with `is not None`.  The tracer records one
+        # cat="step" span per pipeline step of each prefill/decode tick
+        # (it blocks per step, so leave it None when timing end-to-end).
+        self.metrics = metrics
+        self.tracer = tracer
         self.residency = residency
         self.row2col = row2col
         self.precision = precision
@@ -216,6 +223,10 @@ class RelationalEngine:
         # planner-chosen per-table chunk sizes; shared by reference with
         # the LazyEnv so prefill planning extends it in place
         self._table_chunks: Dict[str, int] = {}
+        # quantised-payload byte accounting for the metrics gauge (dedup
+        # across the decode/prefill/batched plans sharing q-tables)
+        self._quant_bytes = 0
+        self._quant_counted: set = set()
 
         self.decode_pipe = self._compile_pipe(
             lg.build_decode_graph(spec, cache_len=max_len),
@@ -237,7 +248,8 @@ class RelationalEngine:
             self.pager = None
         else:
             self.pager = WeightPager(budget_bytes or 1 << 62,
-                                     disk_dir=disk_dir, policy=pager_policy)
+                                     disk_dir=disk_dir, policy=pager_policy,
+                                     metrics=metrics)
             for k, v in params.items():
                 self.pager.add(k, v)
             self.env_base = LazyEnv(self.pager, self.cs, _chunked_table,
@@ -302,6 +314,15 @@ class RelationalEngine:
         plan = getattr(pipe, "layout_plan", None)
         if plan is None:
             return
+        if self.metrics is not None and plan.precision_decisions:
+            for pd in plan.precision_decisions:
+                if pd.q_table not in self._quant_counted:
+                    self._quant_counted.add(pd.q_table)
+                    self._quant_bytes += pd.q_bytes
+            self.metrics.gauge(
+                "engine_quantised_resident_bytes",
+                "stored bytes of quantised weight tables").set(
+                    self._quant_bytes)
         if self.residency == "in_memory":
             plan.ensure_env(self.env_base)
             return
@@ -330,7 +351,15 @@ class RelationalEngine:
             self._quant_specs[pd.q_table] = (pd.precision, pd.chunk_size,
                                              pd.q_schema)
 
+    def _plan_cache_event(self, cache: str, hit: bool) -> None:
+        if self.metrics is not None:
+            self.metrics.counter(
+                "engine_plan_cache_total",
+                "compiled-plan cache lookups", cache=cache,
+                outcome="hit" if hit else "miss").inc()
+
     def _prefill_pipe(self, T: int):
+        self._plan_cache_event("prefill", T in self._prefill_pipes)
         if T not in self._prefill_pipes:
             # prefill shares the session environment with decode: it draws
             # on the same residency pool and is pinned to the decode plan's
@@ -352,6 +381,7 @@ class RelationalEngine:
         plans, is pinned to their per-table chunk sizes, and is forced to
         the session cache layout (the batched cache pool's key order).
         """
+        self._plan_cache_event("batched_decode", batch in self._batched_pipes)
         if batch not in self._batched_pipes:
             pipe = self._compile_pipe(
                 lg.build_decode_graph(self.spec, cache_len=self.max_len,
@@ -412,7 +442,8 @@ class RelationalEngine:
         if self.pager is not None:
             self.pager.prefetch(["vocabulary"])
         outs, env = run_pipeline(self._prefill_pipe(T), env,
-                                 scalars={"cache_position": 0})
+                                 scalars={"cache_position": 0},
+                                 tracer=self.tracer)
         logits = self._final_logits(outs["logits"])
         return {"env": env, "pos": T, "tok": int(np.argmax(logits)),
                 "logits": logits}
@@ -427,9 +458,16 @@ class RelationalEngine:
         env["token_ids"] = lg.token_table(np.asarray([tok], np.int32))
         env["freq_each_token"] = lg.rope_freq_table(
             np.asarray([pos]), self.spec.head_dim, self.spec.rope_theta)
+        t0 = time.perf_counter() if self.metrics is not None else 0.0
         outs, env = run_pipeline(self.decode_pipe, env,
-                                 scalars={"cache_position": pos})
+                                 scalars={"cache_position": pos},
+                                 tracer=self.tracer)
         tok = self._argmax_token(outs["logits"])
+        if self.metrics is not None:
+            self.metrics.histogram(
+                "engine_decode_step_seconds",
+                "single-sequence decode step latency").observe(
+                    time.perf_counter() - t0)
         sess.update(env=env, pos=pos + 1, tok=tok)
         return tok
 
@@ -513,6 +551,8 @@ class BatchedDecoder:
     def decode(self, seq_ids: List[int], last_tokens: List[int]
                ) -> List[int]:
         eng = self.engine
+        metrics = eng.metrics
+        t0 = time.perf_counter() if metrics is not None else 0.0
         B = len(seq_ids)
         bucket = eng._decode_bucket(B)
         ids = list(seq_ids) + [seq_ids[-1]] * (bucket - B)
@@ -521,17 +561,23 @@ class BatchedDecoder:
         positions = self.pool.positions[np.asarray(ids)]
         env = eng._weights_env()
         view_key = (tuple(ids), self.pool.slot_generations(ids))
-        if self._view_key == view_key:
+        view_hit = self._view_key == view_key
+        if view_hit:
             env.update(self._views)  # unchanged batch: reuse last views
         else:
             env.update(self.pool.gather_views(ids))
+        if metrics is not None:
+            metrics.counter("decoder_view_cache_total",
+                            "batched cache-view gathers",
+                            outcome="hit" if view_hit else "miss").inc()
         env["token_ids"] = lg.token_table(np.asarray(toks, np.int32),
                                           key="seq")
         env["freq_each_token"] = lg.rope_freq_table(
             positions, eng.spec.head_dim, eng.spec.rope_theta, key="seq")
         outs, env = run_pipeline(
             pipe, env,
-            scalars={"seq_positions": jnp.asarray(positions, jnp.int32)})
+            scalars={"seq_positions": jnp.asarray(positions, jnp.int32)},
+            tracer=eng.tracer)
         self.decode_calls += 1
         # the tick's only cache mutation is one appended row per sequence
         # at positions[b] — write back just those rows; the updated views
@@ -543,6 +589,14 @@ class BatchedDecoder:
             self.pool.positions[s] += 1
         logits = np.asarray(outs["logits"].cols["v"]).reshape(
             bucket, -1)[:B, : eng.spec.vocab]
+        if metrics is not None:
+            metrics.histogram(
+                "decoder_tick_seconds",
+                "batched decode tick latency").observe(
+                    time.perf_counter() - t0)
+            metrics.gauge("decoder_bucket_occupancy",
+                          "live sequences / padded bucket size").set(
+                              B / bucket)
         return [int(t) for t in np.argmax(logits, axis=1)]
 
 

@@ -51,10 +51,13 @@ class WeightPager:
     """
 
     def __init__(self, budget_bytes: int, disk_dir: Optional[str] = None,
-                 policy: str = "clock"):
+                 policy: str = "clock", metrics=None):
         self.budget = budget_bytes
         self.policy = policy
         self.disk_dir = disk_dir
+        # optional repro.obs.metrics.MetricsRegistry mirror of ``stats``
+        # (``stats`` stays the benchmarks' source of truth)
+        self.metrics = metrics
         self._cold: Dict[str, np.ndarray] = {}       # memmap or host array
         self._hot: Dict[str, jax.Array] = {}
         self._ref: Dict[str, bool] = {}               # CLOCK reference bits
@@ -124,6 +127,9 @@ class WeightPager:
             self._clock.remove(key)
             self._ref.pop(key, None)
             self.stats.evictions += 1
+            if self.metrics is not None:
+                self.metrics.counter("pager_evictions_total",
+                                     "hot-set evictions").inc()
             if self._hand >= len(self._clock) and self._clock:
                 self._hand = 0
 
@@ -133,14 +139,26 @@ class WeightPager:
             if name in self._hot:
                 self._ref[name] = True
                 self.stats.hits += 1
+                if self.metrics is not None:
+                    self.metrics.counter("pager_hits_total",
+                                         "hot-set hits").inc()
                 return self._hot[name]
             if name in self._prefetched:
                 arr = self._prefetched.pop(name)
                 self.stats.prefetch_hits += 1
+                if self.metrics is not None:
+                    self.metrics.counter("pager_prefetch_hits_total",
+                                         "prefetched-page hits").inc()
             else:
                 self.stats.misses += 1
                 cold = self._cold[name]
                 self.stats.bytes_loaded += self._nbytes(cold)
+                if self.metrics is not None:
+                    self.metrics.counter("pager_misses_total",
+                                         "cold-store page faults").inc()
+                    self.metrics.counter(
+                        "pager_bytes_loaded_total",
+                        "bytes moved cold→device").inc(self._nbytes(cold))
                 arr = jax.device_put(np.asarray(cold))
             nb = self._nbytes(arr)
             self._evict_until(nb)
@@ -149,6 +167,9 @@ class WeightPager:
             self._clock.append(name)
             self._held += nb
             self.stats.peak_bytes = max(self.stats.peak_bytes, self._held)
+            if self.metrics is not None:
+                self.metrics.gauge("pager_held_bytes",
+                                   "device hot-set bytes").set(self._held)
             return arr
 
     def get_many(self, names: Iterable[str]) -> Dict[str, jax.Array]:
@@ -166,6 +187,11 @@ class WeightPager:
                 with self._lock:
                     self._prefetched[n] = arr
                     self.stats.bytes_loaded += self._nbytes(cold)
+                    if self.metrics is not None:
+                        self.metrics.counter(
+                            "pager_bytes_loaded_total",
+                            "bytes moved cold→device").inc(
+                                self._nbytes(cold))
 
         t = threading.Thread(target=run, daemon=True)
         t.start()

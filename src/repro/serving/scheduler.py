@@ -60,7 +60,7 @@ class ContinuousBatcher:
 
     def __init__(self, kv: PagedKVCache, prefill_fn: Callable,
                  decode_fn: Callable, max_batch: int,
-                 release_fn: Optional[Callable] = None):
+                 release_fn: Optional[Callable] = None, metrics=None):
         self.kv = kv
         self.prefill_fn = prefill_fn
         self.decode_fn = decode_fn
@@ -70,6 +70,9 @@ class ContinuousBatcher:
         self.active: Dict[int, Request] = {}   # seq_id -> request
         self.finished: List[Request] = []
         self.stats = SchedulerStats()
+        # optional repro.obs.metrics.MetricsRegistry: TTFT / tick-latency
+        # histograms, occupancy gauge, preemption + completion counters
+        self.metrics = metrics
 
     def _release(self, seq_id: int) -> None:
         self.kv.free_seq(seq_id)
@@ -101,6 +104,10 @@ class ContinuousBatcher:
                 # already delivered — TTFT is measured once, at the first
                 # prefill, and must not be overwritten by the re-admission
                 req.first_token_s = time.perf_counter() - req.arrival_s
+                if self.metrics is not None:
+                    self.metrics.histogram(
+                        "serving_ttft_seconds",
+                        "time to first token").observe(req.first_token_s)
             self.active[seq_id] = req
 
     def _preempt(self, seq_id: int) -> None:
@@ -109,6 +116,9 @@ class ContinuousBatcher:
         req.generated.clear()
         req.preemptions += 1
         self.stats.preemptions += 1
+        if self.metrics is not None:
+            self.metrics.counter("serving_preemptions_total",
+                                 "sequences preempted for pages").inc()
         self.queue.appendleft(req)
 
     def tick(self) -> bool:
@@ -141,8 +151,20 @@ class ContinuousBatcher:
 
         seq_ids = sorted(self.active)
         last = [self.active[s].generated[-1] for s in seq_ids]
+        t0 = time.perf_counter() if self.metrics is not None else 0.0
         next_tokens = self.decode_fn(seq_ids, last)
         self.stats.decode_steps += 1
+        if self.metrics is not None:
+            self.metrics.histogram(
+                "serving_tick_seconds",
+                "decode tick latency").observe(time.perf_counter() - t0)
+            self.metrics.gauge(
+                "serving_active_sequences",
+                "sequences in the running batch").set(len(seq_ids))
+            self.metrics.gauge(
+                "serving_batch_occupancy",
+                "active sequences / max_batch").set(
+                    len(seq_ids) / self.max_batch)
         # one decode step appended one token per active sequence: the
         # scheduler owns this bookkeeping so decode_fn implementations
         # don't each have to repeat (or forget) it
@@ -156,6 +178,9 @@ class ContinuousBatcher:
                 req.done_s = time.perf_counter() - req.arrival_s
                 self.finished.append(req)
                 self.stats.completed += 1
+                if self.metrics is not None:
+                    self.metrics.counter("serving_completed_total",
+                                         "requests finished").inc()
                 self._release(seq_id)
                 del self.active[seq_id]
         return bool(self.active or self.queue)
