@@ -69,6 +69,74 @@ def dequant_cost_elements(engine: RelationalEngine) -> float:
                      for d in plan.precision_decisions))
 
 
+def _traced_class_times(engine: RelationalEngine, params) -> dict:
+    """Per-operator-class times (µs) of one decode tick executed against
+    a *real* DuckDB under the JSON profiler, attributed through
+    ``StatementProvenance`` — the measurement that rescues the
+    dispatch-dominated ``dequant_weight`` fit: ``calibrate.
+    fit_quant_weights`` reads ``class_times_us["decode"]
+    ["dequant_project"]`` from the payload when present.  Returns ``{}``
+    when duckdb is not importable (the payload then fits exactly as
+    before)."""
+    try:
+        import duckdb
+    except ImportError:
+        return {}
+    import re
+
+    from repro.core.llama_graph import rope_freq_table, token_table
+    from repro.core.sqlgen import generate_sql_with_provenance
+    from repro.obs import run_statements, run_traced
+
+    def listify(sql):
+        return re.sub(r"(FLOAT|TINYINT|UTINYINT)\[\d+\]", r"\1[]", sql)
+
+    def insert(con, name, key_sizes, payload):
+        arr = np.asarray(payload, np.float32)
+        rows = []
+        for idx in np.ndindex(*key_sizes):
+            v = arr[idx]
+            rows.append(tuple(int(i) for i in idx)
+                        + ((v.tolist(),) if v.ndim else (float(v),)))
+        ph = ", ".join("?" * len(rows[0]))
+        con.executemany(f"INSERT INTO {name} VALUES ({ph})", rows)
+
+    pipe = engine.decode_pipe
+    cs = CHUNK_SIZE
+    pairs = [(re.sub(r":cache_position\b", "0", listify(sql)), prov)
+             for sql, prov in generate_sql_with_provenance(
+                 pipe, dialect="duckdb", include_conversion=True,
+                 step_create="TABLE")]
+    setup = [p for p in pairs if p[1].kind in ("prelude", "comment", "ddl")]
+    conv = [p for p in pairs if p[1].kind == "conversion"]
+    tick = [p for p in pairs if p[1].kind in ("bind", "append")]
+    con = duckdb.connect()
+    run_statements(con, setup)
+    for name, arr in params.items():
+        shaped = (arr.reshape(*arr.shape[:-1], arr.shape[-1] // cs, cs)
+                  if arr.shape[-1] >= cs else
+                  arr.reshape(*arr.shape[:-1], 1, arr.shape[-1]))
+        insert(con, name, shaped.shape[:-1], shaped)
+    for name, t in (("token_ids", token_table(np.asarray([1], np.int32))),
+                    ("freq_each_token",
+                     rope_freq_table(np.asarray([0]), SPEC.head_dim,
+                                     SPEC.rope_theta))):
+        arrs = {c: np.asarray(a) for c, a in t.cols.items()}
+        rows = []
+        for idx in np.ndindex(*t.key_sizes):
+            row = tuple(int(i) for i in idx)
+            for a in arrs.values():
+                v = a[idx]
+                row += (v.tolist(),) if v.ndim else (float(v),)
+            rows.append(row)
+        ph = ", ".join("?" * len(rows[0]))
+        con.executemany(f"INSERT INTO {name} VALUES ({ph})", rows)
+    run_statements(con, conv)
+    trace = run_traced(con, tick)
+    con.close()
+    return {"decode": trace.class_times_us()}
+
+
 def _time_engine(engine: RelationalEngine, prompt):
     """Median TTFT / TPOT over REPS generate calls (one warm-up)."""
     engine.generate(prompt, 2)  # warm the XLA compile caches
@@ -94,7 +162,7 @@ def run(report):
         ttft, tpot = _time_engine(eng, prompt)
         err = (0.0 if prec == "f32" else
                logit_error_between(eng, engines["f32"], prompt))
-        results.append({
+        rec = {
             "precision": prec,
             "resident_weight_bytes": resident_weight_bytes(eng),
             "quantised_tables": len(eng.table_precision_choices),
@@ -102,7 +170,11 @@ def run(report):
             "prefill_us": ttft * 1e6,
             "decode_us": tpot * 1e6,
             "max_logit_err": float(err),
-        })
+        }
+        traced = _traced_class_times(eng, params)
+        if traced:
+            rec["class_times_us"] = traced
+        results.append(rec)
     base = results[0]
     for row in results:
         row["bytes_reduction_vs_f32"] = (

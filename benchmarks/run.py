@@ -14,7 +14,7 @@ import traceback
 from benchmarks import (attn_layout_bench, batched_decode_bench,
                         chunk_sweep_bench, fig2_memory, fig3_capped,
                         fig4_methods, quant_bench, roofline_bench,
-                        row2col_bench, tab1_chunk_size)
+                        row2col_bench, shard_bench, tab1_chunk_size)
 
 BENCHES = {
     "tab1": tab1_chunk_size,
@@ -27,6 +27,7 @@ BENCHES = {
     "chunk_sweep": chunk_sweep_bench,
     "batched_decode": batched_decode_bench,
     "quant": quant_bench,
+    "shard": shard_bench,
 }
 
 

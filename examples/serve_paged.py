@@ -1,13 +1,18 @@
 """End-to-end serving driver: batched requests under a memory cap.
 
-    PYTHONPATH=src python examples/serve_paged.py
+    PYTHONPATH=src python examples/serve_paged.py [--shards N|auto]
 
 Serves a small Llama with the paper's disk+mem relational engine (weights
 memmapped on disk, bounded device working set, prefetch) while a
 continuous-batching scheduler multiplexes requests over a paged KV cache —
 the production shape of the paper's single-request DuckDB experiment.
+``--shards N`` splits every eligible matmul site across N tensor-parallel
+workers (each paging its weight slices under ``budget // N``) and reports
+per-worker occupancy and pager hit rates in the end-of-run summary.
 """
 
+import argparse
+import json
 import os
 import tempfile
 import time
@@ -15,7 +20,7 @@ import time
 import numpy as np
 
 from repro.core.llama_graph import LlamaSpec, init_llama_params
-from repro.obs import MetricsRegistry
+from repro.obs import MetricsRegistry, TraceRecorder
 from repro.serving.engine import RelationalEngine
 from repro.serving.kvcache import PagedKVCache, PagedKVConfig
 from repro.serving.scheduler import ContinuousBatcher, Request
@@ -54,12 +59,46 @@ def print_metrics_summary(reg: MetricsRegistry) -> None:
           f"{int(get('counter', 'serving_completed_total').value)}")
 
 
+def print_shard_summary(eng: RelationalEngine, wall_s: float) -> None:
+    """Per-worker occupancy and pager hit rates for a sharded engine."""
+    pool = eng.shard_pool
+    if pool is None:
+        return
+    st = pool.stats
+    print(f"\nshard workers (n={pool.n}):")
+    print(f"  sharded fan-outs: {st.sites}  busy sum={st.fanout_s:.2f}s  "
+          f"critical path={st.critical_s:.2f}s  "
+          f"projected multi-core saving={st.projected_saving_s:.2f}s")
+    for w in pool.workers:
+        h = w.metrics.histogram("shard_worker_busy_seconds")
+        occ = h.sum / wall_s if wall_s > 0 else 0.0
+        line = (f"  worker {w.index}: runs={h.count} "
+                f"busy={h.sum:.2f}s occupancy={occ:.1%}")
+        if w.pager is not None:
+            s = w.pager.stats
+            total = s.hits + s.prefetch_hits + s.misses
+            rate = (s.hits + s.prefetch_hits) / total if total else 0.0
+            line += (f" pager_hit_rate={rate:.2%} "
+                     f"({s.hits + s.prefetch_hits}/{total}, "
+                     f"evictions={s.evictions})")
+        print(line)
+
+
 def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--shards", default="1",
+                    help="tensor-parallel worker count (int or 'auto')")
+    args = ap.parse_args()
+    shards = args.shards if args.shards == "auto" else int(args.shards)
     spec = LlamaSpec(vocab=512, d_model=128, n_layers=3, n_heads=4, n_kv=2,
                      d_ff=256, rope_theta=10000.0)
     params = init_llama_params(spec, seed=0)
     model_bytes = sum(a.size * a.dtype.itemsize for a in params.values())
     metrics = MetricsRegistry()
+    out = os.environ.get("OBS_ARTIFACT_DIR")
+    # a tracer makes the shard workers record spans too, so the merged
+    # coordinator+per-shard Chrome trace dumped below has real events
+    tracer = TraceRecorder() if out else None
 
     with tempfile.TemporaryDirectory() as disk:
         print(f"model: {model_bytes/1e6:.1f} MB; cap: "
@@ -68,7 +107,15 @@ def main():
                                residency="paged",
                                budget_bytes=model_bytes // 4,
                                disk_dir=disk, max_len=96,
-                               metrics=metrics)
+                               metrics=metrics, tracer=tracer,
+                               shards=(shards if shards != 1 else None))
+        if eng.shard_pool is not None:
+            sp = eng.decode_pipe.shard_plan
+            print(f"sharded: {eng.shards} workers, "
+                  f"{len(sp.decisions) if sp else 0} decode sites, "
+                  f"per-worker budget "
+                  f"{model_bytes / 4 / eng.shards / 1e6:.1f} MB")
+        t_work0 = time.perf_counter()
 
         # --- single-request latency under the cap -------------------------
         rng = np.random.default_rng(0)
@@ -116,14 +163,23 @@ def main():
                   f"gen={req.generated} ttft={req.first_token_s:.2f}s")
 
         print_metrics_summary(metrics)
-        out = os.environ.get("OBS_ARTIFACT_DIR")
+        print_shard_summary(eng, time.perf_counter() - t_work0)
+        # fold per-worker registries into the main one (shard-labelled)
+        # BEFORE the artifact dump so the JSON carries the worker series
+        eng.merge_shard_metrics()
         if out:
             os.makedirs(out, exist_ok=True)
             metrics.save_json(os.path.join(out, "serve_paged_metrics.json"))
             with open(os.path.join(out, "serve_paged_metrics.prom"),
                       "w") as f:
                 f.write(metrics.render_prometheus())
+            if eng.shard_pool is not None:
+                with open(os.path.join(out, "serve_paged_shard_trace.json"),
+                          "w") as f:
+                    json.dump(eng.merged_shard_trace(), f)
             print(f"metrics dumped to {out}/")
+        if eng.shard_pool is not None:
+            eng.shard_pool.shutdown()
 
 
 if __name__ == "__main__":

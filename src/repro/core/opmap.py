@@ -90,6 +90,10 @@ class RelPipeline:
     # layout name, plus the full LayoutPlan
     layouts: Dict[str, str] = dataclasses.field(default_factory=dict)
     layout_plan: Optional[object] = None
+    # sharded-execution plan (repro.planner.shard.ShardPlan, filled by
+    # plan_layouts(shards=N)): per-step shard decisions with per-shard
+    # plan copies; None means unsharded execution (the strict default)
+    shard_plan: Optional[object] = None
     # planner-chosen physical chunk sizes, table name -> chunk (filled by
     # plan_layouts under chunk_mode="auto"; tables absent here keep the
     # pipeline chunking)

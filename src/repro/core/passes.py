@@ -163,7 +163,8 @@ def postoptimize(pipeline: RelPipeline, layout_mode: str = "off",
                  budget_bytes=None, chunk_mode: str = "off",
                  chunk_candidates=None, table_chunks=None,
                  pool=None, precision_mode: str = "off",
-                 table_precisions=None) -> Dict[str, int]:
+                 table_precisions=None,
+                 shards=None) -> Dict[str, int]:
     """Apply relational post-optimisations in place across all steps.
 
     ``layout_mode`` invokes the physical-layout planner (ROW2COL) as a
@@ -182,6 +183,10 @@ def postoptimize(pipeline: RelPipeline, layout_mode: str = "off",
     makes the stored payload precision a planner decision too — eligible
     weight tables are rewritten to scan quantised twins through inline
     dequant projections (``table_precisions`` pins per-table choices).
+    ``shards=N`` (N > 1) runs the sharded-execution pass after every
+    other planning stage: eligible matmul sites get per-shard plan copies
+    and a combine decision recorded on ``pipeline.shard_plan``
+    (``repro.planner.shard``); plans themselves are not rewritten.
     The resulting ``LayoutPlan`` is recorded on ``pipeline.layout_plan``.
     """
     before = count_nodes(pipeline)
@@ -191,7 +196,9 @@ def postoptimize(pipeline: RelPipeline, layout_mode: str = "off",
     for name, rel in pipeline.bindings.items():
         rel.plan = fuse_projections(rel.plan, memo)
     stats = {"rel_nodes_before": before}
-    if layout_mode != "off" or cache_mode != "off" or precision_mode != "off":
+    sharded = bool(shards) and int(shards) > 1
+    if layout_mode != "off" or cache_mode != "off" \
+            or precision_mode != "off" or sharded:
         from repro.planner import plan_layouts
         plan = plan_layouts(pipeline, mode=layout_mode, params=cost_params,
                             budget_bytes=budget_bytes, cache_mode=cache_mode,
@@ -199,13 +206,16 @@ def postoptimize(pipeline: RelPipeline, layout_mode: str = "off",
                             chunk_candidates=chunk_candidates,
                             table_chunks=table_chunks, pool=pool,
                             precision_mode=precision_mode,
-                            table_precisions=table_precisions)
+                            table_precisions=table_precisions,
+                            shards=shards)
         stats["row2col_sites"] = len(plan.decisions)
         stats["row2col_rewrites"] = len(plan.col_decisions)
         stats["cache_relayouts"] = sum(
             1 for d in plan.cache_decisions if d.layout != "row_chunk")
         stats["chunk_planned_tables"] = len(pipeline.table_chunks)
         stats["quantised_tables"] = len(plan.precision_decisions)
+        sp = pipeline.shard_plan
+        stats["sharded_sites"] = len(sp.decisions) if sp is not None else 0
     stats["rel_nodes_after"] = count_nodes(pipeline)
     return stats
 

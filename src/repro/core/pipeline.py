@@ -22,6 +22,7 @@ def run_pipeline(
     scalars: Optional[Dict[str, jnp.ndarray]] = None,
     layout_plan=None,
     tracer=None,
+    shard_runner=None,
 ) -> Tuple[Dict[str, DenseTable], Dict[str, DenseTable]]:
     """Execute all steps. Returns (outputs, updated_env).
 
@@ -42,6 +43,14 @@ def run_pipeline(
     executor's per-node ``cat="op"`` sub-spans.  With ``tracer=None`` (the
     default) the only cost is one ``None`` check per step — tracing must
     not be enabled under ``jit`` (the block would fail on traced values).
+
+    ``shard_runner`` (e.g. ``repro.serving.shards.ShardWorkerPool.
+    run_step``) takes over bind steps the pipeline's shard plan split
+    across workers: it fans the per-shard plan copies out, combines the
+    partials, seeds this pipeline's memo at the sharded aggregates and
+    executes the step's unsharded tail — returning the step's output
+    table.  Steps without shard decisions (and all append steps) run on
+    the normal path regardless.
     """
     scalars = scalars or {}
     # .copy() (not dict(...)) so lazy paging environments keep their
@@ -50,10 +59,17 @@ def run_pipeline(
     layout_plan = layout_plan or getattr(pipeline, "layout_plan", None)
     if layout_plan is not None:
         env = layout_plan.ensure_env(env)
+    shard_plan = getattr(pipeline, "shard_plan", None)
+    if shard_runner is None:
+        shard_plan = None
     memo: Dict[int, DenseTable] = {}
 
     def _run_step(step) -> None:
         if step.kind == "bind":
+            if shard_plan is not None and step.name in shard_plan.by_step:
+                env[step.name] = shard_runner(shard_plan, step, env, memo,
+                                              scalars, tracer)
+                return
             env[step.name] = execute(step.rel.plan, env, memo, scalars,
                                      tracer)
         elif step.kind == "append":

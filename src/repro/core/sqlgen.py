@@ -70,6 +70,11 @@ class StatementProvenance:
     ops: Tuple[str, ...] = ()            # relational op classes in the plan
     quantised: Tuple[str, ...] = ()      # scanned tables storing quantised
     #                                      payloads (dequant-projection)
+    shard: Optional[int] = None          # shard index for per-shard
+    #                                      statements (slice conversions and
+    #                                      per-shard plan views); None for
+    #                                      shard-agnostic segments incl. the
+    #                                      combine relation
 
 
 class SQLGenerator:
@@ -280,6 +285,12 @@ class SQLGenerator:
 
     def render_step_sql(self, name: str, plan: RelNode,
                         create: str = "VIEW") -> str:
+        named = self.named_roots.get(id(plan))
+        if named is not None and named != _sn(name):
+            # the whole step is an already-materialised relation — e.g. a
+            # shard combine over a step that IS a single matmul site
+            return (f"CREATE OR REPLACE {create} {_sn(name)} AS\n"
+                    f"SELECT * FROM {named};")
         ctes: List[Tuple[str, str]] = []
         body = self.render_select(plan, ctes)
         if ctes:
@@ -332,6 +343,7 @@ class SQLGenerator:
         chunks = getattr(self.p, "table_chunks", {}) or {}
         precisions = getattr(self.p, "table_precisions", {}) or {}
         plan = getattr(self.p, "layout_plan", None)
+        shard_plan = getattr(self.p, "shard_plan", None)
         qset = set(precisions)
 
         def annotate(name: str, ddl: str) -> str:
@@ -407,9 +419,53 @@ class SQLGenerator:
                  tables=tuple(sorted(
                      {d.table for d in plan.col_decisions}
                      | {pd.table for pd in plan.precision_decisions})))
+        if include_conversion and shard_plan is not None \
+                and shard_plan.decisions:
+            # per-shard table slices: contiguous key ranges of the stored
+            # tables (runs after layout/quantise conversions — the slices
+            # may read column copies or quantised twins)
+            emit("-- SHARD data conversion (contiguous key-range slices "
+                 "of the stored weight tables)", kind="comment")
+            done = set()
+            for d in shard_plan.decisions:
+                if d.table in done:
+                    continue
+                done.add(d.table)
+                for s, (lo, hi) in enumerate(d.ranges):
+                    tgt = d.shard_table(s)
+                    emit(f"CREATE OR REPLACE TABLE {_sn(tgt)} AS\n"
+                         f"SELECT * FROM {_sn(d.table)} "
+                         f"WHERE {_sn(d.axis)} >= {lo} "
+                         f"AND {_sn(d.axis)} < {hi};",
+                         kind="conversion", target=tgt,
+                         tables=(d.table,), shard=s)
         for step in self.p.steps:
             root = step.rel.plan
             if step.kind == "bind":
+                decs = (shard_plan.by_step.get(step.name, ())
+                        if shard_plan is not None else ())
+                for i, dec in enumerate(decs):
+                    # per-shard partial relations, then the combine: the
+                    # step view below references the combine by name (the
+                    # sharded aggregate is registered as a named root)
+                    for s, shard_root in enumerate(dec.shard_roots):
+                        nm = f"{step.name}::s{i}::shard{s}"
+                        ops, tables = plan_provenance(shard_root)
+                        emit(self.render_step_sql(nm, shard_root,
+                                                  create=step_create),
+                             kind="bind", step=step.name, target=nm,
+                             tables=tables, ops=ops,
+                             quantised=tuple(t for t in tables
+                                             if t in qset), shard=s)
+                        self.named_roots[id(shard_root)] = _sn(nm)
+                    cname = f"{step.name}::s{i}::combine"
+                    emit(self._shard_combine_sql(dec, i, step.name,
+                                                 step_create),
+                         kind="bind", step=step.name, target=cname,
+                         tables=tuple(dec.shard_table(s)
+                                      for s in range(dec.n_shards)),
+                         ops=("shard_combine",))
+                    self.named_roots[id(dec.agg)] = _sn(cname)
                 emit(self.render_step_sql(step.name, root,
                                           create=step_create),
                      kind="bind", target=step.name, **step_prov(step, root))
@@ -453,6 +509,36 @@ class SQLGenerator:
                      kind="append", target=step.name,
                      **step_prov(step, root))
         return out
+
+    def _shard_combine_sql(self, dec, idx: int, step_name: str,
+                           create: str) -> str:
+        """The combine relation over one site's per-shard partials:
+        ``UNION ALL`` + per-group SUM for row-parallel sites (every shard
+        emits the full group set of partial sums), a plain key-disjoint
+        UNION for column/head-parallel sites (each shard owns a
+        contiguous range of the shard key, so the union IS the full
+        relation)."""
+        agg_s = resolve(dec.agg)
+        names = [_sn(f"{step_name}::s{idx}::shard{s}")
+                 for s in range(dec.n_shards)]
+        union = "\nUNION ALL\n".join(f"SELECT * FROM {n}" for n in names)
+        target = _sn(f"{step_name}::s{idx}::combine")
+        if dec.combine == "concat":
+            return (f"CREATE OR REPLACE {create} {target} AS\n"
+                    f"-- key-disjoint shard combine "
+                    f"(contiguous {_sn(dec.axis)} ranges)\n{union};")
+        keys = [_sn(k) for k in agg_s.key_names]
+        parts = list(keys)
+        for c, t in agg_s.cols:
+            if is_vec(t):
+                parts.append(f"sumForEach(LIST({_sn(c)})) AS {_sn(c)}")
+            else:
+                parts.append(f"SUM({_sn(c)}) AS {_sn(c)}")
+        gb = f"\nGROUP BY {', '.join(keys)}" if keys else ""
+        return (f"CREATE OR REPLACE {create} {target} AS\n"
+                f"-- row-parallel shard combine (UNION ALL + SUM over "
+                f"partial sums)\n"
+                f"SELECT {', '.join(parts)} FROM (\n{union}\n) AS S{gb};")
 
     @staticmethod
     def _ddl(name: str, schema: RelSchema) -> str:

@@ -30,7 +30,11 @@ _RESERVOIR = 4096
 
 
 class Counter:
-    """Monotonically increasing counter."""
+    """Monotonically increasing counter.
+
+    Mutation is lock-protected: the sharded serving path has N worker
+    threads observing into shared series (``a += n`` is a read-modify-
+    write, not atomic under concurrent writers)."""
 
     kind = "counter"
 
@@ -40,15 +44,17 @@ class Counter:
         self.help = help
         self.labels = labels
         self.value = 0.0
+        self._lock = threading.Lock()
 
     def inc(self, n: float = 1.0) -> None:
         if n < 0:
             raise ValueError("counters only go up")
-        self.value += n
+        with self._lock:
+            self.value += n
 
 
 class Gauge:
-    """Settable instantaneous value."""
+    """Settable instantaneous value (lock-protected mutation)."""
 
     kind = "gauge"
 
@@ -58,15 +64,19 @@ class Gauge:
         self.help = help
         self.labels = labels
         self.value = 0.0
+        self._lock = threading.Lock()
 
     def set(self, v: float) -> None:
-        self.value = float(v)
+        with self._lock:
+            self.value = float(v)
 
     def inc(self, n: float = 1.0) -> None:
-        self.value += n
+        with self._lock:
+            self.value += n
 
     def dec(self, n: float = 1.0) -> None:
-        self.value -= n
+        with self._lock:
+            self.value -= n
 
 
 class Histogram:
@@ -92,19 +102,42 @@ class Histogram:
         self.sum = 0.0
         self._ring: List[float] = []
         self._ring_pos = 0
+        self._lock = threading.Lock()
 
     def observe(self, v: float) -> None:
         v = float(v)
-        self.count += 1
-        self.sum += v
-        for i, b in enumerate(self.bounds):
-            if v <= b:
-                self.bucket_counts[i] += 1
-        if len(self._ring) < _RESERVOIR:
-            self._ring.append(v)
-        else:
-            self._ring[self._ring_pos] = v
-            self._ring_pos = (self._ring_pos + 1) % _RESERVOIR
+        with self._lock:
+            self.count += 1
+            self.sum += v
+            for i, b in enumerate(self.bounds):
+                if v <= b:
+                    self.bucket_counts[i] += 1
+            if len(self._ring) < _RESERVOIR:
+                self._ring.append(v)
+            else:
+                self._ring[self._ring_pos] = v
+                self._ring_pos = (self._ring_pos + 1) % _RESERVOIR
+
+    def merge(self, other: "Histogram") -> None:
+        """Fold another histogram's observations into this one (per-shard
+        registry merge).  Bucket bounds must match; the quantile ring
+        absorbs the other's retained samples under the same reservoir
+        bound."""
+        if other.bounds != self.bounds:
+            raise ValueError(
+                f"histogram {self.name!r}: cannot merge bounds "
+                f"{other.bounds} into {self.bounds}")
+        with self._lock:
+            self.count += other.count
+            self.sum += other.sum
+            for i, c in enumerate(other.bucket_counts):
+                self.bucket_counts[i] += c
+            for v in other._ring:
+                if len(self._ring) < _RESERVOIR:
+                    self._ring.append(v)
+                else:
+                    self._ring[self._ring_pos] = v
+                    self._ring_pos = (self._ring_pos + 1) % _RESERVOIR
 
     def percentile(self, p: float) -> float:
         """p-th percentile (0..100) over the retained observations."""
@@ -170,6 +203,28 @@ class MetricsRegistry:
     def series(self) -> List[object]:
         with self._lock:
             return [self._series[k] for k in sorted(self._series)]
+
+    def merge(self, child: "MetricsRegistry", **extra_labels) -> None:
+        """Fold a child registry's series into this one, re-labelled.
+
+        The sharded serving layer gives each worker a private registry
+        (no cross-thread contention on the hot path) and merges them
+        here at report time: counters add, gauges take the child's last
+        value, histograms merge counts/sums/buckets/reservoir.
+        ``extra_labels`` (e.g. ``shard="3"``) disambiguate the children;
+        merging is additive, so merge each child once per report.
+        """
+        extra = {k: str(v) for k, v in extra_labels.items()}
+        for m in child.series():
+            labels = dict(m.labels)
+            labels.update(extra)
+            if m.kind == "counter":
+                self.counter(m.name, m.help, **labels).inc(m.value)
+            elif m.kind == "gauge":
+                self.gauge(m.name, m.help, **labels).set(m.value)
+            else:
+                self.histogram(m.name, m.help, buckets=m.bounds,
+                               **labels).merge(m)
 
     # -- exposition ----------------------------------------------------------
 

@@ -83,21 +83,28 @@ from repro.planner.row2col import (CACHE_MODES, CHUNK_MODES,
                                    PrecisionDecision, ResidencyPool,
                                    conversion_sql, plan_layouts,
                                    union_conversion_sql)
+from repro.planner.shard import (COMBINE_CONCAT, COMBINE_SUM, ShardDecision,
+                                 ShardPlan, balanced_ranges,
+                                 logical_shard_axis, match_shard_site,
+                                 plan_shards, price_shard, shard_table_name)
 
 __all__ = [
     "CACHE_HEAD_MAJOR", "CACHE_KEY_ORDERS", "CACHE_LAYOUTS", "CACHE_MODES",
     "CACHE_POS_MAJOR", "CACHE_ROW_CHUNK", "CHUNK_CANDIDATES", "CHUNK_MODES",
     "COL_CHUNK", "COL_CHUNK_HEADS", "MODES", "PRECISION_MODES", "ROW_CHUNK",
+    "COMBINE_CONCAT", "COMBINE_SUM",
     "CacheCost", "CacheDecision", "CacheSite", "CostParams", "MatmulCost",
     "MatmulSite", "LayoutDecision", "LayoutPlan", "PrecisionDecision",
-    "ResidencyPool",
-    "admissible_layouts", "best_chunk", "cache_chunk_costs",
+    "ResidencyPool", "ShardDecision", "ShardPlan",
+    "admissible_layouts", "balanced_ranges", "best_chunk",
+    "cache_chunk_costs",
     "cache_layout_cost", "cache_schema", "cache_site_costs",
     "choose_cache_layout", "choose_layout", "choose_precision",
     "col_chunk_cost", "col_schema", "col_table_name", "colh_chunk_cost",
     "colh_schema", "colh_table_name", "conversion_sql",
-    "divisor_candidates", "match_cache_sites", "match_matmul_site",
-    "match_value_join_tables", "plan_layouts", "precision_cost",
-    "precision_costs", "row_chunk_cost", "site_chunk_costs", "site_costs",
-    "union_conversion_sql",
+    "divisor_candidates", "logical_shard_axis", "match_cache_sites",
+    "match_matmul_site", "match_shard_site", "match_value_join_tables",
+    "plan_layouts", "plan_shards", "precision_cost", "precision_costs",
+    "price_shard", "row_chunk_cost", "shard_table_name",
+    "site_chunk_costs", "site_costs", "union_conversion_sql",
 ]

@@ -265,7 +265,9 @@ def matmul_points_from_payload(payload: Dict) -> List[Tuple[float, float,
     return points
 
 
-def fit_quant_weights(points: Sequence[Tuple[float, float, float, float]]
+def fit_quant_weights(points: Sequence[Tuple[float, float, float, float]],
+                      dequant_times_us: Optional[Sequence[Optional[float]]]
+                      = None
                       ) -> Tuple[float, float, float, float, float]:
     """Fit ``time ≈ s·feat + s·dq·dequant_elems + s·bw·bytes + c0``.
 
@@ -279,19 +281,50 @@ def fit_quant_weights(points: Sequence[Tuple[float, float, float, float]]
     dequantisation free and flip ``precision="auto"`` to quantise
     everything with no memory pressure.  A non-positive byte slope clamps
     to zero, which is the conservative direction (f32 keeps winning).
+
+    ``dequant_times_us`` aligns with ``points``: the traced
+    ``dequant_project`` operator-class time (µs) of that measurement —
+    :meth:`repro.obs.dbtrace.TickTrace.class_times_us` over one profiled
+    tick — or ``None`` where no trace exists.  When any usable pair is
+    present, the dequant slope is fitted *directly* from the traced
+    operator times (through-origin regression on dequant elements), and
+    only the row-feature / byte / intercept directions come from the
+    total times.  This is what rescues the dispatch-dominated case: the
+    whole-pipeline totals move by microseconds of dispatch noise per
+    precision, so the joint fit cannot resolve the dequant direction,
+    but the profiler's per-operator attribution measures it in
+    isolation.
     """
+    base = CostParams()
+    s_d_traced: Optional[float] = None
+    if dequant_times_us is not None:
+        pairs = [(d, t) for (_, d, _, _), t
+                 in zip(points, dequant_times_us)
+                 if t is not None and d > 0]
+        denom = sum(d * d for d, _ in pairs)
+        if pairs and denom > 0:
+            slope = sum(d * t for d, t in pairs) / denom
+            if slope > 0:
+                s_d_traced = slope
+            else:
+                _log_fallback("non_positive_traced_dequant_slope",
+                              fit="quant", dequant_slope=float(slope),
+                              n_traced=len(pairs))
     A = np.array([[f, d, b, 1.0] for f, d, b, _ in points],
                  dtype=np.float64)
     t = np.array([tt for *_, tt in points], dtype=np.float64)
     x, resid = _lstsq(A, t)
     s_r, s_d, s_b, c0 = x
-    base = CostParams()
     if s_r <= 0:
         _log_fallback("non_positive_row_scale", fit="quant",
                       row_scale=float(s_r), n_points=len(points),
                       kept="dequant_weight,byte_weight")
         return base.dequant_weight, base.byte_weight, max(s_r, 1e-9), \
             c0, resid
+    if s_d_traced is not None:
+        # the traced operator slope pins the dequant direction; the
+        # row/byte/intercept directions still come from the totals
+        return s_d_traced / s_r, max(s_b / s_r, 0.0), s_r, c0, resid
     if s_d <= 0:
         _log_fallback("non_positive_dequant_slope", fit="quant",
                       dequant_slope=float(s_d), n_points=len(points),
@@ -327,6 +360,36 @@ def quant_points_from_payload(payload: Dict,
                            rec.get("dequant_cost_elements", 0.0),
                            rec["resident_weight_bytes"], rec[key]))
     return points
+
+
+def dequant_times_from_payload(payload: Dict
+                               ) -> Optional[List[Optional[float]]]:
+    """Traced ``dequant_project`` operator-class times (µs), aligned with
+    :func:`quant_points_from_payload`'s point order.
+
+    ``quant_bench.py`` stores them per record under
+    ``class_times_us[kind]["dequant_project"]`` when duckdb is importable
+    at bench time (one profiled decode tick attributed through
+    ``StatementProvenance``).  Entries are ``None`` where the record
+    carries no trace for that kind; an f32 record with a trace but no
+    dequant operators reads as a true 0 µs measurement.  Returns ``None``
+    when the whole payload is untraced (older files fit exactly as
+    before).
+    """
+    times: List[Optional[float]] = []
+    any_traced = False
+    for rec in payload["results"]:
+        traced = rec.get("class_times_us") or {}
+        for kind in ("prefill", "decode"):
+            if f"{kind}_us" not in rec:
+                continue
+            if kind in traced:
+                times.append(float(traced[kind].get("dequant_project",
+                                                    0.0)))
+                any_traced = True
+            else:
+                times.append(None)
+    return times if any_traced else None
 
 
 def cache_points_from_payload(payload: Dict) -> List[Tuple[float, float,
@@ -417,11 +480,12 @@ def fit_cost_params(row2col_path: Optional[str] = ROW2COL_BENCH,
     quant_path = _resolve_bench(quant_path)
     if quant_path:
         with open(quant_path) as f:
-            qpoints = quant_points_from_payload(
-                json.load(f), params=dataclasses.replace(
-                    base, group_weight=gw))
+            qpayload = json.load(f)
+        qpoints = quant_points_from_payload(
+            qpayload, params=dataclasses.replace(base, group_weight=gw))
+        qtimes = dequant_times_from_payload(qpayload)
         if len(qpoints) >= 5:  # 4 unknowns: need an overdetermined system
-            dq, bw, _, _, _ = fit_quant_weights(qpoints)
+            dq, bw, _, _, _ = fit_quant_weights(qpoints, qtimes)
             n += len(qpoints)
         else:
             warnings.warn(

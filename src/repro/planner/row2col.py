@@ -592,7 +592,8 @@ def plan_layouts(pipeline: RelPipeline, mode: str = "auto",
                  table_chunks: Optional[Dict[str, int]] = None,
                  pool: Optional[ResidencyPool] = None,
                  precision_mode: str = "off",
-                 table_precisions: Optional[Dict[str, str]] = None
+                 table_precisions: Optional[Dict[str, str]] = None,
+                 shards: Optional[int] = None
                  ) -> LayoutPlan:
     """Run the layout planner over a compiled pipeline (in place).
 
@@ -634,6 +635,13 @@ def plan_layouts(pipeline: RelPipeline, mode: str = "auto",
     ``"f32"`` exempts a table).  Chosen codecs are recorded on
     ``pipeline.table_precisions`` and pinned on the pool for later plans.
 
+    ``shards=N`` (N > 1) additionally runs the sharded-execution pass
+    (:mod:`repro.planner.shard`) over the *final* physical plans: each
+    eligible weight table's column/head-chunk key space is partitioned
+    into N contiguous ranges and per-shard plan copies plus a combine
+    decision are recorded on ``pipeline.shard_plan`` — without rewriting
+    the pipeline, so ``shards=None``/``1`` is a strict no-op.
+
     Returns the :class:`LayoutPlan`; also records it on
     ``pipeline.layout_plan`` and the per-table choices on
     ``pipeline.layouts`` so downstream stages (``run_pipeline``,
@@ -668,6 +676,16 @@ def plan_layouts(pipeline: RelPipeline, mode: str = "auto",
     if cache_mode != "off":
         _plan_cache_layouts(pipeline, plan, cache_mode, params,
                             chunk_mode, chunk_candidates)
+    if shards and int(shards) > 1:
+        # sharding runs LAST: the sites it matches (and the per-shard plan
+        # copies it builds) must see the final physical plans — column
+        # rewrites, re-chunked tables and inline dequant projections
+        # included.  It never rewrites the pipeline itself, so shards=None
+        # (or 1) leaves plans and SQL bit-identical.
+        from repro.planner.shard import plan_shards
+        plan_shards(pipeline, int(shards), params=params)
+    else:
+        pipeline.shard_plan = None
     pipeline.layout_plan = plan
     return plan
 

@@ -157,7 +157,7 @@ class RelationalEngine:
                  precision: str = "f32",
                  table_precisions: Optional[Dict[str, str]] = None,
                  accuracy_budget: Optional[float] = None,
-                 metrics=None, tracer=None):
+                 metrics=None, tracer=None, shards=None):
         # cache_layout defaults to "auto": the locality model is
         # prefill-aware and calibrated against BENCH_attn_layout (ISSUE 5
         # satellite — pass "off" to keep the seed (tp, hk, c) order).
@@ -194,6 +194,22 @@ class RelationalEngine:
         # (it blocks per step, so leave it None when timing end-to-end).
         self.metrics = metrics
         self.tracer = tracer
+        # shards: the tensor-parallel planner axis (repro.planner.shard).
+        # None/1 keeps plans, SQL and execution bit-identical to an
+        # unsharded engine; "auto" sizes the worker pool to the host's
+        # cores; N>1 splits eligible matmul sites into N contiguous
+        # key-range shards run concurrently by serving.shards.
+        if shards in (None, 0, 1):
+            self.shards = 1
+        elif shards == "auto":
+            import os
+            self.shards = max(1, os.cpu_count() or 1)
+        else:
+            self.shards = int(shards)
+            if self.shards < 1:
+                raise ValueError(f"shards must be >= 1, got {shards}")
+        self.shard_pool = None
+        self._shard_runner = None
         self.residency = residency
         self.row2col = row2col
         self.precision = precision
@@ -205,11 +221,12 @@ class RelationalEngine:
         self._params = params  # kept for the accuracy gate's f32 reference
         self._chunk_candidates = chunk_candidates
         self._cost_params = cost_params
-        self._prefill_pipes: Dict[int, object] = {}
-        # batched decode plans, keyed by batch-size bucket (powers of two):
-        # sessions join/leave the batch without replanning — only a tick
-        # whose bucket was never seen compiles a new plan
-        self._batched_pipes: Dict[int, object] = {}
+        self._prefill_pipes: Dict[tuple, object] = {}
+        # batched decode plans, keyed by (batch-size bucket, shards) —
+        # buckets are powers of two: sessions join/leave the batch without
+        # replanning — only a tick whose bucket was never seen compiles a
+        # new plan
+        self._batched_pipes: Dict[tuple, object] = {}
         # paged residency: duplicate column copies compete with the working
         # set, so the global residency pass runs under the pager budget;
         # in-memory residency is unbounded.  One ResidencyPool is shared by
@@ -256,6 +273,14 @@ class RelationalEngine:
                                     table_sizes=self._table_chunks,
                                     quant_specs=self._quant_specs)
         self._register_layouts(self.decode_pipe)
+        if self.shards > 1:
+            from repro.serving.shards import ShardWorkerPool
+            self.shard_pool = ShardWorkerPool(
+                self.shards, residency=residency, cs=self.cs,
+                budget_bytes=self._residency_budget,
+                pager_policy=pager_policy, trace=tracer is not None)
+            self._shard_runner = self.shard_pool.run_step
+        self._register_shards(self.decode_pipe)
         # the gate builds a full in-memory f32 reference engine (a second
         # chunked weight copy + compile) — an opt-in construction cost,
         # skipped when the plan quantised nothing (logits are trivially
@@ -297,7 +322,8 @@ class RelationalEngine:
                                    self._table_chunks else None),
                      pool=self._residency_pool,
                      precision_mode=self._precision_mode,
-                     table_precisions=self._table_precisions or None)
+                     table_precisions=self._table_precisions or None,
+                     shards=self.shards if self.shards > 1 else None)
         return pipe
 
     def _register_layouts(self, pipe) -> None:
@@ -351,6 +377,32 @@ class RelationalEngine:
             self._quant_specs[pd.q_table] = (pd.precision, pd.chunk_size,
                                              pd.q_schema)
 
+    def _register_shards(self, pipe) -> None:
+        """Install a pipeline's shard-plan slices into the worker pool
+        (no-op unsharded).  Ranges depend only on the key-domain size
+        and N — identical across the decode/prefill/batched plans — so
+        the pool dedupes by shard table name."""
+        if self.shard_pool is None:
+            return
+        self.shard_pool.register_plan(
+            getattr(pipe, "shard_plan", None), env_base=self.env_base,
+            pager=self.pager, quant_specs=self._quant_specs,
+            table_chunks=self._table_chunks, cs=self.cs)
+
+    def merge_shard_metrics(self) -> None:
+        """Fold each worker's private metrics registry into the engine
+        registry under a ``shard`` label (call once at report time)."""
+        if self.shard_pool is not None and self.metrics is not None:
+            self.shard_pool.merge_metrics(self.metrics)
+
+    def merged_shard_trace(self):
+        """Chrome trace combining the coordinator's spans with every
+        worker's, one pid per track (None when tracing is off or the
+        engine is unsharded)."""
+        if self.shard_pool is None:
+            return None
+        return self.shard_pool.merged_chrome_trace(self.tracer)
+
     def _plan_cache_event(self, cache: str, hit: bool) -> None:
         if self.metrics is not None:
             self.metrics.counter(
@@ -359,8 +411,12 @@ class RelationalEngine:
                 outcome="hit" if hit else "miss").inc()
 
     def _prefill_pipe(self, T: int):
-        self._plan_cache_event("prefill", T in self._prefill_pipes)
-        if T not in self._prefill_pipes:
+        # plans are cached per (length, shard count): a sharded engine's
+        # plans carry per-shard plan copies and a combine decision, so
+        # they are not interchangeable with unsharded ones
+        key = (T, self.shards)
+        self._plan_cache_event("prefill", key in self._prefill_pipes)
+        if key not in self._prefill_pipes:
             # prefill shares the session environment with decode: it draws
             # on the same residency pool and is pinned to the decode plan's
             # per-table chunk sizes (both pipelines scan the same physical
@@ -369,8 +425,9 @@ class RelationalEngine:
                 lg.build_prefill_graph(self.spec, T, cache_len=self.max_len),
                 cache_mode=self._prefill_cache_mode)
             self._register_layouts(pipe)
-            self._prefill_pipes[T] = pipe
-        return self._prefill_pipes[T]
+            self._register_shards(pipe)
+            self._prefill_pipes[key] = pipe
+        return self._prefill_pipes[key]
 
     def _batched_decode_pipe(self, batch: int):
         """Compile (once per batch-size bucket) the seq-keyed decode plan
@@ -381,15 +438,17 @@ class RelationalEngine:
         plans, is pinned to their per-table chunk sizes, and is forced to
         the session cache layout (the batched cache pool's key order).
         """
-        self._plan_cache_event("batched_decode", batch in self._batched_pipes)
-        if batch not in self._batched_pipes:
+        key = (batch, self.shards)
+        self._plan_cache_event("batched_decode", key in self._batched_pipes)
+        if key not in self._batched_pipes:
             pipe = self._compile_pipe(
                 lg.build_decode_graph(self.spec, cache_len=self.max_len,
                                       batch=batch),
                 cache_mode=self._prefill_cache_mode)
             self._register_layouts(pipe)
-            self._batched_pipes[batch] = pipe
-        return self._batched_pipes[batch]
+            self._register_shards(pipe)
+            self._batched_pipes[key] = pipe
+        return self._batched_pipes[key]
 
     @staticmethod
     def _decode_bucket(batch: int) -> int:
@@ -443,7 +502,8 @@ class RelationalEngine:
             self.pager.prefetch(["vocabulary"])
         outs, env = run_pipeline(self._prefill_pipe(T), env,
                                  scalars={"cache_position": 0},
-                                 tracer=self.tracer)
+                                 tracer=self.tracer,
+                                 shard_runner=self._shard_runner)
         logits = self._final_logits(outs["logits"])
         return {"env": env, "pos": T, "tok": int(np.argmax(logits)),
                 "logits": logits}
@@ -461,7 +521,8 @@ class RelationalEngine:
         t0 = time.perf_counter() if self.metrics is not None else 0.0
         outs, env = run_pipeline(self.decode_pipe, env,
                                  scalars={"cache_position": pos},
-                                 tracer=self.tracer)
+                                 tracer=self.tracer,
+                                 shard_runner=self._shard_runner)
         tok = self._argmax_token(outs["logits"])
         if self.metrics is not None:
             self.metrics.histogram(
@@ -577,7 +638,7 @@ class BatchedDecoder:
         outs, env = run_pipeline(
             pipe, env,
             scalars={"seq_positions": jnp.asarray(positions, jnp.int32)},
-            tracer=eng.tracer)
+            tracer=eng.tracer, shard_runner=eng._shard_runner)
         self.decode_calls += 1
         # the tick's only cache mutation is one appended row per sequence
         # at positions[b] — write back just those rows; the updated views

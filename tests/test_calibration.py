@@ -128,6 +128,107 @@ class TestSyntheticRoundTrip:
         assert dq2 == CostParams().dequant_weight
         assert bw2 >= 0
 
+    def test_traced_dequant_times_fix_dispatch_dominated_fit(self):
+        """ROADMAP carried item: a dispatch-dominated measurement set —
+        totals that move *against* the dequant direction — degenerates
+        the joint fit to the analytic default, but the same points plus
+        traced ``dequant_project`` operator-class times recover the true
+        weight (the profiler measures the direction the totals cannot
+        resolve)."""
+        from repro.planner.calibrate import fit_quant_weights
+        grid = [(24664.0, 0.0, 1_444_352), (24664.0, 360_448.0, 408_064),
+                (24664.0, 720_896.0, 227_840), (125632.0, 0.0, 1_444_352),
+                (125632.0, 360_448.0, 408_064),
+                (125632.0, 720_896.0, 227_840)]
+        dq_true, bw_true, s_true, c_true = 0.4, 0.02, 0.5, 40_000.0
+        pts = [(f, d, b, c_true + s_true * (f + bw_true * b - 0.03 * d))
+               for f, d, b in grid]
+        dq0, *_ = fit_quant_weights(pts)
+        assert dq0 == CostParams().dequant_weight  # joint fit degenerates
+        traced = [s_true * dq_true * d for _, d, _, _ in pts]
+        dq, bw, s, c0, _ = fit_quant_weights(pts, traced)
+        assert dq == pytest.approx(dq_true, rel=1e-5)
+        assert s == pytest.approx(s_true, rel=1e-5)
+        assert bw >= 0
+
+    def test_traced_fit_ignores_untraced_gaps(self):
+        """None entries (records without a profiled tick) drop out of the
+        through-origin slope; the f32 record's traced zero at zero
+        dequant elements contributes nothing."""
+        from repro.planner.calibrate import fit_quant_weights
+        grid = [(24664.0, 0.0, 1_444_352), (24664.0, 360_448.0, 408_064),
+                (24664.0, 720_896.0, 227_840), (125632.0, 0.0, 1_444_352),
+                (125632.0, 360_448.0, 408_064),
+                (125632.0, 720_896.0, 227_840)]
+        dq_true, s_true, c_true = 0.25, 0.5, 40_000.0
+        pts = [(f, d, b, c_true + s_true * (f + 0.02 * b)) for f, d, b
+               in grid]
+        traced = [0.0 if d == 0 else
+                  (None if f > 100_000 else s_true * dq_true * d)
+                  for f, d, _, _ in pts]
+        dq, _, s, _, _ = fit_quant_weights(pts, traced)
+        assert dq == pytest.approx(dq_true, rel=1e-5)
+        # an all-None (or all-zero-elements) trace falls back to the
+        # joint fit — here degenerate, so the analytic default survives
+        dq2, *_ = fit_quant_weights(pts, [None] * len(pts))
+        assert dq2 == CostParams().dequant_weight
+
+    def test_dequant_times_from_payload_alignment(self):
+        """Extraction aligns 1:1 with quant_points_from_payload's point
+        order (rec-major, prefill before decode) and distinguishes a
+        traced zero from a missing trace."""
+        from repro.planner.calibrate import dequant_times_from_payload
+        payload = {"results": [
+            {"precision": "f32", "prefill_us": 1.0, "decode_us": 2.0,
+             "class_times_us": {"decode": {"scan": 5.0}}},
+            {"precision": "int8", "prefill_us": 3.0, "decode_us": 4.0,
+             "class_times_us": {"decode": {"dequant_project": 7.5}}},
+        ]}
+        times = dequant_times_from_payload(payload)
+        # rec0: untraced prefill, traced decode with no dequant ops (0.0);
+        # rec1: untraced prefill, traced decode with dequant time
+        assert times == [None, 0.0, None, 7.5]
+        assert dequant_times_from_payload(
+            {"results": [{"precision": "f32", "decode_us": 2.0}]}) is None
+
+    def test_fit_cost_params_uses_traced_dequant(self, tmp_path):
+        """End-to-end through the payload file: a quant payload whose
+        totals carry no dequant signal at all still calibrates
+        ``dequant_weight`` when its records carry traced
+        ``dequant_project`` class times."""
+        from repro.planner.calibrate import fit_cost_params
+        cs = 8
+        p = CostParams()
+        feats = {}
+        for kind, Teff in (("prefill", 4), ("decode", 1)):
+            rows, groups = pipeline_features(SPEC, kind, Teff, cs, "auto",
+                                             cache_len=12, params=p)
+            feats[kind] = rows + p.group_weight * groups
+        dq_true, bw_true, s, c0 = 0.7, 0.01, 0.4, 25_000.0
+        results = []
+        for prec, d, b in (("f32", 0.0, 600_000), ("int8", 150_000.0,
+                                                   180_000),
+                           ("nf4", 300_000.0, 110_000)):
+            rec = {"precision": prec, "resident_weight_bytes": b,
+                   "dequant_cost_elements": d, "class_times_us": {}}
+            for kind in ("prefill", "decode"):
+                rec[f"{kind}_us"] = c0 + s * (feats[kind] + bw_true * b)
+                rec["class_times_us"][kind] = {
+                    "dequant_project": s * dq_true * d}
+            results.append(rec)
+        payload = {"spec": {"vocab": SPEC.vocab, "d_model": SPEC.d_model,
+                            "n_layers": SPEC.n_layers,
+                            "n_heads": SPEC.n_heads, "n_kv": SPEC.n_kv,
+                            "d_ff": SPEC.d_ff},
+                   "chunk_size": cs, "prompt_tokens": 4, "cache_len": 12,
+                   "results": results}
+        qp = tmp_path / "q.json"
+        qp.write_text(json.dumps(payload))
+        fit = fit_cost_params(None, None, quant_path=str(qp))
+        assert fit.params.dequant_weight == pytest.approx(dq_true,
+                                                          rel=1e-4)
+        assert fit.params.dequant_weight != CostParams().dequant_weight
+
     def test_missing_files_keep_defaults(self, tmp_path):
         base = CostParams()
         fit = fit_cost_params(str(tmp_path / "nope.json"),

@@ -8,6 +8,7 @@ import json
 import logging
 import os
 import sqlite3
+import threading
 import warnings
 
 import numpy as np
@@ -102,6 +103,74 @@ class TestMetricsRegistry:
             dump = json.load(f)
         assert dump["h_seconds"][0]["p50"] == pytest.approx(0.01)
         assert "p50" not in dump["empty_seconds"][0]
+
+
+class TestMetricsConcurrency:
+    """Regression: the sharded worker pool mutates shared series from N
+    threads; unlocked ``+=`` read-modify-writes drop increments."""
+
+    def test_concurrent_writers_keep_exact_totals(self):
+        r = MetricsRegistry()
+        threads_n, iters = 8, 400
+        barrier = threading.Barrier(threads_n)
+
+        def hammer():
+            barrier.wait()  # maximise interleaving
+            for _ in range(iters):
+                # re-fetch through the registry each time: the lookup
+                # path (get-or-create under the registry lock) is part
+                # of what the worker threads exercise
+                r.counter("stress_total").inc()
+                r.counter("stress_total", shard="x").inc(2)
+                r.gauge("stress_gauge").inc(0.5)
+                r.histogram("stress_seconds").observe(0.001)
+
+        ts = [threading.Thread(target=hammer) for _ in range(threads_n)]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+        total = threads_n * iters
+        assert r.counter("stress_total").value == total
+        assert r.counter("stress_total", shard="x").value == 2 * total
+        assert r.gauge("stress_gauge").value == pytest.approx(0.5 * total)
+        h = r.histogram("stress_seconds")
+        assert h.count == total
+        assert h.sum == pytest.approx(0.001 * total)
+        # cumulative buckets stayed consistent under contention
+        assert h.bucket_counts[h.bounds.index(0.001)] == total
+
+    def test_merge_relabels_and_adds(self):
+        parent = MetricsRegistry()
+        parent.counter("ticks_total").inc(5)
+        for i in range(2):
+            child = MetricsRegistry()
+            child.counter("ticks_total").inc(10 * (i + 1))
+            child.gauge("busy_frac").set(0.25 * (i + 1))
+            child.histogram("lat_seconds").observe(0.002 * (i + 1))
+            parent.merge(child, shard=i)
+        # the parent's own unlabelled series is untouched …
+        assert parent.counter("ticks_total").value == 5
+        # … and each child landed under its shard label
+        assert parent.counter("ticks_total", shard="0").value == 10
+        assert parent.counter("ticks_total", shard="1").value == 20
+        assert parent.gauge("busy_frac", shard="1").value == 0.5
+        h0 = parent.histogram("lat_seconds", shard="0")
+        assert h0.count == 1 and h0.percentile(50) == \
+            pytest.approx(0.002)
+        # merging is additive: a second merge doubles the counter
+        child = MetricsRegistry()
+        child.counter("ticks_total").inc(10)
+        parent.merge(child, shard="0")
+        assert parent.counter("ticks_total", shard="0").value == 20
+
+    def test_merge_rejects_mismatched_histogram_bounds(self):
+        parent = MetricsRegistry()
+        parent.histogram("lat_seconds", buckets=(0.1, 1.0)).observe(0.05)
+        child = MetricsRegistry()
+        child.histogram("lat_seconds", buckets=(0.2, 2.0)).observe(0.05)
+        with pytest.raises(ValueError):
+            parent.merge(child)
 
 
 class TestTraceRecorder:

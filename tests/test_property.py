@@ -427,6 +427,154 @@ def test_quantised_col_matmul_within_codec_tolerance(t, m, k, cs, cs_col,
     np.testing.assert_allclose(got, x @ wq_dense.T, rtol=1e-4, atol=1e-4)
 
 
+# --- sharded relational execution (ISSUE 7 tentpole properties) ------------
+
+_SH_CACHE = {}
+
+
+def _sh_setup():
+    """Tiny Llama shared by every sharded-equivalence example: wide enough
+    (32×64 matmuls at cs=4) that the shard pricer admits sites."""
+    if "spec" not in _SH_CACHE:
+        from repro.core.llama_graph import LlamaSpec, init_llama_params
+        spec = LlamaSpec(vocab=64, d_model=32, n_layers=1, n_heads=4,
+                         n_kv=2, d_ff=64, rope_theta=10000.0)
+        _SH_CACHE["spec"] = (spec, init_llama_params(spec, seed=7))
+    return _SH_CACHE["spec"]
+
+
+def _sh_engine(shards, variant):
+    """Memoised engines keyed by (shard count, weight-table variant);
+    shards=1 builds the unsharded baseline the others compare against."""
+    key = (shards, variant)
+    if key not in _SH_CACHE:
+        from repro.serving.engine import RelationalEngine
+        spec, params = _sh_setup()
+        kw = {"precision": "int8"} if variant == "int8" else {}
+        eng = RelationalEngine(spec, params, chunk_size=4, max_len=12,
+                               shards=(shards if shards > 1 else None),
+                               **kw)
+        sp = eng.decode_pipe.shard_plan
+        if shards > 1:
+            assert sp is not None and sp.decisions  # the axis engaged
+        else:
+            assert sp is None  # N=1 keeps the unsharded plan bit-identical
+        _SH_CACHE[key] = eng
+    return _SH_CACHE[key]
+
+
+@settings(deadline=None, max_examples=8)
+@given(data=st.data())
+def test_sharded_engine_equals_unsharded(data):
+    """ISSUE 7 acceptance property: for any shard count in {1..4}, any
+    prompt, f32 or quantised weight tables, the sharded engine's prefill
+    logits match the unsharded engine's (the combine is exact up to f32
+    reassociation of the row-parallel partial sums) and greedy decode
+    produces identical tokens."""
+    variant = data.draw(st.sampled_from(["f32", "int8"]), label="variant")
+    n = data.draw(st.integers(1, 4), label="shards")
+    rng = np.random.default_rng(data.draw(st.integers(0, 99), label="seed"))
+    plen = data.draw(st.sampled_from([2, 4]), label="prompt_len")
+    prompt = [int(t) for t in rng.integers(0, 64, plen)]
+    base, sh = _sh_engine(1, variant), _sh_engine(n, variant)
+    s0 = base.start_session(list(prompt))
+    s1 = sh.start_session(list(prompt))
+    np.testing.assert_allclose(s1["logits"], s0["logits"], rtol=1e-5,
+                               atol=1e-5)
+    assert s1["tok"] == s0["tok"]
+    for _ in range(3):
+        assert sh.session_step(s1) == base.session_step(s0)
+
+
+@settings(deadline=None, max_examples=4)
+@given(data=st.data())
+def test_sharded_batched_decode_equals_unsharded(data):
+    """The seq-keyed *batched* decode plan shards too: one sharded tick
+    over B slots produces the same tokens as the unsharded batched
+    engine, for any shard count and ragged prompt mix."""
+    n = data.draw(st.integers(2, 4), label="shards")
+    variant = data.draw(st.sampled_from(["f32", "int8"]), label="variant")
+    rng = np.random.default_rng(data.draw(st.integers(0, 99), label="seed"))
+    B = 2
+    prompts = [[int(t) for t in rng.integers(0, 64, int(l))]
+               for l in rng.integers(1, 5, B)]
+    base, sh = _sh_engine(1, variant), _sh_engine(n, variant)
+    db, ds = base.batched_decoder(B), sh.batched_decoder(B)
+    toks_b = [db.prefill(p, i) for i, p in enumerate(prompts)]
+    toks_s = [ds.prefill(p, i) for i, p in enumerate(prompts)]
+    assert toks_s == toks_b
+    for _ in range(2):
+        toks_b = db.decode(list(range(B)), toks_b)
+        toks_s = ds.decode(list(range(B)), toks_s)
+        assert toks_s == toks_b
+
+
+def _sh_rechunk(n):
+    """Memoised (pipeline, weights env, pool) for the re-chunked decode
+    plan at shard count n — per-table chunk auto-planning picks 8/16-wide
+    chunks over the 4-wide base, so every sharded scan crosses a re-chunk
+    adapter."""
+    if ("rechunk", n) not in _SH_CACHE:
+        from repro.core import llama_graph as lg
+        from repro.core.graph import infer_shapes
+        from repro.core.opmap import op_map
+        from repro.core.passes import postoptimize, preoptimize
+        from repro.serving.shards import ShardWorkerPool
+        spec, params = _sh_setup()
+        g = lg.build_decode_graph(spec, cache_len=12)
+        infer_shapes(g)
+        preoptimize(g)
+        pipe = op_map(g, chunk_size=4)
+        postoptimize(pipe, layout_mode="col", chunk_mode="auto",
+                     chunk_candidates=(4, 8, 16),
+                     shards=(n if n > 1 else None))
+        assert any(c != 4 for c in pipe.table_chunks.values())
+        env_w = lg.convert_weights(params, chunk_size=4)
+        pipe.layout_plan.ensure_env(env_w)
+        pool = None
+        if n > 1:
+            assert pipe.shard_plan is not None and pipe.shard_plan.decisions
+            pool = ShardWorkerPool(n, residency="in_memory", cs=4)
+            pool.register_plan(pipe.shard_plan, env_base=env_w,
+                               table_chunks=pipe.table_chunks, cs=4)
+        else:
+            assert pipe.shard_plan is None
+        _SH_CACHE[("rechunk", n)] = (pipe, env_w, pool)
+    return _SH_CACHE[("rechunk", n)]
+
+
+@settings(deadline=None, max_examples=5)
+@given(n=st.integers(2, 4), seed=st.integers(0, 49))
+def test_sharded_rechunked_pipeline_matches_unsharded(n, seed):
+    """Pipeline level: per-table chunk re-planning (re-chunked tables)
+    composes with the shard axis — combined sharded decode logits equal
+    the unsharded re-chunked plan's for shard counts 2..4."""
+    from repro.core import llama_graph as lg
+    from repro.core.pipeline import run_pipeline
+    spec, _ = _sh_setup()
+    rng = np.random.default_rng(seed)
+    tok = int(rng.integers(0, spec.vocab))
+
+    def decode_env(env_w):
+        env = dict(env_w)
+        env.update(lg.empty_cache_tables(spec, 12, chunk_size=4))
+        env["token_ids"] = lg.token_table(np.asarray([tok], np.int32))
+        env["freq_each_token"] = lg.rope_freq_table(
+            np.asarray([0]), spec.head_dim, spec.rope_theta)
+        return env
+
+    pipe1, env_w1, _ = _sh_rechunk(1)
+    outs1, _ = run_pipeline(pipe1, decode_env(env_w1),
+                            scalars={"cache_position": 0})
+    pipen, env_wn, pool = _sh_rechunk(n)
+    outsn, _ = run_pipeline(pipen, decode_env(env_wn),
+                            scalars={"cache_position": 0},
+                            shard_runner=pool.run_step)
+    np.testing.assert_allclose(np.asarray(outsn["logits"].cols["v"]),
+                               np.asarray(outs1["logits"].cols["v"]),
+                               rtol=1e-5, atol=1e-5)
+
+
 @settings(**COMMON)
 @given(steps=st.integers(1, 5), seed=st.integers(0, 10))
 def test_data_pipeline_deterministic_resume(steps, seed):

@@ -241,8 +241,9 @@ class TestBatchedRelationalDecode:
         engine._batched_pipes.clear()
         prompts = [[5, 9], [1, 2, 3], [7, 7], [3, 4, 5]]
         sched, dec, _ = self._serve(engine, prompts, max_new=3)
+        # cache keys are (batch_bucket, shards); this engine is unsharded
         buckets = set(engine._batched_pipes)
-        assert buckets <= {1, 2, 4}
+        assert buckets <= {(1, 1), (2, 1), (4, 1)}
         # rerunning the same shapes compiles nothing new
         n = len(engine._batched_pipes)
         self._serve(engine, prompts, max_new=3)

@@ -1,0 +1,334 @@
+"""Sharded relational execution (ISSUE 7 tentpole): shard-planner units
+(balanced ranges, site matching, pricing refusal, N=1 bit-identity),
+golden per-shard SQL for both combine flavours, worker-pool slice/combine
+semantics, engine equivalence across residencies and precisions, and the
+merged per-shard observability surface."""
+
+import numpy as np
+import pytest
+
+from repro.core.executor import DenseTable
+from repro.core.graph import Graph, infer_shapes
+from repro.core.llama_graph import (LlamaSpec, build_decode_graph,
+                                    init_llama_params)
+from repro.core.opmap import op_map
+from repro.core.passes import postoptimize, preoptimize
+from repro.core import relational as ra
+from repro.core.sqlgen import generate_sql
+from repro.planner import plan_layouts
+from repro.planner.shard import (COMBINE_CONCAT, COMBINE_SUM, ShardDecision,
+                                 balanced_ranges, plan_shards,
+                                 shard_table_name)
+from repro.serving.engine import RelationalEngine
+from repro.serving.shards import ShardWorkerPool, slice_table
+
+# wide enough that every matmul site passes the benefit > combine-cost
+# pricing gate (8×8 weights are refused: the combine pass costs more
+# than the split saves)
+SPEC = LlamaSpec(vocab=64, d_model=32, n_layers=1, n_heads=4, n_kv=2,
+                 d_ff=64, rope_theta=10000.0)
+CS = 4
+
+
+def _linear_pipe(cs=4, d=32):
+    """Embedding→linear with a ``d×d`` weight (wide enough to shard)."""
+    g = Graph(name="lin")
+    g.inputs = ["ids"]
+    g.annotate("ids", (("t", 4),))
+    g.annotate("vocab", (("tok", 16), ("d", d)))
+    g.initializers["vocab"] = None
+    g.initializers["W"] = None
+    g.annotate("W", (("j", d), ("d", d)))
+    x = g.add("embedding", ["vocab", "ids"])
+    g.add("linear", [x, "W"], out_features=d, output="y")
+    g.outputs = ["y"]
+    infer_shapes(g)
+    return op_map(g, chunk_size=cs)
+
+
+def _decode_pipe(**post_kw):
+    g = build_decode_graph(SPEC, cache_len=8)
+    infer_shapes(g)
+    preoptimize(g)
+    pipe = op_map(g, chunk_size=CS)
+    postoptimize(pipe, **post_kw)
+    return pipe
+
+
+class TestBalancedRanges:
+    def test_even_split(self):
+        assert balanced_ranges(8, 2) == ((0, 4), (4, 8))
+        assert balanced_ranges(8, 4) == ((0, 2), (2, 4), (4, 6), (6, 8))
+
+    def test_uneven_split_stays_contiguous_and_covering(self):
+        for size, n in ((7, 3), (10, 4), (5, 2)):
+            rs = balanced_ranges(size, n)
+            assert rs[0][0] == 0 and rs[-1][1] == size
+            assert all(a[1] == b[0] for a, b in zip(rs, rs[1:]))
+            widths = [hi - lo for lo, hi in rs]
+            assert max(widths) - min(widths) <= 1
+
+    def test_n_clamped_to_size(self):
+        assert balanced_ranges(2, 8) == ((0, 1), (1, 2))
+        assert balanced_ranges(4, 1) == ((0, 4),)
+
+    def test_shard_table_name(self):
+        assert shard_table_name("W__col", 3) == "W__col::shard3"
+
+
+class TestShardPlanning:
+    def test_col_layout_decode_sites(self):
+        pipe = _decode_pipe(layout_mode="col", cache_mode="auto")
+        plan = plan_shards(pipe, 2)
+        assert pipe.shard_plan is plan and plan.decisions
+        kinds = {d.kind for d in plan.decisions}
+        assert kinds <= {"row", "col", "colh"}
+        assert "colh" in kinds  # Q/K/V head-blocked projections
+        for d in plan.decisions:
+            assert d.axis_size >= 2
+            assert d.ranges == balanced_ranges(d.axis_size, 2)
+            assert d.combine in (COMBINE_SUM, COMBINE_CONCAT)
+            assert len(d.shard_roots) == d.n_shards == 2
+            assert plan.table_ranges[d.table] == d.ranges
+        # attention's cache-table scans are never sharded
+        cache = set(pipe.cache_tables)
+        assert not any(d.table in cache for d in plan.decisions)
+        # by_step preserves planner post-order per step
+        for step, decs in plan.by_step.items():
+            assert [d for d in plan.decisions
+                    if d.step_name == step] == decs
+
+    def test_n1_keeps_pipeline_unsharded(self):
+        pipe = _decode_pipe(layout_mode="col")
+        plan = plan_shards(pipe, 1)
+        assert pipe.shard_plan is None
+        assert plan.n_shards == 1 and not plan.decisions
+
+    def test_pricing_refuses_tiny_sites(self):
+        # an 8×8 row-chunk weight: the SUM combine stacks N full copies
+        # of the output groups, which costs more than the split saves on
+        # a site this small — no decision is recorded
+        pipe = _linear_pipe(d=8)
+        assert plan_shards(pipe, 2).decisions == []
+        assert pipe.shard_plan is None
+
+    def test_admitted_site_prices_benefit_over_combine(self):
+        pipe = _linear_pipe(d=32)
+        plan_layouts(pipe, mode="col")
+        (dec,) = plan_shards(pipe, 2).decisions
+        assert dec.table == "W__col" and dec.kind == "col"
+        assert dec.benefit > dec.combine_cost > 0
+
+
+GOLDEN_SHARD_SLICE = """\
+CREATE OR REPLACE TABLE W__col__shard0 AS
+SELECT * FROM W__col WHERE c >= 0 AND c < 4;"""
+
+GOLDEN_SHARD_VIEW = """\
+CREATE OR REPLACE VIEW y__s0__shard0 AS
+WITH t4 AS (SELECT S.t, S.c, E.e, S.v[E.e + 1] AS x FROM embedding_1 AS S, (SELECT UNNEST(range(4)) AS e) AS E),
+  t3 AS (SELECT t AS t, ((c * 4) + e) AS d, x AS xs FROM t4),
+  t2 AS (SELECT L.t, L.d, R.c, L.xs, R.chunk AS chunk FROM t3 AS L JOIN W__col__shard0 AS R ON R.d = L.d)
+SELECT t, c, sumForEach(LIST(list_transform(chunk, x -> x * (xs)))) AS v FROM t2 GROUP BY t, c;"""
+
+GOLDEN_CONCAT_COMBINE = """\
+CREATE OR REPLACE VIEW y__s0__combine AS
+-- key-disjoint shard combine (contiguous c ranges)
+SELECT * FROM y__s0__shard0
+UNION ALL
+SELECT * FROM y__s0__shard1;"""
+
+GOLDEN_SUM_COMBINE = """\
+CREATE OR REPLACE VIEW y__s0__combine AS
+-- row-parallel shard combine (UNION ALL + SUM over partial sums)
+SELECT t, j, SUM(s) AS s FROM (
+SELECT * FROM y__s0__shard0
+UNION ALL
+SELECT * FROM y__s0__shard1
+) AS S
+GROUP BY t, j;"""
+
+
+class TestShardSQL:
+    def test_n1_sql_bit_identical_to_unsharded(self):
+        def sql(n):
+            pipe = _decode_pipe(layout_mode="col", cache_mode="auto")
+            if n is not None:
+                plan_shards(pipe, n)
+            return generate_sql(pipe, dialect="duckdb",
+                                include_conversion=True)
+        assert sql(None) == sql(1)
+
+    def test_golden_col_shard_script(self):
+        pipe = _linear_pipe(d=32)
+        plan_layouts(pipe, mode="col")
+        plan_shards(pipe, 2)
+        sql = generate_sql(pipe, dialect="duckdb", include_conversion=True)
+        assert ("-- SHARD data conversion (contiguous key-range slices "
+                "of the stored weight tables)") in sql
+        assert GOLDEN_SHARD_SLICE in sql
+        assert GOLDEN_SHARD_VIEW in sql
+        assert GOLDEN_CONCAT_COMBINE in sql
+        # the step IS the matmul site: its view selects from the combine
+        assert "CREATE OR REPLACE VIEW y AS\n" \
+               "SELECT * FROM y__s0__combine;" in sql
+
+    def test_golden_row_shard_combine(self):
+        # without the col rewrite the join binds the reduction chunk key:
+        # a row-parallel site whose combine is UNION ALL + SUM
+        pipe = _linear_pipe(d=32)
+        (dec,) = plan_shards(pipe, 2).decisions
+        assert dec.kind == "row" and dec.combine == COMBINE_SUM
+        assert dec.table == "W" and dec.left_key == "c"
+        sql = generate_sql(pipe, dialect="duckdb", include_conversion=True)
+        assert GOLDEN_SUM_COMBINE in sql
+        # the step's unsharded tail (re-chunk) reads the combine by name
+        assert "FROM y__s0__combine" in sql
+
+    def test_shard_statement_provenance(self):
+        from repro.core.sqlgen import generate_sql_with_provenance
+        pipe = _linear_pipe(d=32)
+        plan_layouts(pipe, mode="col")
+        plan_shards(pipe, 2)
+        pairs = generate_sql_with_provenance(pipe, dialect="duckdb",
+                                             include_conversion=True)
+        slices = [p for _, p in pairs if p.kind == "conversion"
+                  and p.target and "::shard" in p.target]
+        assert [p.shard for p in slices] == [0, 1]
+        partials = [p for _, p in pairs if p.kind == "bind"
+                    and p.shard is not None]
+        assert [p.shard for p in partials] == [0, 1]
+        combines = [p for _, p in pairs if "shard_combine" in p.ops]
+        assert len(combines) == 1 and combines[0].shard is None
+        assert combines[0].tables == ("W__col::shard0", "W__col::shard1")
+
+
+class TestWorkerPoolUnits:
+    def test_slice_table_broadcasts_lazy_columns(self):
+        full = np.arange(24, dtype=np.float32).reshape(6, 4)
+        lazy = np.full((1,), 2.5, np.float32)  # broadcast over key "c"
+        t = DenseTable(keys=(("c", 6),),
+                       cols={"v": full, "s": lazy},
+                       col_types={"v": ra.VEC(4), "s": ra.SCALAR})
+        s = slice_table(t, "c", 2, 5)
+        assert s.keys == (("c", 3),)
+        np.testing.assert_array_equal(np.asarray(s.cols["v"]), full[2:5])
+        # the lazily-broadcast scalar column was expanded then sliced
+        np.testing.assert_array_equal(np.asarray(s.cols["s"]),
+                                      np.full(3, 2.5, np.float32))
+
+    def _partials(self, combine, axis="c"):
+        dec = ShardDecision(step_name="s", table="W", axis=axis,
+                            axis_size=4, kind="row", combine=combine,
+                            logical_axis="inner", ranges=((0, 2), (2, 4)))
+        mk = lambda a: DenseTable(keys=(("c", a.shape[0]),),
+                                  cols={"v": a},
+                                  col_types={"v": ra.VEC(2)})
+        a = np.arange(8, dtype=np.float32).reshape(4, 2)
+        b = 10 * np.ones((4, 2), np.float32)
+        return dec, mk(a), mk(b), a, b
+
+    def test_combine_sum_adds_partials(self):
+        dec, ta, tb, a, b = self._partials(COMBINE_SUM)
+        out = ShardWorkerPool._combine(dec, [ta, tb])
+        assert out.keys == ta.keys
+        np.testing.assert_allclose(np.asarray(out.cols["v"]), a + b)
+
+    def test_combine_concat_stacks_along_shard_key(self):
+        dec, ta, tb, a, b = self._partials(COMBINE_CONCAT)
+        out = ShardWorkerPool._combine(dec, [ta, tb])
+        assert out.keys == (("c", 8),)
+        np.testing.assert_allclose(np.asarray(out.cols["v"]),
+                                   np.concatenate([a, b]))
+
+    def test_pool_rejects_single_worker(self):
+        with pytest.raises(ValueError):
+            ShardWorkerPool(1)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_llama_params(SPEC, seed=0)
+
+
+def _tokens(eng, prompt=(3, 17, 42), steps=3):
+    sess = eng.start_session(list(prompt))
+    toks = [sess["tok"]]
+    for _ in range(steps):
+        toks.append(eng.session_step(sess))
+    return toks
+
+
+class TestShardedEngine:
+    def test_in_memory_matches_unsharded(self, params):
+        ref = RelationalEngine(SPEC, params, chunk_size=CS, max_len=8)
+        eng = RelationalEngine(SPEC, params, chunk_size=CS, max_len=8,
+                               shards=2)
+        assert eng.decode_pipe.shard_plan is not None
+        assert _tokens(eng) == _tokens(ref)
+        assert eng.shard_pool.stats.sites > 0
+        assert eng.shard_pool.stats.fanout_s >= \
+            eng.shard_pool.stats.critical_s > 0
+        eng.shard_pool.shutdown()
+
+    def test_paged_matches_unsharded(self, params):
+        ref = RelationalEngine(SPEC, params, chunk_size=CS, max_len=8)
+        eng = RelationalEngine(SPEC, params, chunk_size=CS, max_len=8,
+                               residency="paged", budget_bytes=1 << 22,
+                               pager_policy="clock", shards=2)
+        assert _tokens(eng) == _tokens(ref)
+        # each worker pages its slices under its own budget share
+        assert all(w.pager is not None and w.pager.stats.misses > 0
+                   for w in eng.shard_pool.workers)
+        eng.shard_pool.shutdown()
+
+    def test_paged_quantised_matches_unsharded_quantised(self, params):
+        ref = RelationalEngine(SPEC, params, chunk_size=CS, max_len=8,
+                               precision="int8")
+        eng = RelationalEngine(SPEC, params, chunk_size=CS, max_len=8,
+                               residency="paged", budget_bytes=1 << 22,
+                               precision="int8", shards=2)
+        assert eng.table_precision_choices  # the planner did quantise
+        assert _tokens(eng) == _tokens(ref)
+        eng.shard_pool.shutdown()
+
+    def test_shards_validation(self, params):
+        with pytest.raises(ValueError):
+            RelationalEngine(SPEC, params, chunk_size=CS, max_len=8,
+                             shards=0.5)
+        eng = RelationalEngine(SPEC, params, chunk_size=CS, max_len=8,
+                               shards=1)
+        assert eng.shard_pool is None and eng.decode_pipe.shard_plan is None
+
+
+class TestShardObservability:
+    def test_merged_metrics_and_trace(self, params):
+        from repro.obs import MetricsRegistry, TraceRecorder
+        reg = MetricsRegistry()
+        tracer = TraceRecorder()
+        eng = RelationalEngine(SPEC, params, chunk_size=CS, max_len=8,
+                               shards=2, metrics=reg, tracer=tracer)
+        _tokens(eng, steps=2)
+        eng.merge_shard_metrics()
+        dump = reg.to_dict()
+        runs = {e["labels"]["shard"]: e["value"]
+                for e in dump["shard_worker_runs_total"]}
+        assert set(runs) == {"0", "1"}
+        assert runs["0"] == runs["1"] > 0
+        busy = [e for e in dump["shard_worker_busy_seconds"]
+                if e["labels"].get("shard") == "0"]
+        assert busy and busy[0]["count"] == runs["0"]
+        merged = eng.merged_shard_trace()
+        pids = {e["pid"] for e in merged["traceEvents"]}
+        assert pids == {1, 2, 3}  # coordinator + 2 worker tracks
+        shard_spans = [e for e in merged["traceEvents"]
+                       if e["cat"] == "shard"]
+        assert shard_spans
+        assert {e["args"]["track"] for e in shard_spans} == \
+            {"shard0", "shard1"}
+        eng.shard_pool.shutdown()
+
+    def test_unsharded_engine_has_no_shard_surface(self, params):
+        eng = RelationalEngine(SPEC, params, chunk_size=CS, max_len=8)
+        eng.merge_shard_metrics()  # no-op, must not raise
+        assert eng.merged_shard_trace() is None
