@@ -1,0 +1,108 @@
+"""Load generator for the HTTP serving front end (``serve_http.py``).
+
+    PYTHONPATH=src python examples/load_client.py --port 8008 \
+        --n 16 --concurrency 8 [--scrape-metrics out/metrics.prom] \
+        [--shutdown]
+
+Fires ``--n`` streaming ``/v1/completions`` requests with ``--concurrency``
+in flight, then reports TTFT/latency percentiles, admission rejects and —
+because decoding is greedy/deterministic — verifies every stream's SSE
+chunks arrive in order (contiguous ``token_index``) with zero duplicated
+or dropped tokens.  Exits non-zero on any integrity failure, so CI can
+gate on it.
+"""
+
+import argparse
+import asyncio
+import random
+import sys
+
+from repro.serving import client
+
+
+def _pct(xs, p):
+    if not xs:
+        return float("nan")
+    xs = sorted(xs)
+    rank = (p / 100) * (len(xs) - 1)
+    lo = int(rank)
+    hi = min(lo + 1, len(xs) - 1)
+    return xs[lo] + (xs[hi] - xs[lo]) * (rank - lo)
+
+
+async def amain(args) -> int:
+    await client.wait_ready(args.host, args.port, timeout_s=args.ready_s)
+    rng = random.Random(args.seed)
+    sem = asyncio.Semaphore(args.concurrency)
+    vocab = args.vocab
+
+    async def one(i):
+        prompt = [rng.randrange(vocab) for _ in
+                  range(rng.randrange(4, 9))]
+        payload = {"model": "transql-tiny", "prompt": prompt,
+                   "max_tokens": args.max_tokens}
+        async with sem:
+            return await client.stream_completion(args.host, args.port,
+                                                  payload)
+    results = await asyncio.gather(*(one(i) for i in range(args.n)))
+
+    ok = [r for r in results if r.status == 200]
+    rejected = [r for r in results if r.status == 429]
+    failures = []
+    for i, r in enumerate(ok):
+        want = list(range(args.max_tokens))
+        if r.token_indices != want:
+            failures.append(
+                f"stream {i}: token_index {r.token_indices} != {want} "
+                f"(duplicated, dropped or out-of-order chunks)")
+    ttfts = [r.ttft_s for r in ok if r.ttft_s == r.ttft_s]
+    totals = [r.total_s for r in ok]
+    print(f"requests: {args.n}  ok: {len(ok)}  429: {len(rejected)}  "
+          f"other: {args.n - len(ok) - len(rejected)}")
+    print(f"ttft:  p50={_pct(ttfts, 50)*1e3:.1f} ms  "
+          f"p95={_pct(ttfts, 95)*1e3:.1f} ms")
+    print(f"total: p50={_pct(totals, 50)*1e3:.1f} ms  "
+          f"p95={_pct(totals, 95)*1e3:.1f} ms")
+    for f in failures:
+        print(f"FAIL {f}")
+
+    if args.scrape_metrics:
+        resp = await client.request(args.host, args.port, "GET", "/metrics")
+        with open(args.scrape_metrics, "w") as fh:
+            fh.write(resp.body.decode())
+        print(f"metrics scraped to {args.scrape_metrics}")
+    if args.shutdown:
+        await client.request(args.host, args.port, "POST", "/admin/shutdown")
+        print("server shutdown requested")
+
+    if failures:
+        return 1
+    if not ok:
+        print("FAIL no request succeeded")
+        return 1
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8008)
+    ap.add_argument("--n", type=int, default=16)
+    ap.add_argument("--concurrency", type=int, default=8)
+    ap.add_argument("--max-tokens", type=int, default=6)
+    ap.add_argument("--vocab", type=int, default=512)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ready-s", type=float, default=120.0,
+                    help="seconds to wait for the server to come up")
+    ap.add_argument("--scrape-metrics", default=None,
+                    help="file to save a final /metrics scrape into")
+    ap.add_argument("--shutdown", action="store_true",
+                    help="POST /admin/shutdown when done (CI teardown)")
+    args = ap.parse_args()
+    sys.exit(asyncio.run(amain(args)))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,126 @@
+"""Boot the OpenAI-compatible HTTP front end on the tiny model.
+
+    PYTHONPATH=src python examples/serve_http.py [--port 8008]
+        [--max-batch 3] [--paged] [--n-pages 48] [--max-queue 32]
+
+Then drive it with curl:
+
+    curl -s localhost:8008/v1/models
+    curl -s localhost:8008/v1/completions -d '{
+        "model": "transql-tiny", "prompt": [5, 9, 2, 7],
+        "max_tokens": 6, "stream": true}'
+    curl -s localhost:8008/metrics | grep serving_ttft
+
+or with the load generator (``examples/load_client.py``), which also
+verifies SSE chunk ordering and token exactness under concurrency.
+
+With ``OBS_ARTIFACT_DIR`` set, shutdown (Ctrl-C or
+``POST /admin/shutdown``) dumps the metrics registry (JSON + Prometheus
+text) and the per-step Chrome trace there — what the CI serving job
+uploads as artifacts.
+"""
+
+import argparse
+import asyncio
+import contextlib
+import json
+import os
+import tempfile
+
+from repro.core.llama_graph import LlamaSpec, init_llama_params
+from repro.obs import MetricsRegistry, TraceRecorder
+from repro.serving.engine import RelationalEngine
+from repro.serving.kvcache import PagedKVCache, PagedKVConfig
+from repro.serving.server import AsyncLLMServer, ServerConfig
+
+
+def build_server(args, metrics, tracer, disk_dir=None) -> AsyncLLMServer:
+    spec = LlamaSpec(vocab=512, d_model=128, n_layers=3, n_heads=4, n_kv=2,
+                     d_ff=256, rope_theta=10000.0)
+    params = init_llama_params(spec, seed=0)
+    if args.paged:
+        model_bytes = sum(a.size * a.dtype.itemsize for a in params.values())
+        eng = RelationalEngine(spec, params, chunk_size=64,
+                               residency="paged",
+                               budget_bytes=model_bytes // 4,
+                               disk_dir=disk_dir, max_len=96,
+                               metrics=metrics, tracer=tracer)
+    else:
+        eng = RelationalEngine(spec, params, chunk_size=64, max_len=96,
+                               metrics=metrics, tracer=tracer)
+    # a page pool sized below max_batch's worst case keeps the preemption
+    # path honest under load (the scheduler resumes, never replays)
+    kvcfg = PagedKVConfig(n_layers=spec.n_layers, n_kv=spec.n_kv,
+                          head_dim=spec.head_dim, page_size=8,
+                          n_pages=args.n_pages, max_pages_per_seq=12)
+    kv = PagedKVCache(kvcfg, max_seqs=max(8, args.max_batch))
+    cfg = ServerConfig(host=args.host, port=args.port,
+                       max_batch=args.max_batch,
+                       max_queue_depth=args.max_queue,
+                       max_tokens_cap=args.max_tokens_cap,
+                       ttft_slo_s=args.ttft_slo_ms / 1e3
+                       if args.ttft_slo_ms else None,
+                       tpot_slo_s=args.tpot_slo_ms / 1e3
+                       if args.tpot_slo_ms else None)
+    return AsyncLLMServer(eng, kv, cfg, metrics=metrics, tracer=tracer)
+
+
+def dump_artifacts(server, metrics, tracer, out: str) -> None:
+    os.makedirs(out, exist_ok=True)
+    metrics.save_json(os.path.join(out, "serve_http_metrics.json"))
+    with open(os.path.join(out, "serve_http_metrics.prom"), "w") as f:
+        f.write(metrics.render_prometheus())
+    if tracer is not None:
+        with open(os.path.join(out, "serve_http_trace.json"), "w") as f:
+            json.dump(tracer.to_chrome(), f)
+    print(f"artifacts dumped to {out}/")
+
+
+async def amain(args) -> None:
+    metrics = MetricsRegistry()
+    out = os.environ.get("OBS_ARTIFACT_DIR")
+    tracer = TraceRecorder() if out else None
+    with contextlib.ExitStack() as stack:
+        disk = (stack.enter_context(tempfile.TemporaryDirectory())
+                if args.paged else None)
+        server = build_server(args, metrics, tracer, disk_dir=disk)
+        await server.start()
+        print(f"serving on http://{server.cfg.host}:{server.port} "
+              f"(max_batch={server.batcher.max_batch}, "
+              f"queue_depth={server.cfg.max_queue_depth}, "
+              f"residency={'paged' if args.paged else 'in_memory'})",
+              flush=True)
+        try:
+            await server._shutdown_ev.wait()
+        except (KeyboardInterrupt, asyncio.CancelledError):
+            pass
+        finally:
+            await server._aclose()
+            if out:
+                dump_artifacts(server, metrics, tracer, out)
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8008)
+    ap.add_argument("--max-batch", type=int, default=3)
+    ap.add_argument("--max-queue", type=int, default=32)
+    ap.add_argument("--max-tokens-cap", type=int, default=64)
+    ap.add_argument("--n-pages", type=int, default=48,
+                    help="KV page pool size (small pools force preemption)")
+    ap.add_argument("--paged", action="store_true",
+                    help="disk+mem weight residency instead of in-memory")
+    ap.add_argument("--ttft-slo-ms", type=float, default=None)
+    ap.add_argument("--tpot-slo-ms", type=float, default=None)
+    args = ap.parse_args()
+    try:
+        asyncio.run(amain(args))
+    except KeyboardInterrupt:
+        pass
+
+
+if __name__ == "__main__":
+    main()

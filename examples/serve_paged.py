@@ -138,8 +138,11 @@ def main():
         dec = eng.batched_decoder(max_seqs=8)
 
         def prefill(req, seq_id):
-            kv.ensure_capacity(seq_id, len(req.prompt))
-            return dec.prefill(req.prompt, seq_id)
+            # req.context, not req.prompt: a preempted request re-prefills
+            # over its delivered tokens too, resuming instead of replaying
+            ctx = req.context
+            kv.ensure_capacity(seq_id, len(ctx))
+            return dec.prefill(ctx, seq_id)
 
         # decode_fn IS the batched decoder — the scheduler owns the
         # kv.seq_lens bookkeeping, so no wrapper is needed

@@ -28,8 +28,8 @@ Everything is zero-cost when disabled: call sites guard on
 the decode hot path.
 """
 
-from repro.obs.metrics import (Counter, Gauge, Histogram,  # noqa: F401
-                               MetricsRegistry)
+from repro.obs.metrics import (PROMETHEUS_CONTENT_TYPE,  # noqa: F401
+                               Counter, Gauge, Histogram, MetricsRegistry)
 from repro.obs.trace import SpanEvent, TraceRecorder  # noqa: F401
 from repro.obs.log import log_event, set_event_registry  # noqa: F401
 from repro.obs.profile import (AttributedOp, OpNode,  # noqa: F401

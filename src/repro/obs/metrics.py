@@ -28,6 +28,9 @@ DEFAULT_BUCKETS = (0.0001, 0.00025, 0.0005, 0.001, 0.0025, 0.005, 0.01,
                    0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0)
 _RESERVOIR = 4096
 
+# what a /metrics endpoint serving render_prometheus() output should set
+PROMETHEUS_CONTENT_TYPE = "text/plain; version=0.0.4; charset=utf-8"
+
 
 class Counter:
     """Monotonically increasing counter.

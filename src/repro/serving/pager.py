@@ -116,22 +116,32 @@ class WeightPager:
             if self.policy == "pin":
                 key = self._clock[-1]  # MRU: evict the newest arrival
             else:  # CLOCK (second-chance)
-                key = self._clock[self._hand % len(self._clock)]
+                self._hand %= len(self._clock)
+                key = self._clock[self._hand]
                 if self._ref.get(key, False):
                     self._ref[key] = False
                     self._hand += 1
                     continue
-            # evict
+            # evict — remove by index and shift the hand with the list, so
+            # the scan resumes at the element that followed the victim
+            # (a plain ``remove`` + reset-to-0 used to skew the
+            # second-chance order whenever the un-normalised hand pointed
+            # past the removed index)
+            idx = self._clock.index(key)
             arr = self._hot.pop(key)
             self._held -= self._nbytes(arr)
-            self._clock.remove(key)
+            self._clock.pop(idx)
             self._ref.pop(key, None)
+            if idx < self._hand:
+                self._hand -= 1
+            if self._clock:
+                self._hand %= len(self._clock)
+            else:
+                self._hand = 0
             self.stats.evictions += 1
             if self.metrics is not None:
                 self.metrics.counter("pager_evictions_total",
                                      "hot-set evictions").inc()
-            if self._hand >= len(self._clock) and self._clock:
-                self._hand = 0
 
     def get(self, name: str) -> jax.Array:
         """Fetch a weight into the hot set (device), paging as needed."""
@@ -144,6 +154,10 @@ class WeightPager:
                                          "hot-set hits").inc()
                 return self._hot[name]
             if name in self._prefetched:
+                # the prefetch thread already accounted these bytes against
+                # the budget (and evicted to make room) — moving the array
+                # from the prefetch buffer to the hot set changes ownership,
+                # not residency, so _held stays put
                 arr = self._prefetched.pop(name)
                 self.stats.prefetch_hits += 1
                 if self.metrics is not None:
@@ -160,12 +174,12 @@ class WeightPager:
                         "pager_bytes_loaded_total",
                         "bytes moved cold→device").inc(self._nbytes(cold))
                 arr = jax.device_put(np.asarray(cold))
-            nb = self._nbytes(arr)
-            self._evict_until(nb)
+                nb = self._nbytes(arr)
+                self._evict_until(nb)
+                self._held += nb
             self._hot[name] = arr
             self._ref[name] = True
             self._clock.append(name)
-            self._held += nb
             self.stats.peak_bytes = max(self.stats.peak_bytes, self._held)
             if self.metrics is not None:
                 self.metrics.gauge("pager_held_bytes",
@@ -176,22 +190,51 @@ class WeightPager:
         return {n: self.get(n) for n in names}
 
     def prefetch(self, names: Iterable[str]) -> threading.Thread:
-        """Async host→device copy of upcoming tables (double buffering)."""
-        names = [n for n in names if n not in self._hot
-                 and n not in self._prefetched]
+        """Async host→device copy of upcoming tables (double buffering).
+
+        Prefetched bytes are accounted against ``budget_bytes`` exactly
+        like hot-set residents (they ARE on device): the thread evicts
+        before each put, and an entry that still cannot fit is dropped
+        rather than silently blowing the budget — the later ``get`` then
+        takes the ordinary miss path.
+        """
+        with self._lock:
+            names = [n for n in names if n not in self._hot
+                     and n not in self._prefetched and n in self._cold]
 
         def run():
             for n in names:
-                cold = self._cold[n]
-                arr = jax.device_put(np.asarray(cold))
                 with self._lock:
+                    # _cold is mutated by add() on other threads (e.g.
+                    # layout/quant conversions registering tables) — never
+                    # read it unlocked
+                    cold = self._cold.get(n)
+                if cold is None:
+                    continue
+                arr = jax.device_put(np.asarray(cold))  # slow copy: no lock
+                nb = self._nbytes(arr)
+                with self._lock:
+                    if n in self._hot or n in self._prefetched:
+                        continue  # raced with a get(): already resident
+                    self._evict_until(nb)
+                    if self._held + nb > self.budget:
+                        # nothing evictable is left (budget full of
+                        # un-evictable prefetches or a huge tensor): drop
+                        # this entry instead of overshooting the budget
+                        continue
                     self._prefetched[n] = arr
+                    self._held += nb
+                    self.stats.peak_bytes = max(self.stats.peak_bytes,
+                                                self._held)
                     self.stats.bytes_loaded += self._nbytes(cold)
                     if self.metrics is not None:
                         self.metrics.counter(
                             "pager_bytes_loaded_total",
                             "bytes moved cold→device").inc(
                                 self._nbytes(cold))
+                        self.metrics.gauge(
+                            "pager_held_bytes",
+                            "device hot-set bytes").set(self._held)
 
         t = threading.Thread(target=run, daemon=True)
         t.start()

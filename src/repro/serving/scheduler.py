@@ -5,6 +5,14 @@ into free batch slots, prefills, then advances all active sequences one
 decode step per tick (iteration-level scheduling).  When the page pool runs
 dry it preempts the youngest sequence (free its pages, re-queue) — the
 standard vLLM-style policy, here over the paper's KV-cache *tables*.
+
+Streaming front ends (``repro.serving.server``) hook in through two
+callbacks — ``on_token(req, tok)`` fires as each token is generated (at
+prefill and after every decode tick) and ``on_done(req)`` when a request
+completes — so tokens leave the batch without polling.  Preemption
+preserves a request's already-generated tokens: re-admission prefills over
+``req.context`` (prompt + delivered tokens) and decoding resumes at the
+next position instead of re-sampling the delivered prefix.
 """
 
 from __future__ import annotations
@@ -23,11 +31,36 @@ class Request:
     prompt: List[int]
     max_new_tokens: int
     arrival_s: float = 0.0
+    # serving SLOs (seconds, relative): used for violation accounting and
+    # to prefer already-past-deadline victims at preemption time
+    ttft_slo_s: Optional[float] = None
+    tpot_slo_s: Optional[float] = None
     # filled by the scheduler:
     generated: List[int] = dataclasses.field(default_factory=list)
     first_token_s: Optional[float] = None
     done_s: Optional[float] = None
     preemptions: int = 0
+
+    @property
+    def context(self) -> List[int]:
+        """Tokens to prefill over on (re-)admission: the prompt plus any
+        tokens generated before a preemption.  Preserving the generated
+        prefix keeps re-admission from re-sampling tokens a streaming
+        consumer has already been sent."""
+        return list(self.prompt) + list(self.generated)
+
+    def deadline_budget_s(self) -> Optional[float]:
+        """Total latency budget implied by the SLOs (None when unset)."""
+        if self.ttft_slo_s is None and self.tpot_slo_s is None:
+            return None
+        budget = self.ttft_slo_s or 0.0
+        if self.tpot_slo_s is not None:
+            budget += self.tpot_slo_s * max(0, self.max_new_tokens - 1)
+        return budget
+
+    def past_deadline(self, now_s: float) -> bool:
+        budget = self.deadline_budget_s()
+        return budget is not None and (now_s - self.arrival_s) > budget
 
 
 @dataclasses.dataclass
@@ -42,17 +75,24 @@ class SchedulerStats:
 class ContinuousBatcher:
     """Iteration-level scheduler.
 
-    ``prefill_fn(request, seq_id)`` must fill the KV cache for the prompt
-    and return the first generated token; ``decode_fn(seq_ids, last_tokens)``
-    advances every active sequence one step and returns the next tokens.
-    ``release_fn(seq_id)``, when given, is called whenever a sequence
-    leaves the batch (completion or preemption) so decode-side state keyed
-    by slot — e.g. a ``BatchedDecoder``'s cache pool (pass ``dec.free``) —
-    is released alongside the KV pages.
+    ``prefill_fn(request, seq_id)`` must fill the KV cache for
+    ``request.context`` (prompt + preserved generated prefix — NOT just the
+    prompt, or a preempted request would re-sample tokens it already
+    delivered) and return the next generated token;
+    ``decode_fn(seq_ids, last_tokens)`` advances every active sequence one
+    step and returns the next tokens.  ``release_fn(seq_id)``, when given,
+    is called whenever a sequence leaves the batch (completion or
+    preemption) so decode-side state keyed by slot — e.g. a
+    ``BatchedDecoder``'s cache pool (pass ``dec.free``) — is released
+    alongside the KV pages.
 
-    The scheduler owns ``kv.seq_lens`` end to end (prompt length at admit,
-    +1 per decode tick): prefill_fn/decode_fn implementations must NOT
-    advance it themselves.  In particular a decode_fn built on
+    ``on_token(req, tok)`` / ``on_done(req)``, when given, are called from
+    the scheduler thread as tokens are generated and requests complete —
+    the streaming handoff for the async HTTP front end.
+
+    The scheduler owns ``kv.seq_lens`` end to end (context length at
+    admit, +1 per decode tick): prefill_fn/decode_fn implementations must
+    NOT advance it themselves.  In particular a decode_fn built on
     ``PagedKVCache.append`` (which also bumps ``seq_lens``) would
     double-advance — write at the pre-tick position and let the scheduler
     account for it.
@@ -60,7 +100,17 @@ class ContinuousBatcher:
 
     def __init__(self, kv: PagedKVCache, prefill_fn: Callable,
                  decode_fn: Callable, max_batch: int,
-                 release_fn: Optional[Callable] = None, metrics=None):
+                 release_fn: Optional[Callable] = None, metrics=None,
+                 on_token: Optional[Callable] = None,
+                 on_done: Optional[Callable] = None):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if max_batch > kv.max_seqs:
+            # an unvalidated max_batch used to surface later as a bare
+            # StopIteration from the free-slot search in _admit
+            raise ValueError(
+                f"max_batch ({max_batch}) exceeds the KV cache's "
+                f"max_seqs ({kv.max_seqs}): the batch can never fill")
         self.kv = kv
         self.prefill_fn = prefill_fn
         self.decode_fn = decode_fn
@@ -70,9 +120,12 @@ class ContinuousBatcher:
         self.active: Dict[int, Request] = {}   # seq_id -> request
         self.finished: List[Request] = []
         self.stats = SchedulerStats()
-        # optional repro.obs.metrics.MetricsRegistry: TTFT / tick-latency
-        # histograms, occupancy gauge, preemption + completion counters
+        # optional repro.obs.metrics.MetricsRegistry: TTFT / TPOT / tick
+        # histograms, occupancy gauge, preemption + completion + SLO
+        # violation counters
         self.metrics = metrics
+        self.on_token = on_token
+        self.on_done = on_done
 
     def _release(self, seq_id: int) -> None:
         self.kv.free_seq(seq_id)
@@ -83,20 +136,60 @@ class ContinuousBatcher:
         req.arrival_s = time.perf_counter()
         self.queue.append(req)
 
+    def _emit(self, req: Request, tok: int) -> None:
+        if self.on_token is not None:
+            self.on_token(req, tok)
+
+    def _finish(self, req: Request, seq_id: int) -> None:
+        req.done_s = time.perf_counter() - req.arrival_s
+        self.finished.append(req)
+        self.stats.completed += 1
+        if self.metrics is not None:
+            self.metrics.counter("serving_completed_total",
+                                 "requests finished").inc()
+            # TPOT over the tokens after the first (matches §4's
+            # definition; a 1-token request has no inter-token gaps)
+            gaps = max(1, len(req.generated) - 1)
+            tpot = (req.done_s - (req.first_token_s or 0.0)) / gaps
+            self.metrics.histogram(
+                "serving_tpot_seconds",
+                "mean time per output token after the first").observe(tpot)
+            if (req.ttft_slo_s is not None and req.first_token_s is not None
+                    and req.first_token_s > req.ttft_slo_s):
+                self.metrics.counter(
+                    "serving_slo_violations_total",
+                    "completions that missed an SLO", kind="ttft").inc()
+            if req.tpot_slo_s is not None and tpot > req.tpot_slo_s:
+                self.metrics.counter(
+                    "serving_slo_violations_total",
+                    "completions that missed an SLO", kind="tpot").inc()
+        self._release(seq_id)
+        if self.on_done is not None:
+            self.on_done(req)
+
     def _admit(self) -> None:
         while self.queue and len(self.active) < self.max_batch:
             req = self.queue[0]
-            need = -(-len(req.prompt) // self.kv.cfg.page_size) + 1
+            # a preempted request re-prefills over its full context
+            # (prompt + preserved generated prefix), so page demand grows
+            # with what it already produced
+            ctx_len = len(req.prompt) + len(req.generated)
+            need = -(-ctx_len // self.kv.cfg.page_size) + 1
             if self.kv.free_page_count() < need:
                 break
+            seq_id = next((i for i in range(self.kv.max_seqs)
+                           if not self.kv._active.get(i, False)), None)
+            if seq_id is None:
+                # every KV slot is occupied (defensive: max_batch is
+                # validated <= max_seqs at construction, but slots may be
+                # held outside this scheduler) — admit once one frees
+                break
             self.queue.popleft()
-            seq_id = next(i for i in range(self.kv.max_seqs)
-                          if not self.kv._active.get(i, False))
             self.kv.allocate_seq(seq_id)
             tok = self.prefill_fn(req, seq_id)
-            # the scheduler owns kv.seq_lens end to end: the prompt length
+            # the scheduler owns kv.seq_lens end to end: the context length
             # here, the per-tick decode increment in tick()
-            self.kv.seq_lens[seq_id] = len(req.prompt)
+            self.kv.seq_lens[seq_id] = ctx_len
             self.stats.prefills += 1
             req.generated.append(tok)
             if req.first_token_s is None:
@@ -108,18 +201,45 @@ class ContinuousBatcher:
                     self.metrics.histogram(
                         "serving_ttft_seconds",
                         "time to first token").observe(req.first_token_s)
+            self._emit(req, tok)
+            if len(req.generated) >= req.max_new_tokens:
+                # the prefill token already met the budget (e.g.
+                # max_new_tokens=1): complete NOW — waiting for a decode
+                # tick would generate one token too many
+                self._finish(req, seq_id)
+                continue
             self.active[seq_id] = req
 
     def _preempt(self, seq_id: int) -> None:
         req = self.active.pop(seq_id)
         self._release(seq_id)
-        req.generated.clear()
+        # req.generated is preserved: those tokens were (possibly) already
+        # streamed to a consumer, so re-admission must resume after them,
+        # not re-sample them
         req.preemptions += 1
         self.stats.preemptions += 1
         if self.metrics is not None:
             self.metrics.counter("serving_preemptions_total",
                                  "sequences preempted for pages").inc()
         self.queue.appendleft(req)
+
+    def _preemption_victim(self, victims: List[int]) -> int:
+        """Choose the sequence to evict when the page pool runs dry.
+
+        Requests already past their SLO deadline go first (their latency
+        target is lost either way; protecting them starves requests that
+        can still meet theirs); ties and the no-deadline case fall back to
+        the youngest-arrival policy.
+        """
+        now = time.perf_counter()
+        expired = [s for s in victims if self.active[s].past_deadline(now)]
+        pool = expired or victims
+        victim = max(pool, key=lambda s: self.active[s].arrival_s)
+        if expired and self.metrics is not None:
+            self.metrics.counter(
+                "serving_deadline_preemptions_total",
+                "preemptions that chose a past-deadline victim").inc()
+        return victim
 
     def tick(self) -> bool:
         """One scheduler iteration. Returns False when fully drained."""
@@ -128,7 +248,7 @@ class ContinuousBatcher:
         if not self.active:
             return bool(self.queue)
 
-        # grow pages for this step; preempt younger sequences until the
+        # grow pages for this step; preempt other sequences until the
         # current one fits (never the current seq itself — its pages are the
         # work we are protecting; stale entries are skipped since a preempted
         # victim may already have left the snapshot)
@@ -146,8 +266,7 @@ class ContinuousBatcher:
                     if not victims:
                         raise RuntimeError(
                             "a single sequence exceeds the page pool")
-                    self._preempt(max(victims,
-                                      key=lambda s: self.active[s].arrival_s))
+                    self._preempt(self._preemption_victim(victims))
 
         seq_ids = sorted(self.active)
         last = [self.active[s].generated[-1] for s in seq_ids]
@@ -174,14 +293,9 @@ class ContinuousBatcher:
         for seq_id, tok in zip(seq_ids, next_tokens):
             req = self.active[seq_id]
             req.generated.append(int(tok))
+            self._emit(req, int(tok))
             if len(req.generated) >= req.max_new_tokens:
-                req.done_s = time.perf_counter() - req.arrival_s
-                self.finished.append(req)
-                self.stats.completed += 1
-                if self.metrics is not None:
-                    self.metrics.counter("serving_completed_total",
-                                         "requests finished").inc()
-                self._release(seq_id)
+                self._finish(req, seq_id)
                 del self.active[seq_id]
         return bool(self.active or self.queue)
 

@@ -42,6 +42,60 @@ class TestPager:
         assert isinstance(pager._cold["w"], np.memmap)
         np.testing.assert_array_equal(np.asarray(pager.get("w")), x)
 
+    def test_prefetch_accounts_against_budget(self):
+        """Regression (ISSUE 8): prefetched arrays live on device, so they
+        must count toward the budget — aggressive prefetch used to hold
+        budget + prefetched bytes silently."""
+        pager = WeightPager(budget_bytes=2 * 400)  # room for 2 × 100 f32
+        for i in range(3):
+            pager.add(f"w{i}", np.full(100, i, np.float32))
+        pager.prefetch(["w0", "w1", "w2"]).join()
+        # the third entry is dropped rather than blowing the budget
+        assert pager.held_bytes <= 2 * 400
+        assert len(pager._prefetched) == 2
+        # consuming a prefetched entry transfers ownership, not bytes
+        pager.get("w0")
+        assert pager.held_bytes <= 2 * 400
+        assert pager.stats.prefetch_hits == 1
+        # the dropped entry pages in through the ordinary miss path
+        np.testing.assert_array_equal(np.asarray(pager.get("w2")),
+                                      np.full(100, 2, np.float32))
+        assert pager.stats.misses == 1
+        assert pager.held_bytes <= 2 * 400
+
+    def test_prefetch_evicts_hot_entries_to_fit(self):
+        pager = WeightPager(budget_bytes=2 * 400)
+        for k in ("a", "b", "c"):
+            pager.add(k, np.full(100, ord(k), np.float32))
+        pager.get("a")
+        pager.get("b")
+        assert pager.held_bytes == 2 * 400
+        pager.prefetch(["c"]).join()
+        assert "c" in pager._prefetched
+        assert pager.held_bytes <= 2 * 400
+        assert pager.stats.evictions >= 1
+
+    def test_clock_hand_keeps_scan_position_after_eviction(self):
+        """Regression (ISSUE 8): ``_clock.remove`` + reset-to-0 used to
+        lose the CLOCK hand's scan position whenever the un-normalised
+        hand pointed past the removed index, spuriously burning reference
+        bits — a referenced entry could be evicted ahead of stale ones."""
+        pager = WeightPager(budget_bytes=4 * 400, policy="clock")
+        for k in "abcdefg":
+            pager.add(k, np.full(100, ord(k), np.float32))
+        for k in "abcd":
+            pager.get(k)
+        # refs as a scan pass might leave them; hand un-normalised from
+        # second-chance skips (it only ever grew before the fix)
+        pager._ref.update({"a": True, "b": False, "c": True, "d": False})
+        pager._hand = 5
+        for k in "efg":
+            pager.get(k)
+        # the unreferenced entries must go first; the referenced "a"
+        # survives the three evictions
+        assert "a" in pager._hot
+        assert not {"b", "c", "d"} & set(pager._hot)
+
 
 class TestPagedKV:
     def _cache(self):
@@ -114,19 +168,23 @@ class TestPagedKV:
 
 
 class TestScheduler:
-    def _mk(self, n_pages=16, max_batch=3):
+    def _mk(self, n_pages=16, max_batch=3, **kwargs):
         cfg = PagedKVConfig(n_layers=1, n_kv=1, head_dim=4, page_size=4,
                             n_pages=n_pages, max_pages_per_seq=8)
         kv = PagedKVCache(cfg, max_seqs=8)
 
         def prefill(req, seq_id):
-            kv.ensure_capacity(seq_id, len(req.prompt))
-            return req.prompt[-1] + 1
+            # prefill over the full context (prompt + preserved generated
+            # prefix) — the resume-not-replay protocol
+            ctx = req.context
+            kv.ensure_capacity(seq_id, len(ctx))
+            return ctx[-1] + 1
 
         def decode(seq_ids, last):
             return [t + 1 for t in last]
 
-        return ContinuousBatcher(kv, prefill, decode, max_batch=max_batch), kv
+        return (ContinuousBatcher(kv, prefill, decode, max_batch=max_batch,
+                                  **kwargs), kv)
 
     def test_all_requests_complete(self):
         sched, kv = self._mk()
@@ -184,6 +242,110 @@ class TestScheduler:
         for req in done:
             assert req.first_token_s == first_seen[req.rid]
 
+    def test_max_new_tokens_one_completes_at_prefill(self):
+        """Regression (ISSUE 8): the prefill token already satisfies
+        ``max_new_tokens=1`` — waiting for a decode tick used to generate
+        a second token."""
+        sched, kv = self._mk()
+        sched.submit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=1))
+        done = sched.run()
+        assert len(done) == 1
+        assert done[0].generated == [4]          # exactly ONE token
+        assert sched.stats.decode_steps == 0     # no decode tick needed
+        assert kv.free_page_count() == kv.cfg.n_pages  # released at admit
+
+    def test_one_token_request_rides_along_with_longer_ones(self):
+        sched, kv = self._mk()
+        sched.submit(Request(rid=0, prompt=[1, 2], max_new_tokens=1))
+        sched.submit(Request(rid=1, prompt=[1, 2], max_new_tokens=4))
+        done = {r.rid: r for r in sched.run()}
+        assert done[0].generated == [3]
+        assert done[1].generated == [3, 4, 5, 6]
+        assert kv.free_page_count() == kv.cfg.n_pages
+
+    def test_preemption_resumes_without_replaying_tokens(self):
+        """Regression (ISSUE 8): preemption used to clear ``generated``
+        and re-sample from the prompt — a streaming consumer saw the
+        prefix re-generated.  The scheduler now preserves the delivered
+        prefix and resumes decode after it: the on_token stream must be
+        exactly the final generation, no token index emitted twice."""
+        streamed = {}
+        sched, kv = self._mk(
+            n_pages=6, max_batch=3,
+            on_token=lambda req, tok: streamed.setdefault(req.rid,
+                                                          []).append(tok))
+        for r in range(3):
+            sched.submit(Request(rid=r, prompt=[1, 2, 3, 4],
+                                 max_new_tokens=8))
+        done = sched.run()
+        assert sched.stats.preemptions > 0
+        assert any(r.preemptions > 0 for r in done)
+        for req in done:
+            # exact resume: consecutive tokens, exactly max_new of them
+            assert req.generated == list(range(5, 13))
+            # the stream matches the final generation 1:1 — nothing was
+            # re-emitted after a preemption round-trip
+            assert streamed[req.rid] == req.generated
+
+    def test_on_done_fires_once_per_request(self):
+        finished = []
+        sched, _ = self._mk(on_done=lambda req: finished.append(req.rid))
+        for r in range(3):
+            sched.submit(Request(rid=r, prompt=[1], max_new_tokens=2))
+        sched.run()
+        assert sorted(finished) == [0, 1, 2]
+
+    def test_max_batch_above_kv_slots_rejected_at_construction(self):
+        """Regression (ISSUE 8): this used to surface later as a bare
+        StopIteration from the free-slot search in _admit."""
+        cfg = PagedKVConfig(n_layers=1, n_kv=1, head_dim=4, page_size=4,
+                            n_pages=16, max_pages_per_seq=8)
+        kv = PagedKVCache(cfg, max_seqs=2)
+        with pytest.raises(ValueError, match="max_seqs"):
+            ContinuousBatcher(kv, lambda r, s: 0, lambda i, t: t,
+                              max_batch=3)
+
+    def test_admit_falls_back_when_slots_held_externally(self):
+        """Even with max_batch == max_seqs, a KV slot held outside the
+        scheduler must stall admission, not crash it."""
+        cfg = PagedKVConfig(n_layers=1, n_kv=1, head_dim=4, page_size=4,
+                            n_pages=16, max_pages_per_seq=8)
+        kv = PagedKVCache(cfg, max_seqs=2)
+        kv.allocate_seq(1)  # held by someone else (e.g. a pinned session)
+
+        def prefill(req, seq_id):
+            ctx = req.context
+            kv.ensure_capacity(seq_id, len(ctx))
+            return ctx[-1] + 1
+
+        sched = ContinuousBatcher(kv, prefill,
+                                  lambda ids, last: [t + 1 for t in last],
+                                  max_batch=2)
+        for r in range(2):
+            sched.submit(Request(rid=r, prompt=[1, 2], max_new_tokens=3))
+        done = sched.run()  # serialises through the single free slot
+        assert len(done) == 2
+        assert all(r.generated == [3, 4, 5] for r in done)
+
+    def test_deadline_expired_victim_preempted_first(self):
+        """SLO-aware preemption: the page-pressure victim is the request
+        already past its deadline, not the youngest arrival."""
+        sched, kv = self._mk(n_pages=6, max_batch=3)
+        # three requests; rid 1 carries an SLO it has already blown by
+        # the time pressure hits (deadline in the past)
+        reqs = [Request(rid=r, prompt=[1, 2, 3, 4], max_new_tokens=8)
+                for r in range(3)]
+        reqs[1].ttft_slo_s = 1e-9      # expired ~immediately
+        reqs[1].tpot_slo_s = 1e-9
+        for r in reqs:
+            sched.submit(r)
+        done = {r.rid: r for r in sched.run()}
+        assert sched.stats.preemptions > 0
+        # the expired request absorbed the (first) preemptions
+        assert done[1].preemptions > 0
+        # and still completed correctly (resume semantics)
+        assert done[1].generated == list(range(5, 13))
+
 
 class TestBatchedRelationalDecode:
     """The tentpole: ONE seq-keyed relational plan advances the whole batch
@@ -207,8 +369,9 @@ class TestBatchedRelationalDecode:
         kv = PagedKVCache(cfg, max_seqs=4)
 
         def prefill(req, seq_id):
-            kv.ensure_capacity(seq_id, len(req.prompt))
-            return dec.prefill(req.prompt, seq_id)
+            ctx = req.context
+            kv.ensure_capacity(seq_id, len(ctx))
+            return dec.prefill(ctx, seq_id)
 
         sched = ContinuousBatcher(kv, prefill, dec.decode,
                                   max_batch=max_batch, release_fn=dec.free)
@@ -264,8 +427,9 @@ class TestBatchedRelationalDecode:
         kv = PagedKVCache(cfg, max_seqs=4)
 
         def prefill(req, seq_id):
-            kv.ensure_capacity(seq_id, len(req.prompt))
-            return dec.prefill(req.prompt, seq_id)
+            ctx = req.context
+            kv.ensure_capacity(seq_id, len(ctx))
+            return dec.prefill(ctx, seq_id)
 
         sched = ContinuousBatcher(kv, prefill, dec.decode, max_batch=3,
                                   release_fn=dec.free)
