@@ -17,6 +17,7 @@ precision-planning calibration loop.
 from __future__ import annotations
 
 import json
+import tempfile
 import time
 
 import numpy as np
@@ -35,6 +36,10 @@ PROMPT = 8
 STEPS = 8
 REPS = 3
 PRECISIONS = ("f32", "int8", "nf4")
+# disk-backed cold-cache mode: the pager budget is this fraction of the
+# precision's resident weight bytes, so ~every tick streams most of the
+# working set from the disk tier (the byte_weight measurement)
+COLD_BUDGET_DIV = 4
 OUT_JSON = "BENCH_quant.json"
 
 
@@ -148,6 +153,22 @@ def _time_engine(engine: RelationalEngine, prompt):
     return float(np.median(ttfts)), float(np.median(tpots))
 
 
+def _time_cold(prec, params, prompt, max_len, resident_bytes):
+    """Disk-backed cold-cache timing: a paged engine whose memmap'd cold
+    tier holds the weights and whose budget admits only a sliver of the
+    working set, so every tick re-streams most stored bytes.  The f32 /
+    int8 / nf4 spread in these times is byte-traffic-dominated — the
+    measurement ``planner/calibrate.py`` fits ``byte_weight`` from."""
+    with tempfile.TemporaryDirectory() as td:
+        eng = RelationalEngine(SPEC, params, chunk_size=CHUNK_SIZE,
+                               max_len=max_len, precision=prec,
+                               residency="paged", disk_dir=td,
+                               budget_bytes=max(1, resident_bytes
+                                                // COLD_BUDGET_DIV),
+                               pager_policy="clock")
+        return _time_engine(eng, prompt)
+
+
 def run(report):
     params = init_llama_params(SPEC, seed=0)
     prompt = [int(t) for t in
@@ -162,13 +183,19 @@ def run(report):
         ttft, tpot = _time_engine(eng, prompt)
         err = (0.0 if prec == "f32" else
                logit_error_between(eng, engines["f32"], prompt))
+        resident = resident_weight_bytes(eng)
+        cold_ttft, cold_tpot = _time_cold(prec, params, prompt, max_len,
+                                          resident)
         rec = {
             "precision": prec,
-            "resident_weight_bytes": resident_weight_bytes(eng),
+            "resident_weight_bytes": resident,
             "quantised_tables": len(eng.table_precision_choices),
             "dequant_cost_elements": dequant_cost_elements(eng),
             "prefill_us": ttft * 1e6,
             "decode_us": tpot * 1e6,
+            "prefill_cold_us": cold_ttft * 1e6,
+            "decode_cold_us": cold_tpot * 1e6,
+            "cold_budget_bytes": max(1, resident // COLD_BUDGET_DIV),
             "max_logit_err": float(err),
         }
         traced = _traced_class_times(eng, params)
@@ -185,6 +212,8 @@ def run(report):
                f"reduction={row['bytes_reduction_vs_f32']:.2f}x;"
                f"slowdown={row['decode_slowdown_vs_f32']:.2f};"
                f"logit_err={row['max_logit_err']:.4f}")
+        report(f"quant/{row['precision']}/cold", row["decode_cold_us"],
+               f"cold_prefill={row['prefill_cold_us']:.1f}us")
     payload = {
         "spec": {"vocab": SPEC.vocab, "d_model": SPEC.d_model,
                  "n_layers": SPEC.n_layers, "n_heads": SPEC.n_heads,

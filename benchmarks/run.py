@@ -13,8 +13,9 @@ import traceback
 
 from benchmarks import (attn_layout_bench, batched_decode_bench,
                         chunk_sweep_bench, fig2_memory, fig3_capped,
-                        fig4_methods, quant_bench, roofline_bench,
-                        row2col_bench, shard_bench, tab1_chunk_size)
+                        fig4_methods, prefix_cache_bench, quant_bench,
+                        roofline_bench, row2col_bench, shard_bench,
+                        tab1_chunk_size)
 
 BENCHES = {
     "tab1": tab1_chunk_size,
@@ -26,6 +27,7 @@ BENCHES = {
     "attn_layout": attn_layout_bench,
     "chunk_sweep": chunk_sweep_bench,
     "batched_decode": batched_decode_bench,
+    "prefix_cache": prefix_cache_bench,
     "quant": quant_bench,
     "shard": shard_bench,
 }

@@ -35,10 +35,20 @@ async def amain(args) -> int:
     rng = random.Random(args.seed)
     sem = asyncio.Semaphore(args.concurrency)
     vocab = args.vocab
+    # the chatbot workload shape: --shared-prefix-frac of the requests
+    # open with the same "system prompt" (long enough to span the
+    # server's default prefix-cache hash block) before a short unique
+    # tail, so the server's prefix cache can serve the shared part
+    shared_prefix = [rng.randrange(vocab)
+                     for _ in range(args.shared_prefix_len)]
 
     async def one(i):
-        prompt = [rng.randrange(vocab) for _ in
-                  range(rng.randrange(4, 9))]
+        if rng.random() < args.shared_prefix_frac:
+            prompt = shared_prefix + [rng.randrange(vocab) for _ in
+                                      range(rng.randrange(2, 5))]
+        else:
+            prompt = [rng.randrange(vocab) for _ in
+                      range(rng.randrange(4, 9))]
         payload = {"model": "transql-tiny", "prompt": prompt,
                    "max_tokens": args.max_tokens}
         async with sem:
@@ -94,6 +104,12 @@ def main():
     ap.add_argument("--max-tokens", type=int, default=6)
     ap.add_argument("--vocab", type=int, default=512)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--shared-prefix-frac", type=float, default=0.0,
+                    help="fraction of requests sharing a fixed prompt "
+                         "prefix (prefix-cache workload shape)")
+    ap.add_argument("--shared-prefix-len", type=int, default=16,
+                    help="length of the shared prefix in tokens (>= the "
+                         "server's prefix-cache hash block to be hittable)")
     ap.add_argument("--ready-s", type=float, default=120.0,
                     help="seconds to wait for the server to come up")
     ap.add_argument("--scrape-metrics", default=None,

@@ -46,11 +46,21 @@ class LlamaSpec:
 
 
 def build_prefill_graph(spec: LlamaSpec, seq_len: int,
-                        cache_len: Optional[int] = None) -> Graph:
+                        cache_len: Optional[int] = None,
+                        suffix: bool = False) -> Graph:
     """Prompt-processing graph: causal self-attention over the full prompt,
-    writing each layer's K/V into cache tables for subsequent decode."""
+    writing each layer's K/V into cache tables for subsequent decode.
+
+    ``suffix=True`` builds the *suffix* prefill variant used by the prefix
+    cache: the ``seq_len`` new tokens start at runtime position
+    ``:cache_position`` over caches already holding that many valid rows
+    (a shared prefix segment), so the causal mask admits cached positions
+    ``tp <= t + :cache_position`` instead of the static ``tp <= t``.  The
+    cache append already rides ``:cache_position``, so one compiled suffix
+    plan per suffix length serves every prefix boundary."""
     return _build_graph(spec, new_tokens=seq_len,
-                        cache_len=cache_len or seq_len, is_prefill=True)
+                        cache_len=cache_len or seq_len, is_prefill=True,
+                        suffix=suffix)
 
 
 def build_decode_graph(spec: LlamaSpec, cache_len: int,
@@ -70,8 +80,10 @@ def build_decode_graph(spec: LlamaSpec, cache_len: int,
 
 
 def _build_graph(spec: LlamaSpec, new_tokens: int, cache_len: int,
-                 is_prefill: bool, batch: int = 0) -> Graph:
-    g = Graph(name=("llama_prefill" if is_prefill
+                 is_prefill: bool, batch: int = 0,
+                 suffix: bool = False) -> Graph:
+    g = Graph(name=(("llama_prefill_sfx" if suffix else "llama_prefill")
+                    if is_prefill
                     else (f"llama_decode_b{batch}" if batch
                           else "llama_decode")))
     T, d, dh = new_tokens, spec.d_model, spec.head_dim
@@ -126,7 +138,12 @@ def _build_graph(spec: LlamaSpec, new_tokens: int, cache_len: int,
         v = g.add("concat_rows", [f"v_cache_L{L}", v], **cache_attrs)
 
         s = g.add("attn_scores", [q, k], n_heads=H, n_kv=Hkv, head_dim=dh)
-        if is_prefill:
+        if is_prefill and suffix:
+            # suffix prefill: the T new tokens sit at absolute positions
+            # :cache_position .. :cache_position+T-1, attending to every
+            # cached row of the shared prefix plus their own causal window
+            s = g.add("causal_mask", [s], offset_name="cache_position")
+        elif is_prefill:
             s = g.add("causal_mask", [s], offset=0)
         elif batch:
             # batched decode: sequence s attends to cached positions ≤ its

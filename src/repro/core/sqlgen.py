@@ -570,3 +570,66 @@ def generate_sql_with_provenance(
     return SQLGenerator(pipeline, dialect=dialect).generate_with_provenance(
         include_ddl, include_conversion=include_conversion,
         step_create=step_create)
+
+
+# -- prefix-cache segment binding (serving.kvcache.PrefixCache) --------------
+
+
+def _segment_parts(schema: RelSchema, seq_id: int,
+                   seq_key: str) -> Tuple[str, str]:
+    """(seq-remapped SELECT list, plain column list) for a batched cache
+    schema — the segment table carries the same columns minus ``seq``."""
+    names = list(schema.key_names) + list(schema.col_names)
+    remapped = ", ".join(f"{seq_id} AS {_sn(seq_key)}" if n == seq_key
+                         else _sn(n) for n in names)
+    collist = ", ".join(_sn(n) for n in names)
+    return remapped, collist
+
+
+def segment_remap_view_sql(view_name: str, cache_table: str,
+                           segment_table: str, seq_id: int, boundary: int,
+                           schema: RelSchema, seq_key: str = "seq",
+                           pos_key: str = "tp",
+                           dialect: str = "duckdb") -> str:
+    """Share-mode segment bind as SQL: the sequence's cache view is the
+    shared segment's rows ``[0, boundary)`` re-keyed to this ``seq``,
+    UNION ALL the slot's own rows at and past the boundary.  This is the
+    relational statement :meth:`BatchedCacheTables.gather_views` computes
+    on the JAX side for a bound slot — zero rows are copied; the view is
+    the binding.
+
+    ``schema`` is the *batched* cache table's schema (leading ``seq``
+    key); the segment table carries the same columns minus ``seq``.
+    Plain ANSI SQL — both dialects emit identical text (asserted by the
+    e2e golden test).
+    """
+    assert dialect in ("duckdb", "ansi")
+    remapped, collist = _segment_parts(schema, seq_id, seq_key)
+    return (
+        f"CREATE OR REPLACE VIEW {_sn(view_name)} AS\n"
+        f"-- prefix-segment remap: shared rows [0, {boundary}) re-keyed "
+        f"to {_sn(seq_key)} = {seq_id}\n"
+        f"SELECT {remapped} FROM {_sn(segment_table)} "
+        f"WHERE {_sn(pos_key)} < {boundary}\n"
+        f"UNION ALL\n"
+        f"SELECT {collist} FROM {_sn(cache_table)} "
+        f"WHERE {_sn(seq_key)} = {seq_id} "
+        f"AND {_sn(pos_key)} >= {boundary};")
+
+
+def segment_copy_sql(cache_table: str, segment_table: str, seq_id: int,
+                     boundary: int, schema: RelSchema,
+                     seq_key: str = "seq", pos_key: str = "tp",
+                     dialect: str = "duckdb") -> str:
+    """Copy-mode segment bind as SQL: bulk-copy the shared rows into the
+    sequence's own slot (``INSERT ... SELECT``) — what the planner picks
+    when pricing the remap view's per-read UNION as dearer than one
+    write (:meth:`BatchedDecoder._resolve_bind`).  Counterpart of
+    :meth:`BatchedCacheTables.write_prefill`'s full-slot device copy."""
+    assert dialect in ("duckdb", "ansi")
+    remapped, collist = _segment_parts(schema, seq_id, seq_key)
+    return (
+        f"-- prefix-segment bulk copy (copy-mode bind)\n"
+        f"INSERT INTO {_sn(cache_table)} ({collist})\n"
+        f"SELECT {remapped} FROM {_sn(segment_table)} "
+        f"WHERE {_sn(pos_key)} < {boundary};")

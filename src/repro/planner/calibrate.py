@@ -267,6 +267,9 @@ def matmul_points_from_payload(payload: Dict) -> List[Tuple[float, float,
 
 def fit_quant_weights(points: Sequence[Tuple[float, float, float, float]],
                       dequant_times_us: Optional[Sequence[Optional[float]]]
+                      = None,
+                      cold_points: Optional[Sequence[Tuple[str, float,
+                                                           float, float]]]
                       = None
                       ) -> Tuple[float, float, float, float, float]:
     """Fit ``time ≈ s·feat + s·dq·dequant_elems + s·bw·bytes + c0``.
@@ -294,6 +297,20 @@ def fit_quant_weights(points: Sequence[Tuple[float, float, float, float]],
     precision, so the joint fit cannot resolve the dequant direction,
     but the profiler's per-operator attribution measures it in
     isolation.
+
+    ``cold_points``: (kind, bytes, dequant_elems, time_us) quads from
+    the disk-backed cold-cache timings (``{prefill,decode}_cold_us`` in
+    BENCH_quant) — the counterpart measurement for the *byte* direction.
+    Warm totals barely move with stored bytes (everything is resident),
+    so the joint fit's byte slope is noise-dominated; the cold runs
+    re-stream the working set every tick, making byte traffic the
+    leading term.  The byte slope is fitted across precisions with one
+    shared slope, a dequant-elements nuisance column (the reload path
+    re-dequantises what it re-streams, so quantised cold runs pay extra
+    time that is *not* byte traffic — without the column it confounds
+    the byte slope negative), and a per-kind intercept (row features are
+    near-constant within a kind).  A positive fitted slope overrides the
+    joint fit's ``byte_weight``.
     """
     base = CostParams()
     s_d_traced: Optional[float] = None
@@ -321,16 +338,35 @@ def fit_quant_weights(points: Sequence[Tuple[float, float, float, float]],
                       kept="dequant_weight,byte_weight")
         return base.dequant_weight, base.byte_weight, max(s_r, 1e-9), \
             c0, resid
+    bw = max(s_b / s_r, 0.0)
+    if cold_points:
+        kinds = sorted({k for k, *_ in cold_points})
+        if len(cold_points) >= len(kinds) + 2:
+            A2 = np.array(
+                [[b, d] + [1.0 if k == kk else 0.0 for kk in kinds]
+                 for k, b, d, _ in cold_points], dtype=np.float64)
+            t2 = np.array([tt for *_, tt in cold_points],
+                          dtype=np.float64)
+            x2, _ = _lstsq(A2, t2)
+            if x2[0] > 0:
+                bw = x2[0] / s_r
+            else:
+                _log_fallback("non_positive_cold_byte_slope", fit="quant",
+                              byte_slope=float(x2[0]),
+                              n_cold=len(cold_points))
+        else:
+            _log_fallback("too_few_cold_points", fit="quant",
+                          n_cold=len(cold_points), need=len(kinds) + 2)
     if s_d_traced is not None:
         # the traced operator slope pins the dequant direction; the
         # row/byte/intercept directions still come from the totals
-        return s_d_traced / s_r, max(s_b / s_r, 0.0), s_r, c0, resid
+        return s_d_traced / s_r, bw, s_r, c0, resid
     if s_d <= 0:
         _log_fallback("non_positive_dequant_slope", fit="quant",
                       dequant_slope=float(s_d), n_points=len(points),
                       kept="dequant_weight")
     dq = base.dequant_weight if s_d <= 0 else s_d / s_r
-    return dq, max(s_b / s_r, 0.0), s_r, c0, resid
+    return dq, bw, s_r, c0, resid
 
 
 def quant_points_from_payload(payload: Dict,
@@ -390,6 +426,26 @@ def dequant_times_from_payload(payload: Dict
             else:
                 times.append(None)
     return times if any_traced else None
+
+
+def cold_points_from_payload(payload: Dict
+                             ) -> List[Tuple[str, float, float, float]]:
+    """(kind, bytes, dequant_elems, time_us) quads from the disk-backed
+    cold-cache timings (``{prefill,decode}_cold_us``) in a BENCH_quant
+    payload — the byte-direction measurement :func:`fit_quant_weights`
+    fits the cold byte slope from.  Empty for payloads predating the
+    cold mode.
+    """
+    points = []
+    for rec in payload["results"]:
+        for kind in ("prefill", "decode"):
+            key = f"{kind}_cold_us"
+            if key in rec:
+                points.append((kind, float(rec["resident_weight_bytes"]),
+                               float(rec.get("dequant_cost_elements",
+                                             0.0)),
+                               float(rec[key])))
+    return points
 
 
 def cache_points_from_payload(payload: Dict) -> List[Tuple[float, float,
@@ -484,9 +540,11 @@ def fit_cost_params(row2col_path: Optional[str] = ROW2COL_BENCH,
         qpoints = quant_points_from_payload(
             qpayload, params=dataclasses.replace(base, group_weight=gw))
         qtimes = dequant_times_from_payload(qpayload)
+        qcold = cold_points_from_payload(qpayload)
         if len(qpoints) >= 5:  # 4 unknowns: need an overdetermined system
-            dq, bw, _, _, _ = fit_quant_weights(qpoints, qtimes)
-            n += len(qpoints)
+            dq, bw, _, _, _ = fit_quant_weights(qpoints, qtimes,
+                                                cold_points=qcold or None)
+            n += len(qpoints) + len(qcold)
         else:
             warnings.warn(
                 f"{quant_path!r} holds only {len(qpoints)} measurement(s) "

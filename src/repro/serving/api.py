@@ -135,14 +135,19 @@ class CompletionRequest:
                    echo_messages=msgs)
 
 
-def _usage(prompt_tokens: int, completion_tokens: int) -> Dict:
+def _usage(prompt_tokens: int, completion_tokens: int,
+           cached_tokens: int = 0) -> Dict:
+    # prompt_tokens_details.cached_tokens is the OpenAI wire field for
+    # prompt tokens served from a prefix cache instead of recomputed
     return {"prompt_tokens": prompt_tokens,
             "completion_tokens": completion_tokens,
-            "total_tokens": prompt_tokens + completion_tokens}
+            "total_tokens": prompt_tokens + completion_tokens,
+            "prompt_tokens_details": {"cached_tokens": int(cached_tokens)}}
 
 
 def completion_response(rid: int, model: str, req: CompletionRequest,
-                        tokens: List[int], tokenizer: ToyTokenizer) -> Dict:
+                        tokens: List[int], tokenizer: ToyTokenizer,
+                        cached_tokens: int = 0) -> Dict:
     if req.is_chat:
         return {
             "id": f"chatcmpl-{rid}", "object": "chat.completion",
@@ -152,13 +157,13 @@ def completion_response(rid: int, model: str, req: CompletionRequest,
                                      "content": tokenizer.decode(tokens)},
                          "token_ids": tokens,
                          "finish_reason": "length"}],
-            "usage": _usage(len(req.prompt), len(tokens))}
+            "usage": _usage(len(req.prompt), len(tokens), cached_tokens)}
     return {
         "id": f"cmpl-{rid}", "object": "text_completion",
         "created": int(time.time()), "model": model,
         "choices": [{"index": 0, "text": tokenizer.decode(tokens),
                      "token_ids": tokens, "finish_reason": "length"}],
-        "usage": _usage(len(req.prompt), len(tokens))}
+        "usage": _usage(len(req.prompt), len(tokens), cached_tokens)}
 
 
 def stream_chunk(rid: int, model: str, req: CompletionRequest,

@@ -410,11 +410,15 @@ class RelationalEngine:
                 "compiled-plan cache lookups", cache=cache,
                 outcome="hit" if hit else "miss").inc()
 
-    def _prefill_pipe(self, T: int):
-        # plans are cached per (length, shard count): a sharded engine's
-        # plans carry per-shard plan copies and a combine decision, so
-        # they are not interchangeable with unsharded ones
-        key = (T, self.shards)
+    def _prefill_pipe(self, T: int, suffix: bool = False):
+        # plans are cached per (length, shard count, suffix?): a sharded
+        # engine's plans carry per-shard plan copies and a combine
+        # decision, so they are not interchangeable with unsharded ones;
+        # suffix plans ride the runtime :cache_position for both the
+        # append offset AND the causal mask, so ONE suffix plan per
+        # suffix length serves every prefix boundary — the boundary is a
+        # bound parameter, not part of the plan-cache key
+        key = (T, self.shards, suffix)
         self._plan_cache_event("prefill", key in self._prefill_pipes)
         if key not in self._prefill_pipes:
             # prefill shares the session environment with decode: it draws
@@ -422,7 +426,8 @@ class RelationalEngine:
             # per-table chunk sizes (both pipelines scan the same physical
             # tables) — all enforced by the shared compile path
             pipe = self._compile_pipe(
-                lg.build_prefill_graph(self.spec, T, cache_len=self.max_len),
+                lg.build_prefill_graph(self.spec, T, cache_len=self.max_len,
+                                       suffix=suffix),
                 cache_mode=self._prefill_cache_mode)
             self._register_layouts(pipe)
             self._register_shards(pipe)
@@ -508,6 +513,45 @@ class RelationalEngine:
         return {"env": env, "pos": T, "tok": int(np.argmax(logits)),
                 "logits": logits}
 
+    def start_suffix_session(self, prompt: List[int], boundary: int,
+                             cache_tables: Dict[str, object]):
+        """Prefill only ``prompt[boundary:]`` over caches already holding
+        the prefix ``prompt[:boundary]`` (a shared prefix segment).
+
+        ``cache_tables`` supplies the segment's ``k_cache_L*``/
+        ``v_cache_L*`` relations; they are shared by reference — the
+        pipeline's appends functionally update them into fresh arrays, so
+        the segment is never mutated (copy-on-write past the boundary).
+        RoPE frequencies and the causal mask both place the suffix at
+        absolute positions ``boundary .. len(prompt)-1``; the boundary is
+        bound at runtime (``:cache_position``), so every boundary shares
+        one compiled plan per suffix length.
+        """
+        prompt = list(prompt)
+        if boundary <= 0:
+            return self.start_session(prompt)
+        T = len(prompt) - boundary
+        if T <= 0:
+            raise ValueError(
+                f"suffix prefill needs >= 1 new token: prompt length "
+                f"{len(prompt)} <= boundary {boundary}")
+        env = self._weights_env()
+        env.update(cache_tables)
+        env["token_ids"] = lg.token_table(
+            np.asarray(prompt[boundary:], np.int32))
+        env["freq_each_token"] = lg.rope_freq_table(
+            np.arange(boundary, len(prompt)), self.spec.head_dim,
+            self.spec.rope_theta)
+        if self.pager is not None:
+            self.pager.prefetch(["vocabulary"])
+        outs, env = run_pipeline(self._prefill_pipe(T, suffix=True), env,
+                                 scalars={"cache_position": boundary},
+                                 tracer=self.tracer,
+                                 shard_runner=self._shard_runner)
+        logits = self._final_logits(outs["logits"])
+        return {"env": env, "pos": len(prompt),
+                "tok": int(np.argmax(logits)), "logits": logits}
+
     def prefill_logits(self, prompt: List[int]) -> np.ndarray:
         """Final-position prefill logits (the accuracy gate's probe)."""
         return self.start_session(list(prompt))["logits"]
@@ -552,12 +596,23 @@ class RelationalEngine:
 
     # -- batched serving API (one relational plan per scheduler tick) ---------
 
-    def batched_decoder(self, max_seqs: int) -> "BatchedDecoder":
+    def batched_decoder(self, max_seqs: int, prefix_block: int = 16,
+                        prefix_bind: str = "auto",
+                        prefix_cache_bytes: Optional[int] = None
+                        ) -> "BatchedDecoder":
         """Seq-slotted decode front-end: ``prefill``/``decode`` callbacks
         for :class:`~repro.serving.scheduler.ContinuousBatcher`, with
         ``decode`` advancing ALL active sequences in ONE ``run_pipeline``
-        call on the batched plan."""
-        return BatchedDecoder(self, max_seqs)
+        call on the batched plan.
+
+        ``prefix_block`` sizes the prefix cache's content-hash blocks
+        (0 disables prefix caching); ``prefix_bind`` picks the segment
+        bind mode (``"copy"`` / ``"share"`` / ``"auto"``);
+        ``prefix_cache_bytes`` bounds the segment store (defaults to the
+        engine's paged residency budget when one is set)."""
+        return BatchedDecoder(self, max_seqs, prefix_block=prefix_block,
+                              prefix_bind=prefix_bind,
+                              prefix_cache_bytes=prefix_cache_bytes)
 
 
 class BatchedDecoder:
@@ -577,12 +632,27 @@ class BatchedDecoder:
     back identical values, so padding is semantically free.
     """
 
-    def __init__(self, engine: RelationalEngine, max_seqs: int):
-        from repro.serving.kvcache import BatchedCacheTables
+    BIND_MODES = ("auto", "copy", "share")
+
+    def __init__(self, engine: RelationalEngine, max_seqs: int,
+                 prefix_block: int = 16, prefix_bind: str = "auto",
+                 prefix_cache_bytes: Optional[int] = None):
+        from repro.serving.kvcache import BatchedCacheTables, PrefixCache
+        assert prefix_bind in self.BIND_MODES, \
+            f"prefix_bind must be one of {self.BIND_MODES}"
         self.engine = engine
         self.pool = BatchedCacheTables(engine.spec, max_seqs, engine.max_len,
                                        engine.cs,
                                        layout=engine.cache_layout)
+        # content-hash prefix cache over completed prefills; prefill_ex
+        # consults it, plain prefill() stays the cold path (bit-identical
+        # to the pre-prefix-cache decoder)
+        if prefix_cache_bytes is None:
+            prefix_cache_bytes = engine._residency_budget
+        self.prefix_cache = (None if not prefix_block else PrefixCache(
+            block=prefix_block, budget_bytes=prefix_cache_bytes,
+            metrics=engine.metrics))
+        self.prefix_bind = prefix_bind
         self.decode_calls = 0  # == run_pipeline calls for decode ticks
         # gathered batch views cached across ticks: re-gathering the full
         # cache_len-deep tables every tick is O(B·cache_len) read traffic
@@ -602,11 +672,72 @@ class BatchedDecoder:
         # reused slot cannot leak a previous sequence's rows even if the
         # scheduler never called free() for it; it also bumps the slot
         # generation, invalidating any cached batch view over it
+        self._unbind(seq_id)
         sess = self.engine.start_session(list(prompt))
         self.pool.write_prefill(seq_id, sess["env"], len(prompt))
         return sess["tok"]
 
+    def prefill_ex(self, prompt: List[int], seq_id: int
+                   ) -> "tuple[int, int]":
+        """Prefix-cached prefill: ``(first_token, cached_tokens)``.
+
+        Looks up the longest cached prefix, binds the slot to the shared
+        segment (copy or share mode, see :meth:`_resolve_bind`) and runs
+        the suffix-only prefill plan over ``prompt[cached:]``; on a miss
+        it falls back to the cold path and interns the result as a new
+        segment.  Token-exact either way: the suffix plan's causal mask
+        and RoPE positions place the suffix at its absolute offsets, and
+        the segment rows it attends to are the very arrays the donor
+        prefill produced.
+        """
+        prompt = list(prompt)
+        self._unbind(seq_id)  # slot reuse: drop any stale binding first
+        pc = self.prefix_cache
+        if pc is None:
+            return self.prefill(prompt, seq_id), 0
+        hit = pc.lookup(prompt)
+        if hit is None:
+            sess = self.engine.start_session(prompt)
+            self.pool.write_prefill(seq_id, sess["env"], len(prompt))
+            pc.insert(prompt, sess["env"])
+            return sess["tok"], 0
+        seg, boundary = hit
+        sess = self.engine.start_suffix_session(prompt, boundary,
+                                                seg.tables)
+        if self._resolve_bind(boundary) == "share":
+            # slot holds only the divergent suffix; gathers splice the
+            # segment's rows in (UNION-remap); the segment stays pinned
+            pc.acquire(seg)
+            self.pool.write_suffix(seq_id, sess["env"], len(prompt),
+                                   boundary)
+            self.pool.bind_segment(seq_id, seg, boundary)
+        else:
+            # bulk copy (INSERT ... SELECT): the slot owns a private full
+            # copy, no pin, no gather-time splice
+            self.pool.write_prefill(seq_id, sess["env"], len(prompt))
+        # intern the extended prefix too (no-op if coverage is unchanged)
+        pc.insert(prompt, sess["env"])
+        return sess["tok"], boundary
+
+    def _resolve_bind(self, boundary: int) -> str:
+        """Bind-mode pricing.  Copy costs one full-slot device write at
+        bind; share saves that write but pins the segment and pays a
+        boundary-row splice whenever batch membership changes.  Under a
+        bounded residency budget the pin is what matters (shared rows are
+        stored once), so ``auto`` shares; unconstrained, the cheaper
+        steady-state decode path (no splice) wins and ``auto`` copies."""
+        if self.prefix_bind != "auto":
+            return self.prefix_bind
+        return ("share" if self.engine._residency_budget is not None
+                else "copy")
+
+    def _unbind(self, seq_id: int) -> None:
+        seg = self.pool.release_binding(seq_id)
+        if seg is not None and self.prefix_cache is not None:
+            self.prefix_cache.release(seg)
+
     def free(self, seq_id: int) -> None:
+        self._unbind(seq_id)
         self.pool.free(seq_id)
 
     def decode(self, seq_ids: List[int], last_tokens: List[int]

@@ -40,6 +40,11 @@ class Request:
     first_token_s: Optional[float] = None
     done_s: Optional[float] = None
     preemptions: int = 0
+    # prompt tokens served from the prefix cache at the FIRST admission
+    # (the OpenAI usage `prompt_tokens_details.cached_tokens` field); a
+    # preemption-resume re-prefill may hit the cache again, but usage
+    # reports the original admission's reuse, so it is recorded once
+    cached_tokens: int = 0
 
     @property
     def context(self) -> List[int]:
@@ -66,10 +71,22 @@ class Request:
 @dataclasses.dataclass
 class SchedulerStats:
     ticks: int = 0
-    prefills: int = 0
+    # prefill invocations split by kind: a preemption-resume re-prefill is
+    # forced work (it was admitted before), and a prefix hit skipped most
+    # of its plan — lumping them with cold admits (the old single
+    # `prefills` counter) hid both the resume overhead and the hit rate
+    prefills_cold: int = 0
+    prefills_resume: int = 0
+    prefills_prefix_hit: int = 0
     decode_steps: int = 0
     preemptions: int = 0
     completed: int = 0
+
+    @property
+    def prefills(self) -> int:
+        """Total prefill invocations (back-compat with the single counter)."""
+        return (self.prefills_cold + self.prefills_resume
+                + self.prefills_prefix_hit)
 
 
 class ContinuousBatcher:
@@ -186,11 +203,31 @@ class ContinuousBatcher:
                 break
             self.queue.popleft()
             self.kv.allocate_seq(seq_id)
-            tok = self.prefill_fn(req, seq_id)
+            # prefill_fn may return a bare token (legacy contract) or
+            # (token, cached_tokens) — the prefix-cached decoders report
+            # how much of the context they skipped via a shared segment
+            res = self.prefill_fn(req, seq_id)
+            tok, cached = res if isinstance(res, tuple) else (res, 0)
             # the scheduler owns kv.seq_lens end to end: the context length
             # here, the per-tick decode increment in tick()
             self.kv.seq_lens[seq_id] = ctx_len
-            self.stats.prefills += 1
+            if req.preemptions > 0:
+                # resume re-prefill: even on a prefix hit, this admission
+                # is forced re-work, not new traffic — count it as resume
+                # (and don't let the re-prefill's reuse inflate the
+                # request's reported cached_tokens)
+                self.stats.prefills_resume += 1
+            elif cached > 0:
+                self.stats.prefills_prefix_hit += 1
+                req.cached_tokens = int(cached)
+            else:
+                self.stats.prefills_cold += 1
+            if self.metrics is not None:
+                kind = ("resume" if req.preemptions > 0
+                        else ("prefix_hit" if cached > 0 else "cold"))
+                self.metrics.counter(
+                    "serving_prefills_total",
+                    "prefill invocations by kind", kind=kind).inc()
             req.generated.append(tok)
             if req.first_token_s is None:
                 # a preempted request re-prefills, but its first token was

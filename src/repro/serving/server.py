@@ -85,10 +85,13 @@ class AsyncLLMServer:
 
         def prefill(req, seq_id):
             # req.context (prompt + preserved generated prefix), NOT
-            # req.prompt: a preempted request resumes, it does not replay
+            # req.prompt: a preempted request resumes, it does not replay.
+            # prefill_ex returns (token, cached_tokens): the scheduler
+            # splits its prefill counters on the reuse and records
+            # cached_tokens on the request for the usage wire field
             ctx = req.context
             kv.ensure_capacity(seq_id, len(ctx))
-            return self.decoder.prefill(ctx, seq_id)
+            return self.decoder.prefill_ex(ctx, seq_id)
 
         self.batcher = ContinuousBatcher(
             kv, prefill, self.decoder.decode,
@@ -330,7 +333,8 @@ class AsyncLLMServer:
         await self._write_json(
             writer, 200,
             api.completion_response(stream.req.rid, self.cfg.model_id,
-                                    parsed, tokens, self.tokenizer))
+                                    parsed, tokens, self.tokenizer,
+                                    cached_tokens=stream.req.cached_tokens))
 
     async def _stream_completion(self, writer, parsed, stream) -> None:
         head = ("HTTP/1.1 200 OK\r\n"

@@ -229,6 +229,111 @@ class TestSyntheticRoundTrip:
                                                           rel=1e-4)
         assert fit.params.dequant_weight != CostParams().dequant_weight
 
+    def test_cold_points_recover_byte_weight(self):
+        """Warm totals carry almost no byte signal (the resident working
+        set never leaves RAM), so the joint fit's byte slope is noise;
+        disk-backed cold-cache points — one shared byte slope with a
+        per-kind intercept — recover the true ``byte_weight``."""
+        from repro.planner.calibrate import fit_quant_weights
+        grid = [(24664.0, 0.0, 1_444_352), (24664.0, 360_448.0, 408_064),
+                (24664.0, 720_896.0, 227_840), (125632.0, 0.0, 1_444_352),
+                (125632.0, 360_448.0, 408_064),
+                (125632.0, 720_896.0, 227_840)]
+        dq_true, bw_true, s_true, c_true = 0.4, 0.08, 0.5, 40_000.0
+        # totals: zero byte direction — cold points must supply it.  The
+        # cold runs also re-dequantise what they re-stream (a dequant
+        # term anti-correlated with bytes — quantised tables are small
+        # but dequant-heavy); the nuisance column keeps it from
+        # confounding the byte slope.
+        pts = [(f, d, b, c_true + s_true * (f + dq_true * d))
+               for f, d, b in grid]
+        cold = [(kind, b, d, c_kind + s_true * (bw_true * b + 0.9 * d))
+                for kind, c_kind in (("prefill", 90_000.0),
+                                     ("decode", 55_000.0))
+                for _, d, b in grid[:3]]
+        dq, bw, s, _, _ = fit_quant_weights(pts, cold_points=cold)
+        assert dq == pytest.approx(dq_true, rel=1e-5)
+        assert bw == pytest.approx(bw_true, rel=1e-5)
+        assert s == pytest.approx(s_true, rel=1e-5)
+
+    def test_negative_cold_slope_keeps_joint_fit(self):
+        """A negative cold byte slope (noise: bigger tables timed faster)
+        must not poison the fit — the joint fit's byte weight survives."""
+        from repro.planner.calibrate import fit_quant_weights
+        grid = [(24664.0, 0.0, 1_444_352), (24664.0, 360_448.0, 408_064),
+                (24664.0, 720_896.0, 227_840), (125632.0, 0.0, 1_444_352),
+                (125632.0, 360_448.0, 408_064),
+                (125632.0, 720_896.0, 227_840)]
+        dq_true, bw_true, s_true, c_true = 0.4, 0.03, 0.5, 40_000.0
+        pts = [(f, d, b,
+                c_true + s_true * (f + dq_true * d + bw_true * b))
+               for f, d, b in grid]
+        bad = [("decode", b, d, 90_000.0 - 0.01 * b)
+               for _, d, b in grid[:3]]
+        _, bw, *_ = fit_quant_weights(pts, cold_points=bad)
+        assert bw == pytest.approx(bw_true, rel=1e-5)
+        # too few cold points for a determined fit: same survival
+        _, bw2, *_ = fit_quant_weights(
+            pts, cold_points=[("decode", 1_444_352.0, 0.0, 99_000.0),
+                              ("decode", 408_064.0, 360_448.0, 95_000.0)])
+        assert bw2 == pytest.approx(bw_true, rel=1e-5)
+
+    def test_cold_points_from_payload(self):
+        """Extraction yields (kind, bytes, dequant_elems, time_us) quads
+        rec-major, prefill before decode, and is empty for pre-cold-mode
+        payloads."""
+        from repro.planner.calibrate import cold_points_from_payload
+        payload = {"results": [
+            {"precision": "f32", "resident_weight_bytes": 600_000,
+             "prefill_cold_us": 11.0, "decode_cold_us": 7.0},
+            {"precision": "int8", "resident_weight_bytes": 180_000,
+             "dequant_cost_elements": 150_000.0, "decode_cold_us": 5.0},
+        ]}
+        assert cold_points_from_payload(payload) == [
+            ("prefill", 600_000.0, 0.0, 11.0),
+            ("decode", 600_000.0, 0.0, 7.0),
+            ("decode", 180_000.0, 150_000.0, 5.0)]
+        assert cold_points_from_payload(
+            {"results": [{"precision": "f32", "decode_us": 2.0}]}) == []
+
+    def test_fit_cost_params_uses_cold_points(self, tmp_path):
+        """End-to-end through the payload file: warm totals with no byte
+        signal still calibrate ``byte_weight`` when the records carry
+        disk-backed ``{prefill,decode}_cold_us`` timings."""
+        from repro.planner.calibrate import fit_cost_params
+        cs = 8
+        p = CostParams()
+        feats = {}
+        for kind, Teff in (("prefill", 4), ("decode", 1)):
+            rows, groups = pipeline_features(SPEC, kind, Teff, cs, "auto",
+                                             cache_len=12, params=p)
+            feats[kind] = rows + p.group_weight * groups
+        dq_true, bw_true, s, c0 = 0.7, 0.05, 0.4, 25_000.0
+        cold_c = {"prefill": 70_000.0, "decode": 45_000.0}
+        results = []
+        for prec, d, b in (("f32", 0.0, 600_000), ("int8", 150_000.0,
+                                                   180_000),
+                           ("nf4", 300_000.0, 110_000)):
+            rec = {"precision": prec, "resident_weight_bytes": b,
+                   "dequant_cost_elements": d}
+            for kind in ("prefill", "decode"):
+                rec[f"{kind}_us"] = c0 + s * (feats[kind] + dq_true * d)
+                rec[f"{kind}_cold_us"] = cold_c[kind] + s * (
+                    bw_true * b + 0.9 * d)  # reload re-dequantises too
+            results.append(rec)
+        payload = {"spec": {"vocab": SPEC.vocab, "d_model": SPEC.d_model,
+                            "n_layers": SPEC.n_layers,
+                            "n_heads": SPEC.n_heads, "n_kv": SPEC.n_kv,
+                            "d_ff": SPEC.d_ff},
+                   "chunk_size": cs, "prompt_tokens": 4, "cache_len": 12,
+                   "results": results}
+        qp = tmp_path / "q.json"
+        qp.write_text(json.dumps(payload))
+        fit = fit_cost_params(None, None, quant_path=str(qp))
+        assert fit.params.byte_weight == pytest.approx(bw_true, rel=1e-4)
+        assert fit.params.dequant_weight == pytest.approx(dq_true,
+                                                          rel=1e-4)
+
     def test_missing_files_keep_defaults(self, tmp_path):
         base = CostParams()
         fit = fit_cost_params(str(tmp_path / "nope.json"),

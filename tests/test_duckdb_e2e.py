@@ -720,3 +720,76 @@ class TestGoldenShardSQLAgainstDuckDB:
                                    atol=1e-4)
         half = con.execute("SELECT COUNT(*) FROM W__shard0").fetchone()[0]
         assert half == 32 * 4  # j × half the reduction chunks
+
+
+class TestPrefixSegmentSQLEndToEnd:
+    """ISSUE 9: the prefix-cache segment-bind statements executed on a
+    real DuckDB — the share-mode remap view composes segment + slot rows
+    exactly at the prefix boundary, the copy-mode ``INSERT ... SELECT``
+    lands the shared rows in the slot, and both dialects emit
+    byte-identical (pinned) SQL."""
+
+    GOLDEN_REMAP = """\
+CREATE OR REPLACE VIEW k_cache_L0__seq1 AS
+-- prefix-segment remap: shared rows [0, 3) re-keyed to seq = 1
+SELECT 1 AS seq, tp, hk, c, kv FROM k_cache_L0__seg WHERE tp < 3
+UNION ALL
+SELECT seq, tp, hk, c, kv FROM k_cache_L0 WHERE seq = 1 AND tp >= 3;"""
+
+    GOLDEN_COPY = """\
+-- prefix-segment bulk copy (copy-mode bind)
+INSERT INTO k_cache_L0 (seq, tp, hk, c, kv)
+SELECT 1 AS seq, tp, hk, c, kv FROM k_cache_L0__seg WHERE tp < 3;"""
+
+    def _schema(self):
+        env = empty_cache_tables(SPEC, 6, chunk_size=CS, batch=2)
+        return env["k_cache_L0"].schema()
+
+    def test_dialects_emit_identical_golden_sql(self):
+        from repro.core.sqlgen import (segment_copy_sql,
+                                       segment_remap_view_sql)
+        sch = self._schema()
+        for dialect in ("duckdb", "ansi"):
+            assert segment_remap_view_sql(
+                "k_cache_L0__seq1", "k_cache_L0", "k_cache_L0__seg",
+                1, 3, sch, dialect=dialect) == self.GOLDEN_REMAP
+            assert segment_copy_sql(
+                "k_cache_L0", "k_cache_L0__seg", 1, 3, sch,
+                dialect=dialect) == self.GOLDEN_COPY
+
+    def test_remap_view_and_copy_execute(self):
+        from repro.core.sqlgen import (segment_copy_sql,
+                                       segment_remap_view_sql)
+        sch = self._schema()
+        con = duckdb.connect()
+        _run_statements(con, _listify(
+            "CREATE TABLE k_cache_L0 (seq INT32, tp INT32, hk INT32, "
+            "c INT32, kv FLOAT[4]);"
+            "CREATE TABLE k_cache_L0__seg (tp INT32, hk INT32, c INT32, "
+            "kv FLOAT[4]);"))
+        # segment rows carry 100 + tp, the slot's own rows 200 + tp, so
+        # every output row names its source
+        con.executemany(
+            "INSERT INTO k_cache_L0__seg VALUES (?, ?, ?, ?)",
+            [(tp, 0, 0, [100.0 + tp] * CS) for tp in range(6)])
+        con.executemany(
+            "INSERT INTO k_cache_L0 VALUES (?, ?, ?, ?, ?)",
+            [(1, tp, 0, 0, [200.0 + tp] * CS) for tp in range(6)])
+
+        _run_statements(con, segment_remap_view_sql(
+            "k_cache_L0__seq1", "k_cache_L0", "k_cache_L0__seg", 1, 3,
+            sch))
+        got = con.execute("SELECT seq, tp, kv FROM k_cache_L0__seq1 "
+                          "ORDER BY tp").fetchall()
+        assert [r[0] for r in got] == [1] * 6      # every row re-keyed
+        # the splice: segment rows below the boundary, slot rows above
+        assert [r[2][0] for r in got] == [100.0, 101.0, 102.0,
+                                          203.0, 204.0, 205.0]
+
+        # copy-mode bind: the shared rows land in seq 0's empty slot
+        _run_statements(con, segment_copy_sql(
+            "k_cache_L0", "k_cache_L0__seg", 0, 3, sch))
+        rows = con.execute("SELECT tp, kv FROM k_cache_L0 WHERE seq = 0 "
+                           "ORDER BY tp").fetchall()
+        assert [(tp, kv[0]) for tp, kv in rows] == [
+            (0, 100.0), (1, 101.0), (2, 102.0)]

@@ -575,6 +575,61 @@ def test_sharded_rechunked_pipeline_matches_unsharded(n, seed):
                                rtol=1e-5, atol=1e-5)
 
 
+# --- prefix-cache hit/cold decode equivalence (ISSUE 9 tentpole) -----------
+
+_PFX_CACHE = {}
+
+
+def _pfx_engine(cs, precision):
+    """Memoised engines over the (chunk size × weight precision) grid the
+    prefix-cache equivalence property quantifies over."""
+    key = (cs, precision)
+    if key not in _PFX_CACHE:
+        from repro.serving.engine import RelationalEngine
+        spec, params = _sh_setup()
+        kw = {} if precision == "f32" else {"precision": precision}
+        _PFX_CACHE[key] = RelationalEngine(spec, params, chunk_size=cs,
+                                           max_len=16, **kw)
+    return _PFX_CACHE[key]
+
+
+@settings(deadline=None, max_examples=8)
+@given(data=st.data())
+def test_prefix_hit_decode_equals_cold(data):
+    """ISSUE 9 acceptance property: a batch whose every sequence admits
+    via a prefix-cache hit (suffix-only prefill over a bound segment)
+    generates exactly the tokens of a prefix-cache-disabled cold decoder
+    — for any batch size, chunk size, weight precision (f32/int8/nf4,
+    the quantised-cache axis) and bind mode (copy / share)."""
+    cs = data.draw(st.sampled_from([4, 8]), label="chunk_size")
+    precision = data.draw(st.sampled_from(["f32", "int8", "nf4"]),
+                          label="precision")
+    mode = data.draw(st.sampled_from(["copy", "share"]), label="bind")
+    B = data.draw(st.integers(1, 3), label="batch")
+    rng = np.random.default_rng(data.draw(st.integers(0, 99), label="seed"))
+    eng = _pfx_engine(cs, precision)
+    prefix = [int(t) for t in rng.integers(0, 64, 8)]  # 2 blocks @ block=4
+    prompts = [prefix + [int(t) for t in rng.integers(0, 64, int(s))]
+               for s in rng.integers(1, 3, B)]
+
+    cold = eng.batched_decoder(max_seqs=B, prefix_block=0)
+    hot = eng.batched_decoder(max_seqs=B + 1, prefix_block=4,
+                              prefix_bind=mode)
+    hot.prefill_ex(prefix + [0], B)   # donor interns the shared segment
+    hot.free(B)                       # slot freed; segment stays cached
+
+    toks_c = [cold.prefill(p, i) for i, p in enumerate(prompts)]
+    res = [hot.prefill_ex(p, i) for i, p in enumerate(prompts)]
+    toks_h = [t for t, _ in res]
+    assert all(c == len(prefix) for _, c in res)   # every admit was a hit
+    assert toks_h == toks_c                        # first token exact
+    ids = list(range(B))
+    for _ in range(3):
+        toks_c = cold.decode(ids, toks_c)
+        toks_h = hot.decode(ids, toks_h)
+        assert toks_h == toks_c                    # decode stays exact
+
+
 @settings(**COMMON)
 @given(steps=st.integers(1, 5), seed=st.integers(0, 10))
 def test_data_pipeline_deterministic_resume(steps, seed):

@@ -347,6 +347,75 @@ class TestScheduler:
         assert done[1].generated == list(range(5, 13))
 
 
+class TestPrefillKindStats:
+    """ISSUE 9 satellite: ``stats.prefills`` split into cold / resume /
+    prefix_hit, with the legacy aggregate preserved as a property."""
+
+    def _mk(self, prefill, n_pages=16, max_batch=3, **kwargs):
+        cfg = PagedKVConfig(n_layers=1, n_kv=1, head_dim=4, page_size=4,
+                            n_pages=n_pages, max_pages_per_seq=8)
+        kv = PagedKVCache(cfg, max_seqs=8)
+        sched = ContinuousBatcher(kv, prefill,
+                                  lambda ids, last: [t + 1 for t in last],
+                                  max_batch=max_batch, **kwargs)
+        return sched, kv
+
+    def test_tuple_contract_splits_cold_vs_prefix_hit(self):
+        def prefill(req, seq_id):
+            ctx = req.context
+            # rids 1 and 2 simulate a prefix-cache hit at admission
+            return ctx[-1] + 1, (2 if req.rid in (1, 2) else 0)
+
+        sched, kv = self._mk(prefill)
+        for r in range(3):
+            sched.submit(Request(rid=r, prompt=[1, 2, 3], max_new_tokens=4))
+        done = {r.rid: r for r in sched.run()}
+        assert sched.stats.prefills_cold == 1
+        assert sched.stats.prefills_prefix_hit == 2
+        assert sched.stats.prefills_resume == 0
+        # back-compat aggregate is the sum of the split counters
+        assert sched.stats.prefills == 3
+        # the usage-reporting field lands on the request
+        assert done[0].cached_tokens == 0
+        assert done[1].cached_tokens == 2 and done[2].cached_tokens == 2
+        # generation is unchanged by the tuple contract
+        assert all(done[r].generated == [4, 5, 6, 7] for r in range(3))
+
+    def test_resume_prefills_counted_as_resume_not_hit(self):
+        """A preempted request's re-prefill is a *resume* even when the
+        prefix cache covers its context; ``cached_tokens`` keeps the
+        value recorded at FIRST admission."""
+        def prefill(req, seq_id):
+            ctx = req.context
+            return ctx[-1] + 1, 1   # every prefill reports a cache hit
+
+        sched, kv = self._mk(prefill, n_pages=6)
+        for r in range(3):
+            sched.submit(Request(rid=r, prompt=[1, 2, 3, 4],
+                                 max_new_tokens=8))
+        done = sched.run()
+        assert sched.stats.preemptions > 0
+        assert sched.stats.prefills_resume > 0
+        assert sched.stats.prefills_prefix_hit == 3   # first admissions
+        assert sched.stats.prefills_cold == 0
+        assert sched.stats.prefills == \
+            sched.stats.prefills_prefix_hit + sched.stats.prefills_resume
+        for req in done:
+            assert req.cached_tokens == 1
+            assert req.generated == list(range(5, 13))
+
+    def test_legacy_int_contract_still_counts_cold(self):
+        def prefill(req, seq_id):
+            return req.context[-1] + 1   # pre-ISSUE-9 int return
+
+        sched, kv = self._mk(prefill)
+        sched.submit(Request(rid=0, prompt=[1, 2], max_new_tokens=2))
+        done = sched.run()
+        assert sched.stats.prefills_cold == 1
+        assert sched.stats.prefills == 1
+        assert done[0].cached_tokens == 0
+
+
 class TestBatchedRelationalDecode:
     """The tentpole: ONE seq-keyed relational plan advances the whole batch
     per scheduler tick — no per-sequence decode loop anywhere."""
@@ -497,3 +566,127 @@ class TestBatchedRelationalDecode:
         np.testing.assert_array_equal(
             np.asarray(pool.gather_views([1])[name].cols[cn][0]),
             np.asarray(sess2["env"][name].cols[cn]))
+
+
+class TestPrefixCachedDecode:
+    """ISSUE 9 tentpole: content-hash prefix cache over the batched cache
+    pool — hits bind refcounted segments (copy or share mode) and prefill
+    only the divergent suffix, token-exactly."""
+
+    PREFIX = [5, 9, 2, 7, 11, 4, 6, 8]   # two full hash blocks (block=4)
+
+    @pytest.fixture(scope="class")
+    def engine(self):
+        from repro.core.llama_graph import LlamaSpec, init_llama_params
+        from repro.serving.engine import RelationalEngine
+        spec = LlamaSpec(vocab=64, d_model=32, n_layers=1, n_heads=4,
+                         n_kv=2, d_ff=64, rope_theta=10000.0)
+        return RelationalEngine(spec, init_llama_params(spec, seed=3),
+                                chunk_size=8, residency="in_memory",
+                                max_len=24)
+
+    def _decode_n(self, dec, sid, tok, n):
+        toks = [tok]
+        for _ in range(n - 1):
+            tok = dec.decode([sid], [tok])[0]
+            toks.append(tok)
+        return toks
+
+    @pytest.mark.parametrize("mode", ["copy", "share"])
+    def test_hit_decode_token_exact(self, engine, mode):
+        """Suffix-only prefill after a hit generates exactly the cold
+        reference tokens, in both bind modes."""
+        p1 = self.PREFIX + [1, 2]
+        p2 = self.PREFIX + [3]
+        ref = engine.generate(p2, max_new_tokens=4).tokens
+        dec = engine.batched_decoder(max_seqs=2, prefix_block=4,
+                                     prefix_bind=mode)
+        t0, c0 = dec.prefill_ex(p1, 0)      # cold: interns the segment
+        assert c0 == 0
+        t1, c1 = dec.prefill_ex(p2, 1)      # hit on the shared prefix
+        assert c1 == len(self.PREFIX)
+        assert self._decode_n(dec, 1, t1, 4) == ref
+        pc = dec.prefix_cache
+        assert pc.stats.hits == 1 and pc.stats.misses == 1
+
+    def test_shared_and_cold_slots_decode_together(self, engine):
+        """A share-bound slot (spliced segment rows) and a cold slot decode
+        in the same batched tick, each against its own cache contents."""
+        p_cold = [3, 4, 5, 6]
+        p_hit = self.PREFIX + [1]
+        ref_cold = engine.generate(p_cold, max_new_tokens=4).tokens
+        ref_hit = engine.generate(p_hit, max_new_tokens=4).tokens
+        dec = engine.batched_decoder(max_seqs=3, prefix_block=4,
+                                     prefix_bind="share")
+        dec.prefill_ex(self.PREFIX + [2], 2)        # intern the segment
+        ta, ca = dec.prefill_ex(p_cold, 0)
+        tb, cb = dec.prefill_ex(p_hit, 1)
+        assert ca == 0 and cb == len(self.PREFIX)
+        got_a, got_b = [ta], [tb]
+        for _ in range(3):
+            ta, tb = dec.decode([0, 1], [ta, tb])
+            got_a.append(ta)
+            got_b.append(tb)
+        assert got_a == ref_cold
+        assert got_b == ref_hit
+
+    def test_share_mode_refcounts_and_free(self, engine):
+        dec = engine.batched_decoder(max_seqs=2, prefix_block=4,
+                                     prefix_bind="share")
+        dec.prefill_ex(self.PREFIX + [1], 0)
+        _, cached = dec.prefill_ex(self.PREFIX + [2], 1)
+        assert cached == len(self.PREFIX)
+        seg, boundary = dec.pool.bindings[1]
+        assert boundary == len(self.PREFIX)
+        assert seg.refcount == 1            # pinned by the binding
+        dec.free(1)
+        assert 1 not in dec.pool.bindings   # binding dropped with the slot
+        assert seg.refcount == 0            # unpinned -> evictable
+
+    def test_eviction_skips_pinned_segments(self, engine):
+        from repro.serving.kvcache import PrefixCache
+        pc = PrefixCache(block=4, max_segments=1)
+        p1, p2 = [1, 2, 3, 4, 5], [6, 7, 8, 9, 10]
+        seg1 = pc.insert(p1, engine.start_session(p1)["env"])
+        pc.acquire(seg1)                 # pinned by a share-mode binding
+        pc.insert(p2, engine.start_session(p2)["env"])
+        # over budget: the dead newcomer is reclaimed at insert time; the
+        # pinned segment never is (the pager's pinned-pages rule)
+        assert pc.stats.evictions == 1 and len(pc._segments) == 1
+        assert pc.lookup(p1) is not None
+        assert pc.lookup(p2) is None
+
+    def test_release_unblocks_pending_eviction(self, engine):
+        from repro.serving.kvcache import PrefixCache
+        pc = PrefixCache(block=4, max_segments=2)
+        p1, p2 = [1, 2, 3, 4, 5], [6, 7, 8, 9, 10]
+        seg1 = pc.insert(p1, engine.start_session(p1)["env"])
+        pc.acquire(seg1)
+        seg2 = pc.insert(p2, engine.start_session(p2)["env"])
+        pc.acquire(seg2)
+        pc.max_segments = 1              # budget shrinks under live load
+        pc._evict()
+        assert pc.stats.evictions == 0   # all pinned: transient overflow
+        pc.release(seg1)
+        # the release unblocks eviction of the now-dead LRU segment
+        assert pc.stats.evictions == 1 and len(pc._segments) == 1
+        assert pc.lookup(p2) is not None
+        pc.release(seg2)
+        assert len(pc._segments) == 1    # within budget: nothing more
+
+    def test_insert_dedupes_on_covered_prefix(self, engine):
+        from repro.serving.kvcache import PrefixCache
+        pc = PrefixCache(block=4)
+        p = self.PREFIX + [1]
+        env = engine.start_session(p)["env"]
+        assert pc.insert(p, env) is not None
+        assert pc.insert(p, env) is None    # same deepest block: skipped
+        assert pc.stats.insertions == 1
+
+    def test_disabled_cache_falls_back_to_cold(self, engine):
+        ref = engine.generate(self.PREFIX + [1], max_new_tokens=3).tokens
+        dec = engine.batched_decoder(max_seqs=1, prefix_block=0)
+        assert dec.prefix_cache is None
+        tok, cached = dec.prefill_ex(self.PREFIX + [1], 0)
+        assert cached == 0
+        assert self._decode_n(dec, 0, tok, 3) == ref
