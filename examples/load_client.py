@@ -2,6 +2,7 @@
 
     PYTHONPATH=src python examples/load_client.py --port 8008 \
         --n 16 --concurrency 8 [--scrape-metrics out/metrics.prom] \
+        [--dump-flight out/flight.json] [--check-trace-coverage 0.9] \
         [--shutdown]
 
 Fires ``--n`` streaming ``/v1/completions`` requests with ``--concurrency``
@@ -81,6 +82,48 @@ async def amain(args) -> int:
         with open(args.scrape_metrics, "w") as fh:
             fh.write(resp.body.decode())
         print(f"metrics scraped to {args.scrape_metrics}")
+    if args.dump_flight:
+        resp = await client.request(args.host, args.port, "GET",
+                                    "/debug/flight")
+        if resp.status != 200:
+            print(f"FAIL /debug/flight -> {resp.status}")
+            failures.append("/debug/flight not OK")
+        else:
+            with open(args.dump_flight, "w") as fh:
+                fh.write(resp.body.decode())
+            flight = resp.json()
+            print(f"flight dump ({flight.get('retained_ticks', 0)} ticks, "
+                  f"{flight.get('dropped_ticks', 0)} dropped) saved to "
+                  f"{args.dump_flight}")
+    if args.check_trace_coverage is not None:
+        # pivot from a streamed chunk's trace_id to the request's
+        # reconstructed end-to-end trace, and gate on how much of its
+        # tick wall time the named spans attribute
+        tid = next((r.trace_id for r in ok if r.trace_id), None)
+        if tid is None:
+            print("FAIL no trace_id on any streamed chunk")
+            failures.append("no trace_id in stream chunks")
+        else:
+            resp = await client.request(args.host, args.port, "GET",
+                                        f"/debug/trace/{tid}")
+            if resp.status != 200:
+                print(f"FAIL /debug/trace/{tid} -> {resp.status}")
+                failures.append("trace endpoint not OK")
+            else:
+                trace = resp.json()
+                cov = trace.get("coverage", 0.0)
+                kinds = [t.get("kind") for t in trace.get("ticks", [])]
+                print(f"trace {tid}: {len(kinds)} ticks {sorted(set(kinds))} "
+                      f"coverage={cov:.3f} (need >= "
+                      f"{args.check_trace_coverage})")
+                if cov < args.check_trace_coverage:
+                    print(f"FAIL trace coverage {cov:.3f} < "
+                          f"{args.check_trace_coverage}")
+                    failures.append("trace coverage below threshold")
+                if "admission" not in kinds or "prefill" not in kinds:
+                    print(f"FAIL trace missing admission/prefill ticks: "
+                          f"{kinds}")
+                    failures.append("trace missing lifecycle ticks")
     if args.shutdown:
         await client.request(args.host, args.port, "POST", "/admin/shutdown")
         print("server shutdown requested")
@@ -114,6 +157,12 @@ def main():
                     help="seconds to wait for the server to come up")
     ap.add_argument("--scrape-metrics", default=None,
                     help="file to save a final /metrics scrape into")
+    ap.add_argument("--dump-flight", default=None,
+                    help="file to save a final /debug/flight dump into")
+    ap.add_argument("--check-trace-coverage", type=float, default=None,
+                    help="fetch /debug/trace/{trace_id} for one streamed "
+                         "request and fail below this span-attribution "
+                         "fraction (e.g. 0.9)")
     ap.add_argument("--shutdown", action="store_true",
                     help="POST /admin/shutdown when done (CI teardown)")
     args = ap.parse_args()

@@ -16,8 +16,14 @@ verifies SSE chunk ordering and token exactness under concurrency.
 
 With ``OBS_ARTIFACT_DIR`` set, shutdown (Ctrl-C or
 ``POST /admin/shutdown``) dumps the metrics registry (JSON + Prometheus
-text) and the per-step Chrome trace there — what the CI serving job
-uploads as artifacts.
+text), the flight recorder's Chrome trace and the flight dump there —
+what the CI serving job uploads as artifacts.
+
+Live debugging (no artifacts needed): ``GET /debug/flight`` for the
+recent-tick ring, ``GET /debug/trace/{trace_id}`` for one request's
+end-to-end Chrome trace (the id rides on every response / SSE chunk),
+``GET /debug/drift`` for the watchdog state (``--drift-every N``
+enables mid-flight re-planning on cost-model drift).
 """
 
 import argparse
@@ -61,7 +67,10 @@ def build_server(args, metrics, tracer, disk_dir=None) -> AsyncLLMServer:
                        ttft_slo_s=args.ttft_slo_ms / 1e3
                        if args.ttft_slo_ms else None,
                        tpot_slo_s=args.tpot_slo_ms / 1e3
-                       if args.tpot_slo_ms else None)
+                       if args.tpot_slo_ms else None,
+                       flight_capacity=args.flight_capacity,
+                       drift_every=args.drift_every,
+                       drift_threshold=args.drift_threshold)
     return AsyncLLMServer(eng, kv, cfg, metrics=metrics, tracer=tracer)
 
 
@@ -70,7 +79,16 @@ def dump_artifacts(server, metrics, tracer, out: str) -> None:
     metrics.save_json(os.path.join(out, "serve_http_metrics.json"))
     with open(os.path.join(out, "serve_http_metrics.prom"), "w") as f:
         f.write(metrics.render_prometheus())
-    if tracer is not None:
+    # the scheduler drains the tracer into the flight recorder per tick,
+    # so the flight ring (not the tracer) holds the retained spans: the
+    # Chrome trace artifact is its interleaved timeline, and the flight
+    # dump is the same structure /debug/flight serves
+    flight = getattr(server, "flight", None)
+    if flight is not None:
+        flight.save(os.path.join(out, "serve_http_trace.json"))
+        with open(os.path.join(out, "serve_http_flight.json"), "w") as f:
+            json.dump(flight.to_dict(), f, default=str)
+    elif tracer is not None:
         with open(os.path.join(out, "serve_http_trace.json"), "w") as f:
             json.dump(tracer.to_chrome(), f)
     print(f"artifacts dumped to {out}/")
@@ -115,6 +133,12 @@ def main():
                     help="disk+mem weight residency instead of in-memory")
     ap.add_argument("--ttft-slo-ms", type=float, default=None)
     ap.add_argument("--tpot-slo-ms", type=float, default=None)
+    ap.add_argument("--flight-capacity", type=int, default=256,
+                    help="scheduler ticks retained by the flight recorder")
+    ap.add_argument("--drift-every", type=int, default=0,
+                    help="drift-watchdog cadence in ticks (0 = off)")
+    ap.add_argument("--drift-threshold", type=float, default=0.5,
+                    help="RMS relative drift that triggers a re-plan")
     args = ap.parse_args()
     try:
         asyncio.run(amain(args))

@@ -237,16 +237,28 @@ OP_CLASSES = {
 
 
 def iter_plan_nodes(root: RelNode):
-    """Every node of a relational plan, root first."""
+    """Every distinct node of a relational plan, root first.
+
+    Plans are DAGs (fused/sharded plans share whole subtrees); tracking
+    visited ids keeps the walk linear in distinct nodes — the naive tree
+    walk re-visited shared subtrees exponentially, which made per-step
+    ``plan_provenance`` dominate traced serving ticks.
+    """
     stack = [root]
+    seen = {id(root)}
     while stack:
         node = stack.pop()
         yield node
         if isinstance(node, (Project, Filter, Unnest, Collect, GroupAgg)):
-            stack.append(node.input)
+            kids = (node.input,)
         elif isinstance(node, Join):
-            stack.append(node.left)
-            stack.append(node.right)
+            kids = (node.left, node.right)
+        else:
+            kids = ()
+        for kid in kids:
+            if id(kid) not in seen:
+                seen.add(id(kid))
+                stack.append(kid)
 
 
 def classify_plan_node(node: RelNode) -> str:
@@ -661,8 +673,15 @@ def execute(node: RelNode, env: Dict[str, DenseTable],
     if tracer is None:
         out = _execute(node, env, memo, scalars)
     else:
+        # spans inherit the ambient TraceContext (request ids) inside
+        # TraceRecorder.span; direct Scan inputs ride along so a
+        # request-scoped dump shows which stored tables each op read
+        kids = ((node.left, node.right) if isinstance(node, Join)
+                else (getattr(node, "input", None),))
+        tables = sorted({c.table for c in kids if isinstance(c, Scan)})
         with tracer.span(classify_plan_node(node), cat="op",
-                         node=type(node).__name__):
+                         node=type(node).__name__,
+                         **({"tables": tables} if tables else {})):
             out = _execute(node, env, memo, scalars, tracer)
     memo[id(node)] = out
     return out

@@ -28,12 +28,20 @@ Everything is zero-cost when disabled: call sites guard on
 the decode hot path.
 """
 
-from repro.obs.metrics import (PROMETHEUS_CONTENT_TYPE,  # noqa: F401
+from repro.obs.metrics import (OPENMETRICS_CONTENT_TYPE,  # noqa: F401
+                               PROMETHEUS_CONTENT_TYPE,
                                Counter, Gauge, Histogram, MetricsRegistry)
+from repro.obs.context import (TraceContext, activate,  # noqa: F401
+                               context_span_args, current_context,
+                               new_trace_id)
 from repro.obs.trace import SpanEvent, TraceRecorder  # noqa: F401
-from repro.obs.log import log_event, set_event_registry  # noqa: F401
+from repro.obs.flight import (FlightEvent, FlightRecorder,  # noqa: F401
+                              FlightTick)
+from repro.obs.log import (log_event, set_event_registry,  # noqa: F401
+                           set_flight_recorder)
 from repro.obs.profile import (AttributedOp, OpNode,  # noqa: F401
-                               attribute_statement, classify_operator,
+                               attribute_query_plan, attribute_statement,
+                               classify_eqp_detail, classify_operator,
                                coverage, flatten_profile, parse_profile,
                                step_times_us)
 from repro.obs.drift import DriftReport, StepDrift, drift_report  # noqa: F401

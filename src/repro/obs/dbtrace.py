@@ -10,11 +10,13 @@ time and attribute where the engine spent its time.
   :mod:`repro.obs.profile` and each operator's wall time is attributed
   back to the generating pipeline step / relational op class through the
   statement's :class:`~repro.core.sqlgen.StatementProvenance` tag.
-* On engines without JSON profiling (SQLite), :func:`run_timed` gives
-  statement-level wall timing only — the whole statement's time is
-  attributed to its step as one ``op_class="statement"`` record.  (The
-  generated LLM scripts need vector UDFs SQLite lacks, so in practice
-  the SQLite path times plain SQL, e.g. micro-benchmarks.)
+* On engines without JSON profiling (SQLite), :func:`run_timed` times
+  each statement and attributes its wall time across the operator rows
+  of ``EXPLAIN QUERY PLAN`` (scan / search / join inner loop); DDL and
+  non-SQLite engines fall back to one ``op_class="statement"`` record
+  per statement.  (The generated LLM scripts need vector UDFs SQLite
+  lacks, so in practice the SQLite path times plain SQL, e.g.
+  micro-benchmarks.)
 
 duckdb is an *optional* dependency: nothing here imports it at module
 level — :func:`run_traced` takes an already-open connection, so tier-1
@@ -33,9 +35,10 @@ import tempfile
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.obs.context import current_context
 from repro.obs.profile import (
-    AttributedOp, OpNode, attribute_statement, class_times_us, coverage,
-    parse_profile, step_times_us,
+    AttributedOp, OpNode, attribute_query_plan, attribute_statement,
+    class_times_us, coverage, parse_profile, step_times_us,
 )
 from repro.obs.trace import TraceRecorder
 
@@ -75,9 +78,17 @@ class StatementTrace:
 
 @dataclasses.dataclass
 class TickTrace:
-    """One traced pass over a set of statements (e.g. a decode tick)."""
+    """One traced pass over a set of statements (e.g. a decode tick).
+
+    When the pass ran under an active
+    :class:`~repro.obs.context.TraceContext` (a traced tick serving
+    live requests), ``request_ids``/``trace_ids`` carry the requests it
+    served, so DB-operator attribution joins back to the originating
+    HTTP requests like every other span."""
 
     statements: List[StatementTrace]
+    request_ids: Tuple[int, ...] = ()
+    trace_ids: Tuple[str, ...] = ()
 
     @property
     def wall_s(self) -> float:
@@ -103,6 +114,11 @@ class TickTrace:
         operator *durations* are real, their offsets within the
         statement are synthetic (profiles carry no start times)."""
         rec = TraceRecorder()
+        ctx_args = {}
+        if self.request_ids:
+            ctx_args["rids"] = list(self.request_ids)
+        if self.trace_ids:
+            ctx_args["trace_ids"] = list(self.trace_ids)
         ts = 0.0
         for st in self.statements:
             prov = st.provenance
@@ -111,7 +127,8 @@ class TickTrace:
             dur = st.wall_s * 1e6
             rec.add_span(name, cat="statement", ts_us=ts, dur_us=dur,
                          depth=0, kind=getattr(prov, "kind", ""),
-                         tables=list(getattr(prov, "tables", ())))
+                         tables=list(getattr(prov, "tables", ())),
+                         **ctx_args)
             op_ts = ts
             for a in st.attributed:
                 d = a.time_s * 1e6
@@ -129,6 +146,8 @@ class TickTrace:
     def to_dict(self) -> Dict:
         return {
             "wall_s": self.wall_s,
+            "request_ids": list(self.request_ids),
+            "trace_ids": list(self.trace_ids),
             "coverage": self.coverage(),
             "step_times_us": self.step_times_us(),
             "class_times_us": self.class_times_us(),
@@ -200,29 +219,58 @@ def run_traced(con, pairs: Sequence[Tuple[str, object]],
             os.unlink(path)
         except FileNotFoundError:
             pass
-    return TickTrace(statements=statements)
+    return _tick_trace(statements)
 
 
 def run_timed(con, pairs: Sequence[Tuple[str, object]],
               params: Optional[Dict[str, object]] = None,
-              clock=time.perf_counter) -> TickTrace:
-    """Statement-level wall timing for engines without JSON profiling
-    (SQLite): each statement's whole time is attributed to its step as a
-    single ``op_class="statement"`` record."""
+              clock=time.perf_counter, explain: bool = True) -> TickTrace:
+    """Wall timing plus ``EXPLAIN QUERY PLAN`` attribution for engines
+    without JSON profiling (SQLite — the ansi dialect's target).
+
+    Before each statement executes, its query plan is fetched with
+    ``EXPLAIN QUERY PLAN`` and the measured wall time is attributed
+    across the plan's operator rows (scan / search / join-inner-loop —
+    see :func:`repro.obs.profile.attribute_query_plan`); per-step totals
+    stay exact since SQLite reports no per-operator timings and the
+    split is uniform.  Statements the engine won't explain (DDL, or a
+    non-SQLite ``con``) fall back to the old behaviour: one
+    ``op_class="statement"`` record carrying the whole wall time.
+    ``explain=False`` forces the fallback everywhere.
+    """
     statements: List[StatementTrace] = []
     for sql, prov in pairs:
         if params:
             sql = substitute_params(sql, params)
         for stmt in split_statements(sql):
+            plan_rows = None
+            if explain:
+                try:
+                    plan_rows = list(
+                        con.execute("EXPLAIN QUERY PLAN " + stmt))
+                except Exception:
+                    plan_rows = None  # engine has no EQP (or DDL quirk)
             t0 = clock()
             con.execute(stmt)
             wall = clock() - t0
-            attributed = [AttributedOp(
-                step=getattr(prov, "step", None),
-                statement_kind=getattr(prov, "kind", "unknown"),
-                op_class="statement", operator="STATEMENT", table=None,
-                time_s=wall, cardinality=0)]
+            attributed: List[AttributedOp] = []
+            if plan_rows:
+                attributed = attribute_query_plan(plan_rows, prov, wall)
+            if not attributed:
+                attributed = [AttributedOp(
+                    step=getattr(prov, "step", None),
+                    statement_kind=getattr(prov, "kind", "unknown"),
+                    op_class="statement", operator="STATEMENT", table=None,
+                    time_s=wall, cardinality=0)]
             statements.append(StatementTrace(
                 sql=stmt, provenance=prov, wall_s=wall, profile=None,
                 attributed=attributed))
-    return TickTrace(statements=statements)
+    return _tick_trace(statements)
+
+
+def _tick_trace(statements: List[StatementTrace]) -> TickTrace:
+    """Stamp the finished trace with the ambient request context."""
+    ctx = current_context()
+    return TickTrace(statements=statements,
+                     request_ids=ctx.request_ids if ctx else (),
+                     trace_ids=ctx.trace_ids if ctx else ())

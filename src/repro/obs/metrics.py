@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import json
 import threading
+import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
 # latency-oriented default bucket bounds (seconds)
@@ -30,6 +31,9 @@ _RESERVOIR = 4096
 
 # what a /metrics endpoint serving render_prometheus() output should set
 PROMETHEUS_CONTENT_TYPE = "text/plain; version=0.0.4; charset=utf-8"
+# ... and when serving render_openmetrics() output (exemplar-capable)
+OPENMETRICS_CONTENT_TYPE = \
+    "application/openmetrics-text; version=1.0.0; charset=utf-8"
 
 
 class Counter:
@@ -105,9 +109,13 @@ class Histogram:
         self.sum = 0.0
         self._ring: List[float] = []
         self._ring_pos = 0
+        # bucket index (len(bounds) = +Inf) -> (trace_id, value, unix ts):
+        # the last exemplar observed into that bucket, for OpenMetrics
+        # exposition — a bad p99 bucket links straight to its trace dump
+        self.exemplars: Dict[int, Tuple[str, float, float]] = {}
         self._lock = threading.Lock()
 
-    def observe(self, v: float) -> None:
+    def observe(self, v: float, exemplar: Optional[str] = None) -> None:
         v = float(v)
         with self._lock:
             self.count += 1
@@ -115,6 +123,13 @@ class Histogram:
             for i, b in enumerate(self.bounds):
                 if v <= b:
                     self.bucket_counts[i] += 1
+            if exemplar is not None:
+                idx = len(self.bounds)
+                for i, b in enumerate(self.bounds):
+                    if v <= b:
+                        idx = i
+                        break
+                self.exemplars[idx] = (str(exemplar), v, time.time())
             if len(self._ring) < _RESERVOIR:
                 self._ring.append(v)
             else:
@@ -135,6 +150,7 @@ class Histogram:
             self.sum += other.sum
             for i, c in enumerate(other.bucket_counts):
                 self.bucket_counts[i] += c
+            self.exemplars.update(other.exemplars)
             for v in other._ring:
                 if len(self._ring) < _RESERVOIR:
                     self._ring.append(v)
@@ -270,6 +286,49 @@ class MetricsRegistry:
                 out.append(f"{m.name}{self._label_str(m.labels)}"
                            f" {self._fmt(m.value)}")
         return "\n".join(out) + ("\n" if out else "")
+
+    def render_openmetrics(self) -> str:
+        """OpenMetrics-flavoured exposition: the same series as
+        :meth:`render_prometheus`, but histogram ``_bucket`` lines carry
+        exemplar annotations (`` # {trace_id="..."} value timestamp``)
+        when one was observed into that bucket, and the body terminates
+        with ``# EOF``.  Series names are kept verbatim rather than
+        re-suffixed, so both expositions stay join-compatible.
+        """
+        out: List[str] = []
+        seen_header = set()
+        for m in self.series():
+            if m.name not in seen_header:
+                seen_header.add(m.name)
+                if self._helps.get(m.name):
+                    out.append(f"# HELP {m.name} {self._helps[m.name]}")
+                out.append(f"# TYPE {m.name} {m.kind}")
+            if isinstance(m, Histogram):
+                def _ex(idx: int) -> str:
+                    ex = m.exemplars.get(idx)
+                    if ex is None:
+                        return ""
+                    tid, v, ts = ex
+                    return (f' # {{trace_id="{tid}"}} {self._fmt(v)}'
+                            f" {self._fmt(ts)}")
+                for i, (b, c) in enumerate(zip(m.bounds, m.bucket_counts)):
+                    le = f'le="{b}"'
+                    out.append(f"{m.name}_bucket"
+                               f"{self._label_str(m.labels, le)} {c}"
+                               f"{_ex(i)}")
+                inf = 'le="+Inf"'
+                out.append(f"{m.name}_bucket"
+                           f"{self._label_str(m.labels, inf)} {m.count}"
+                           f"{_ex(len(m.bounds))}")
+                out.append(f"{m.name}_sum{self._label_str(m.labels)}"
+                           f" {self._fmt(m.sum)}")
+                out.append(f"{m.name}_count{self._label_str(m.labels)}"
+                           f" {m.count}")
+            else:
+                out.append(f"{m.name}{self._label_str(m.labels)}"
+                           f" {self._fmt(m.value)}")
+        out.append("# EOF")
+        return "\n".join(out) + "\n"
 
     def to_dict(self) -> Dict:
         """JSON-serialisable dump of every series."""

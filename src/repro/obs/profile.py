@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Dict, List, Optional, Tuple, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 # DuckDB physical operator → relational op class.  Keys are matched on
 # the operator name upper-cased with spaces collapsed to underscores;
@@ -192,6 +192,84 @@ def attribute_statement(root: OpNode, provenance) -> List[AttributedOp]:
             table=scanned_table(node) if cls == "scan" else None,
             time_s=node.self_timing_s, cardinality=node.cardinality))
     return out
+
+
+# ---------------------------------------------------------------------------
+# SQLite EXPLAIN QUERY PLAN (the ansi dialect's profile source)
+# ---------------------------------------------------------------------------
+
+
+def classify_eqp_detail(detail: str,
+                        first_in_parent: bool = True
+                        ) -> Tuple[str, str, Optional[str]]:
+    """Classify one SQLite ``EXPLAIN QUERY PLAN`` detail string into
+    ``(op_class, operator, table)``.
+
+    SQLite's EQP rows describe the access path per table term: ``SCAN t``
+    (full scan), ``SEARCH t USING ...`` (indexed lookup), ``USE TEMP
+    B-TREE FOR ORDER BY`` (sort), plus subquery/co-routine scaffolding.
+    SQLite never says "join" — a join is simply the second and later
+    SCAN/SEARCH terms nested under the same parent (the inner loops of
+    its nested-loop join), which is what ``first_in_parent=False``
+    marks.
+    """
+    text = str(detail or "").strip()
+    up = text.upper()
+    if up.startswith("SCAN ") or up.startswith("SEARCH "):
+        kw, rest = text.split(None, 1)
+        if rest.upper().startswith("TABLE "):  # pre-3.36 phrasing
+            rest = rest.split(None, 1)[1]
+        table = rest.split()[0].strip('"') or None
+        base = "scan" if kw.upper() == "SCAN" else "search"
+        return (base if first_in_parent else "join"), kw.upper(), table
+    if "B-TREE" in up:
+        return "sort", "USE_TEMP_B-TREE", None
+    if up.startswith(("SCALAR SUBQUERY", "LIST SUBQUERY", "CORRELATED")):
+        return "other", "SUBQUERY", None
+    if up.startswith(("CO-ROUTINE", "MATERIALIZE")):
+        return "other", up.split()[0], None
+    if up.startswith(("COMPOUND", "UNION", "MERGE")):
+        return "other", "COMPOUND", None
+    return "other", (up.split()[0] if up else "UNKNOWN"), None
+
+
+def attribute_query_plan(rows: Sequence, provenance,
+                         wall_s: float) -> List[AttributedOp]:
+    """Attribute a statement's SQLite ``EXPLAIN QUERY PLAN`` rows to its
+    generating pipeline step — the ansi-dialect counterpart of
+    :func:`attribute_statement`.
+
+    ``rows`` are the cursor rows ``(id, parent, notused, detail)``.
+    SQLite reports no per-operator timings, so the statement's measured
+    ``wall_s`` is split evenly across its operator rows: per-*step*
+    totals (what the drift report joins on) stay exact, while the
+    operator structure (scan vs search vs join inner loop) becomes
+    visible per statement.
+    """
+    step = getattr(provenance, "step", None)
+    kind = getattr(provenance, "kind", "unknown")
+    parsed = []
+    seen_per_parent: Dict[int, int] = {}
+    for row in rows:
+        try:
+            parent = int(row[1])
+            detail = row[3]
+        except (IndexError, TypeError, ValueError):
+            continue
+        up = str(detail or "").strip().upper()
+        is_table_term = up.startswith(("SCAN ", "SEARCH "))
+        first = seen_per_parent.get(parent, 0) == 0
+        if is_table_term:
+            seen_per_parent[parent] = seen_per_parent.get(parent, 0) + 1
+        cls, op, table = classify_eqp_detail(detail, first_in_parent=first)
+        parsed.append((cls, op, table))
+    if not parsed:
+        return []
+    share = float(wall_s) / len(parsed)
+    return [AttributedOp(step=step, statement_kind=kind, op_class=cls,
+                         operator=op, table=table, time_s=share,
+                         cardinality=0)
+            for cls, op, table in parsed]
 
 
 def coverage(attributed: List[AttributedOp],

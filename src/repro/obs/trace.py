@@ -25,6 +25,8 @@ import time
 from contextlib import contextmanager
 from typing import Dict, List, Optional
 
+from .context import context_span_args
+
 
 @dataclasses.dataclass
 class SpanEvent:
@@ -50,7 +52,13 @@ class TraceRecorder:
 
     @contextmanager
     def span(self, name: str, cat: str = "", **args):
-        """Record a complete span around the ``with`` body."""
+        """Record a complete span around the ``with`` body.
+
+        The ambient :class:`repro.obs.context.TraceContext` (if any) is
+        folded into the span's args at record time, so every span
+        automatically names the request ids / trace ids it served —
+        explicit kwargs win on key collision.
+        """
         depth = self._depth
         self._depth += 1
         t0 = self._now_us()
@@ -58,13 +66,27 @@ class TraceRecorder:
             yield self
         finally:
             self._depth = depth
+            ctx_args = context_span_args()
+            if ctx_args:
+                ctx_args.update(args)
+                args = ctx_args
             self.events.append(SpanEvent(name=name, cat=cat, ts_us=t0,
                                          dur_us=self._now_us() - t0,
                                          depth=depth, args=dict(args)))
 
     def add_span(self, name: str, cat: str, ts_us: float, dur_us: float,
                  depth: int = 0, **args) -> SpanEvent:
-        """Append a span with explicit timing (DB profile ingestion)."""
+        """Append a span with explicit timing (DB profile ingestion).
+
+        Unlike :meth:`span` this never touches ``_depth``, so it is safe
+        to call from threads other than the one driving ``span()`` (the
+        pager's prefetch thread does).  The ambient trace context is
+        attached the same way.
+        """
+        ctx_args = context_span_args()
+        if ctx_args:
+            ctx_args.update(args)
+            args = ctx_args
         ev = SpanEvent(name=name, cat=cat, ts_us=float(ts_us),
                        dur_us=float(dur_us), depth=depth, args=dict(args))
         self.events.append(ev)
@@ -74,6 +96,19 @@ class TraceRecorder:
         self.events.clear()
         self._epoch = self._clock()
         self._depth = 0
+
+    def drain(self, start: int = 0) -> List[SpanEvent]:
+        """Remove and return ``events[start:]`` *without* resetting the
+        epoch (unlike :meth:`clear`) — the flight recorder drains the
+        tracer after every scheduler tick so a long-running server never
+        accumulates an unbounded span list, while keeping all drained
+        spans on one shared timeline."""
+        out = self.events[start:]
+        # delete exactly the captured slice — a concurrent add_span (the
+        # pager's prefetch thread) landing after the copy shifts down
+        # instead of being silently dropped
+        del self.events[start:start + len(out)]
+        return out
 
     # -- queries ---------------------------------------------------------------
 

@@ -95,7 +95,8 @@ def _spec_from_payload(sp: Dict) -> LlamaSpec:
 def step_features(spec: LlamaSpec, kind: str, T: int, cs: int,
                   mode: str = "off",
                   cache_len: Optional[int] = None,
-                  params: Optional[CostParams] = None
+                  params: Optional[CostParams] = None,
+                  batch: Optional[int] = None
                   ) -> Dict[str, Tuple[int, int]]:
     """Per-step ``{step_name: (rows, groups)}`` the matmul cost model
     predicts for one invocation of the ``kind`` pipeline at base chunk
@@ -116,10 +117,16 @@ def step_features(spec: LlamaSpec, kind: str, T: int, cs: int,
     clamp rule (each chunked width must be divisible by
     ``min(cs, width)`` — candidates above a width chunk it whole), which
     callers use to filter candidate grids.
+
+    ``batch`` > 0 prices the *batched* decode graph (the serving path's
+    per-tick pipeline, step names ``..@seq``-keyed) instead of the
+    single-sequence one, so online drift checks against a continuous
+    batcher join on the step names the batcher actually runs.
     """
     g = (build_prefill_graph(spec, T, cache_len=cache_len)
          if kind == "prefill" else
-         build_decode_graph(spec, cache_len=cache_len or max(T, 16)))
+         build_decode_graph(spec, cache_len=cache_len or max(T, 16),
+                            batch=batch or 0))
     infer_shapes(g)
     pipe = op_map(g, chunk_size=cs)
     p = params or CostParams()

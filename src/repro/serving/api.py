@@ -147,9 +147,13 @@ def _usage(prompt_tokens: int, completion_tokens: int,
 
 def completion_response(rid: int, model: str, req: CompletionRequest,
                         tokens: List[int], tokenizer: ToyTokenizer,
-                        cached_tokens: int = 0) -> Dict:
+                        cached_tokens: int = 0,
+                        trace_id: Optional[str] = None) -> Dict:
+    # trace_id is an extension field: the request-scoped id minted at
+    # admission, the handle for GET /debug/trace/{trace_id}
+    out: Dict
     if req.is_chat:
-        return {
+        out = {
             "id": f"chatcmpl-{rid}", "object": "chat.completion",
             "created": int(time.time()), "model": model,
             "choices": [{"index": 0,
@@ -158,42 +162,52 @@ def completion_response(rid: int, model: str, req: CompletionRequest,
                          "token_ids": tokens,
                          "finish_reason": "length"}],
             "usage": _usage(len(req.prompt), len(tokens), cached_tokens)}
-    return {
-        "id": f"cmpl-{rid}", "object": "text_completion",
-        "created": int(time.time()), "model": model,
-        "choices": [{"index": 0, "text": tokenizer.decode(tokens),
-                     "token_ids": tokens, "finish_reason": "length"}],
-        "usage": _usage(len(req.prompt), len(tokens), cached_tokens)}
+    else:
+        out = {
+            "id": f"cmpl-{rid}", "object": "text_completion",
+            "created": int(time.time()), "model": model,
+            "choices": [{"index": 0, "text": tokenizer.decode(tokens),
+                         "token_ids": tokens, "finish_reason": "length"}],
+            "usage": _usage(len(req.prompt), len(tokens), cached_tokens)}
+    if trace_id:
+        out["trace_id"] = trace_id
+    return out
 
 
 def stream_chunk(rid: int, model: str, req: CompletionRequest,
                  token: int, token_index: int, tokenizer: ToyTokenizer,
-                 finish: bool) -> Dict:
+                 finish: bool, trace_id: Optional[str] = None) -> Dict:
     """One SSE chunk for one generated token.
 
     ``token_index`` is the 0-based position in the generation — an
     explicit ordering/dedupe handle for streaming consumers (the
     preemption-replay regression surface), beyond what OpenAI's schema
-    carries.
+    carries.  ``trace_id`` (extension field) lets a streaming client
+    pivot straight to ``GET /debug/trace/{trace_id}``.
     """
     text = (" " if token_index else "") + tokenizer.decode([token])
+    out: Dict
     if req.is_chat:
         delta = {"content": text}
         if token_index == 0:
             delta["role"] = "assistant"
-        return {
+        out = {
             "id": f"chatcmpl-{rid}", "object": "chat.completion.chunk",
             "created": int(time.time()), "model": model,
             "choices": [{"index": 0, "delta": delta,
                          "token_id": int(token),
                          "token_index": token_index,
                          "finish_reason": "length" if finish else None}]}
-    return {
-        "id": f"cmpl-{rid}", "object": "text_completion",
-        "created": int(time.time()), "model": model,
-        "choices": [{"index": 0, "text": text,
-                     "token_id": int(token), "token_index": token_index,
-                     "finish_reason": "length" if finish else None}]}
+    else:
+        out = {
+            "id": f"cmpl-{rid}", "object": "text_completion",
+            "created": int(time.time()), "model": model,
+            "choices": [{"index": 0, "text": text,
+                         "token_id": int(token), "token_index": token_index,
+                         "finish_reason": "length" if finish else None}]}
+    if trace_id:
+        out["trace_id"] = trace_id
+    return out
 
 
 def models_response(model: str) -> Dict:

@@ -43,6 +43,15 @@ class StreamResult:
     def token_indices(self) -> List[int]:
         return [e["choices"][0]["token_index"] for e in self.events]
 
+    @property
+    def trace_id(self) -> Optional[str]:
+        """The request's end-to-end trace id (server extension field on
+        every chunk) — the key for ``GET /debug/trace/{trace_id}``."""
+        for e in self.events:
+            if e.get("trace_id"):
+                return e["trace_id"]
+        return None
+
 
 async def _read_head(reader) -> Tuple[int, Dict[str, str]]:
     status_line = await reader.readline()

@@ -18,6 +18,7 @@ matching §4's definitions.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Dict, List, Optional
@@ -244,6 +245,8 @@ class RelationalEngine:
         # across the decode/prefill/batched plans sharing q-tables)
         self._quant_bytes = 0
         self._quant_counted: set = set()
+        # mid-flight re-planning events (the drift watchdog's replan())
+        self.replans = 0
 
         self.decode_pipe = self._compile_pipe(
             lg.build_decode_graph(spec, cache_len=max_len),
@@ -266,7 +269,7 @@ class RelationalEngine:
         else:
             self.pager = WeightPager(budget_bytes or 1 << 62,
                                      disk_dir=disk_dir, policy=pager_policy,
-                                     metrics=metrics)
+                                     metrics=metrics, tracer=tracer)
             for k, v in params.items():
                 self.pager.add(k, v)
             self.env_base = LazyEnv(self.pager, self.cs, _chunked_table,
@@ -308,7 +311,19 @@ class RelationalEngine:
         Per-table chunk pinning reads ``self._table_chunks`` at call time:
         empty for the seed decode plan (which *makes* the choices), the
         decode plan's choices for every later plan.
+
+        When a tracer is attached the whole compile is one named
+        ``cat="plan"`` span: first-touch plan compiles happen INSIDE
+        serving ticks (a new prefill length, a new batch bucket, a
+        watchdog re-plan), and without the span that time would show up
+        as unattributed tick wall time in the flight recorder.
         """
+        if self.tracer is not None:
+            with self.tracer.span(f"compile:{g.name}", cat="plan"):
+                return self._compile_pipe_inner(g, cache_mode)
+        return self._compile_pipe_inner(g, cache_mode)
+
+    def _compile_pipe_inner(self, g, cache_mode: str):
         infer_shapes(g)
         preoptimize(g)
         pipe = op_map(g, chunk_size=self.cs)
@@ -494,15 +509,69 @@ class RelationalEngine:
             return {}
         return {d.table: d.precision for d in plan.precision_decisions}
 
+    def replan(self, cost_params) -> None:
+        """Re-run physical planning under recalibrated cost weights and
+        swap the compiled plan caches — the drift watchdog's observe→act
+        hook (ROADMAP "adaptive re-planning").  Call between scheduler
+        ticks only: live sessions hold references to the *old* pipelines
+        for at most the tick in flight, and the next tick's plan lookups
+        recompile against the new weights.
+
+        Token-exactness mid-flight is guaranteed by what stays pinned:
+
+        * **cache layout** — live session/batched cache tables already
+          materialised their key order; the recompile is forced to the
+          resolved ``self._prefill_cache_mode``, exactly like every
+          prefill/batched plan after the seed decode plan.
+        * **chunk sizes** — ``self._table_chunks`` (and the shared
+          ``ResidencyPool.chunks``) pin every previously-chunked table,
+          so no plan can re-declare a physical width.
+        * **precision** — the shared pool records a precision decision
+          for *every* candidate table (f32 included), so recalibrated
+          weights can re-rank layouts but never flip a stored payload
+          format under a running session.
+
+        What the new weights CAN change — row-vs-col access paths, and
+        chunk/precision choices for tables planned for the first time —
+        is value-exact by construction.
+        """
+        from repro.obs.log import log_event
+        self._cost_params = cost_params
+        # make the current plan's quantisation choices explicit pins
+        # (the pool already enforces them; this keeps them visible on
+        # the engine and survives a future pool swap)
+        for t, p in self.table_precision_choices.items():
+            self._table_precisions.setdefault(t, p)
+        pipe = self._compile_pipe(
+            lg.build_decode_graph(self.spec, cache_len=self.max_len),
+            cache_mode=self._prefill_cache_mode)
+        self._register_layouts(pipe)
+        self._register_shards(pipe)
+        self.decode_pipe = pipe
+        # drop the derived plan caches: next tick recompiles its bucket
+        # under the new weights (sessions join/leave freely meanwhile)
+        self._prefill_pipes.clear()
+        self._batched_pipes.clear()
+        self.replans += 1
+        if self.metrics is not None:
+            self.metrics.counter(
+                "engine_replans_total",
+                "mid-flight re-planning events (drift watchdog)").inc()
+        log_event("engine_replan", replans=self.replans,
+                  group_weight=getattr(cost_params, "group_weight", None))
+
     # -- incremental session API (used by the continuous-batching scheduler) --
 
     def start_session(self, prompt: List[int]):
         """Prefill; returns a session dict holding env + cursor + first tok."""
         T = len(prompt)
-        env = self._fresh_env()
-        env["token_ids"] = lg.token_table(np.asarray(prompt, np.int32))
-        env["freq_each_token"] = lg.rope_freq_table(
-            np.arange(T), self.spec.head_dim, self.spec.rope_theta)
+        env_span = (self.tracer.span("session_env", cat="decoder")
+                    if self.tracer is not None else contextlib.nullcontext())
+        with env_span:
+            env = self._fresh_env()
+            env["token_ids"] = lg.token_table(np.asarray(prompt, np.int32))
+            env["freq_each_token"] = lg.rope_freq_table(
+                np.arange(T), self.spec.head_dim, self.spec.rope_theta)
         if self.pager is not None:
             self.pager.prefetch(["vocabulary"])
         outs, env = run_pipeline(self._prefill_pipe(T), env,
@@ -535,13 +604,16 @@ class RelationalEngine:
             raise ValueError(
                 f"suffix prefill needs >= 1 new token: prompt length "
                 f"{len(prompt)} <= boundary {boundary}")
-        env = self._weights_env()
-        env.update(cache_tables)
-        env["token_ids"] = lg.token_table(
-            np.asarray(prompt[boundary:], np.int32))
-        env["freq_each_token"] = lg.rope_freq_table(
-            np.arange(boundary, len(prompt)), self.spec.head_dim,
-            self.spec.rope_theta)
+        env_span = (self.tracer.span("session_env", cat="decoder")
+                    if self.tracer is not None else contextlib.nullcontext())
+        with env_span:
+            env = self._weights_env()
+            env.update(cache_tables)
+            env["token_ids"] = lg.token_table(
+                np.asarray(prompt[boundary:], np.int32))
+            env["freq_each_token"] = lg.rope_freq_table(
+                np.arange(boundary, len(prompt)), self.spec.head_dim,
+                self.spec.rope_theta)
         if self.pager is not None:
             self.pager.prefetch(["vocabulary"])
         outs, env = run_pipeline(self._prefill_pipe(T, suffix=True), env,
@@ -667,6 +739,15 @@ class BatchedDecoder:
         self._view_key: Optional[tuple] = None
         self._views: Optional[dict] = None
 
+    def _span(self, name: str, **args):
+        """Named decoder-phase span (no-op without a tracer) — slot
+        writes and prefix-cache work happen outside ``run_pipeline``, and
+        unnamed they would show up as unattributed tick wall time in the
+        flight recorder."""
+        if self.engine.tracer is None:
+            return contextlib.nullcontext()
+        return self.engine.tracer.span(name, cat="decoder", **args)
+
     def prefill(self, prompt: List[int], seq_id: int) -> int:
         # write_prefill overwrites the WHOLE slot (full cache_len), so a
         # reused slot cannot leak a previous sequence's rows even if the
@@ -674,7 +755,8 @@ class BatchedDecoder:
         # generation, invalidating any cached batch view over it
         self._unbind(seq_id)
         sess = self.engine.start_session(list(prompt))
-        self.pool.write_prefill(seq_id, sess["env"], len(prompt))
+        with self._span("cache_fill"):
+            self.pool.write_prefill(seq_id, sess["env"], len(prompt))
         return sess["tok"]
 
     def prefill_ex(self, prompt: List[int], seq_id: int
@@ -695,28 +777,31 @@ class BatchedDecoder:
         pc = self.prefix_cache
         if pc is None:
             return self.prefill(prompt, seq_id), 0
-        hit = pc.lookup(prompt)
+        with self._span("prefix_lookup"):
+            hit = pc.lookup(prompt)
         if hit is None:
             sess = self.engine.start_session(prompt)
-            self.pool.write_prefill(seq_id, sess["env"], len(prompt))
-            pc.insert(prompt, sess["env"])
+            with self._span("cache_fill"):
+                self.pool.write_prefill(seq_id, sess["env"], len(prompt))
+                pc.insert(prompt, sess["env"])
             return sess["tok"], 0
         seg, boundary = hit
         sess = self.engine.start_suffix_session(prompt, boundary,
                                                 seg.tables)
-        if self._resolve_bind(boundary) == "share":
-            # slot holds only the divergent suffix; gathers splice the
-            # segment's rows in (UNION-remap); the segment stays pinned
-            pc.acquire(seg)
-            self.pool.write_suffix(seq_id, sess["env"], len(prompt),
-                                   boundary)
-            self.pool.bind_segment(seq_id, seg, boundary)
-        else:
-            # bulk copy (INSERT ... SELECT): the slot owns a private full
-            # copy, no pin, no gather-time splice
-            self.pool.write_prefill(seq_id, sess["env"], len(prompt))
-        # intern the extended prefix too (no-op if coverage is unchanged)
-        pc.insert(prompt, sess["env"])
+        with self._span("cache_fill", prefix_hit=boundary):
+            if self._resolve_bind(boundary) == "share":
+                # slot holds only the divergent suffix; gathers splice the
+                # segment's rows in (UNION-remap); the segment stays pinned
+                pc.acquire(seg)
+                self.pool.write_suffix(seq_id, sess["env"], len(prompt),
+                                       boundary)
+                self.pool.bind_segment(seq_id, seg, boundary)
+            else:
+                # bulk copy (INSERT ... SELECT): the slot owns a private
+                # full copy, no pin, no gather-time splice
+                self.pool.write_prefill(seq_id, sess["env"], len(prompt))
+            # intern the extended prefix too (no-op if coverage unchanged)
+            pc.insert(prompt, sess["env"])
         return sess["tok"], boundary
 
     def _resolve_bind(self, boundary: int) -> str:
@@ -744,6 +829,11 @@ class BatchedDecoder:
                ) -> List[int]:
         eng = self.engine
         metrics = eng.metrics
+        # decoder-phase spans (cat="decoder") name the tick's work outside
+        # run_pipeline — view gathers, cache writeback, logits extraction —
+        # so a flight-recorded tick attributes its wall time end to end
+        span = (eng.tracer.span if eng.tracer is not None
+                else (lambda *a, **k: contextlib.nullcontext()))
         t0 = time.perf_counter() if metrics is not None else 0.0
         B = len(seq_ids)
         bucket = eng._decode_bucket(B)
@@ -751,21 +841,24 @@ class BatchedDecoder:
         toks = list(last_tokens) + [last_tokens[-1]] * (bucket - B)
         pipe = eng._batched_decode_pipe(bucket)
         positions = self.pool.positions[np.asarray(ids)]
-        env = eng._weights_env()
         view_key = (tuple(ids), self.pool.slot_generations(ids))
         view_hit = self._view_key == view_key
-        if view_hit:
-            env.update(self._views)  # unchanged batch: reuse last views
-        else:
-            env.update(self.pool.gather_views(ids))
+        with span("cache_views", cat="decoder",
+                  outcome="hit" if view_hit else "miss"):
+            env = eng._weights_env()
+            if view_hit:
+                env.update(self._views)  # unchanged batch: reuse last views
+            else:
+                env.update(self.pool.gather_views(ids))
+            env["token_ids"] = lg.token_table(np.asarray(toks, np.int32),
+                                              key="seq")
+            env["freq_each_token"] = lg.rope_freq_table(
+                positions, eng.spec.head_dim, eng.spec.rope_theta,
+                key="seq")
         if metrics is not None:
             metrics.counter("decoder_view_cache_total",
                             "batched cache-view gathers",
                             outcome="hit" if view_hit else "miss").inc()
-        env["token_ids"] = lg.token_table(np.asarray(toks, np.int32),
-                                          key="seq")
-        env["freq_each_token"] = lg.rope_freq_table(
-            positions, eng.spec.head_dim, eng.spec.rope_theta, key="seq")
         outs, env = run_pipeline(
             pipe, env,
             scalars={"seq_positions": jnp.asarray(positions, jnp.int32)},
@@ -774,13 +867,16 @@ class BatchedDecoder:
         # the tick's only cache mutation is one appended row per sequence
         # at positions[b] — write back just those rows; the updated views
         # (which already contain them) serve the next tick's gather
-        self.pool.scatter_rows(ids, env, positions)
-        self._views = {name: env[name] for name in self.pool.tables}
-        self._view_key = view_key
-        for s in seq_ids:
-            self.pool.positions[s] += 1
-        logits = np.asarray(outs["logits"].cols["v"]).reshape(
-            bucket, -1)[:B, : eng.spec.vocab]
+        with span("cache_writeback", cat="decoder"):
+            self.pool.scatter_rows(ids, env, positions)
+            self._views = {name: env[name] for name in self.pool.tables}
+            self._view_key = view_key
+            for s in seq_ids:
+                self.pool.positions[s] += 1
+        with span("logits_argmax", cat="decoder"):
+            logits = np.asarray(outs["logits"].cols["v"]).reshape(
+                bucket, -1)[:B, : eng.spec.vocab]
+            next_toks = [int(t) for t in np.argmax(logits, axis=1)]
         if metrics is not None:
             metrics.histogram(
                 "decoder_tick_seconds",
@@ -789,7 +885,7 @@ class BatchedDecoder:
             metrics.gauge("decoder_bucket_occupancy",
                           "live sequences / padded bucket size").set(
                               B / bucket)
-        return [int(t) for t in np.argmax(logits, axis=1)]
+        return next_toks
 
 
 class DirectEngine:

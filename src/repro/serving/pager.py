@@ -51,13 +51,18 @@ class WeightPager:
     """
 
     def __init__(self, budget_bytes: int, disk_dir: Optional[str] = None,
-                 policy: str = "clock", metrics=None):
+                 policy: str = "clock", metrics=None, tracer=None):
         self.budget = budget_bytes
         self.policy = policy
         self.disk_dir = disk_dir
         # optional repro.obs.metrics.MetricsRegistry mirror of ``stats``
         # (``stats`` stays the benchmarks' source of truth)
         self.metrics = metrics
+        # optional repro.obs.trace.TraceRecorder: cold→device fetch spans
+        # (cat="pager"), stamped with the requests that faulted them in
+        # via the ambient TraceContext.  Spans go through add_span (no
+        # depth mutation), which is safe from the prefetch thread too.
+        self.tracer = tracer
         self._cold: Dict[str, np.ndarray] = {}       # memmap or host array
         self._hot: Dict[str, jax.Array] = {}
         self._ref: Dict[str, bool] = {}               # CLOCK reference bits
@@ -173,7 +178,13 @@ class WeightPager:
                     self.metrics.counter(
                         "pager_bytes_loaded_total",
                         "bytes moved cold→device").inc(self._nbytes(cold))
+                t0 = self.tracer._now_us() if self.tracer is not None else 0.0
                 arr = jax.device_put(np.asarray(cold))
+                if self.tracer is not None:
+                    self.tracer.add_span(
+                        f"pager_fetch:{name}", cat="pager", ts_us=t0,
+                        dur_us=self.tracer._now_us() - t0, depth=1,
+                        bytes=self._nbytes(cold))
                 nb = self._nbytes(arr)
                 self._evict_until(nb)
                 self._held += nb
@@ -211,7 +222,15 @@ class WeightPager:
                     cold = self._cold.get(n)
                 if cold is None:
                     continue
+                t0 = self.tracer._now_us() if self.tracer is not None else 0.0
                 arr = jax.device_put(np.asarray(cold))  # slow copy: no lock
+                if self.tracer is not None:
+                    # prefetches serve future, not-yet-known requests: the
+                    # span is recorded context-free by design
+                    self.tracer.add_span(
+                        f"pager_prefetch:{n}", cat="pager", ts_us=t0,
+                        dur_us=self.tracer._now_us() - t0, depth=1,
+                        bytes=self._nbytes(cold))
                 nb = self._nbytes(arr)
                 with self._lock:
                     if n in self._hot or n in self._prefetched:

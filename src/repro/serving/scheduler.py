@@ -22,6 +22,7 @@ import time
 from collections import deque
 from typing import Callable, Deque, Dict, List, Optional
 
+from repro.obs.context import TraceContext, activate, new_trace_id
 from repro.serving.kvcache import PagedKVCache
 
 
@@ -31,6 +32,10 @@ class Request:
     prompt: List[int]
     max_new_tokens: int
     arrival_s: float = 0.0
+    # end-to-end trace id: minted at HTTP admission (or at submit() when
+    # the front end didn't) and carried through every span / DB operator
+    # the request touches — the key of /debug/trace/{id}
+    trace_id: str = ""
     # serving SLOs (seconds, relative): used for violation accounting and
     # to prefer already-past-deadline victims at preemption time
     ttft_slo_s: Optional[float] = None
@@ -119,7 +124,8 @@ class ContinuousBatcher:
                  decode_fn: Callable, max_batch: int,
                  release_fn: Optional[Callable] = None, metrics=None,
                  on_token: Optional[Callable] = None,
-                 on_done: Optional[Callable] = None):
+                 on_done: Optional[Callable] = None,
+                 tracer=None, flight=None, watchdog=None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if max_batch > kv.max_seqs:
@@ -143,6 +149,19 @@ class ContinuousBatcher:
         self.metrics = metrics
         self.on_token = on_token
         self.on_done = on_done
+        # optional repro.obs wiring (all three default off = zero cost):
+        # tracer  — the engine's TraceRecorder; when a flight recorder is
+        #           given too, the batcher DRAINS it after every prefill/
+        #           decode so a long-running server never accumulates an
+        #           unbounded span list (the flight ring is the retention
+        #           policy)
+        # flight  — repro.obs.flight.FlightRecorder receiving one record
+        #           per prefill/decode tick with the request ids it served
+        # watchdog — object with on_tick() called after each decode at a
+        #           tick boundary (repro.serving.watchdog.DriftWatchdog)
+        self.tracer = tracer
+        self.flight = flight
+        self.watchdog = watchdog
 
     def _release(self, seq_id: int) -> None:
         self.kv.free_seq(seq_id)
@@ -151,6 +170,8 @@ class ContinuousBatcher:
 
     def submit(self, req: Request) -> None:
         req.arrival_s = time.perf_counter()
+        if not req.trace_id:
+            req.trace_id = new_trace_id()
         self.queue.append(req)
 
     def _emit(self, req: Request, tok: int) -> None:
@@ -161,25 +182,35 @@ class ContinuousBatcher:
         req.done_s = time.perf_counter() - req.arrival_s
         self.finished.append(req)
         self.stats.completed += 1
+        # TPOT over the tokens after the first (matches §4's definition;
+        # a 1-token request has no inter-token gaps)
+        gaps = max(1, len(req.generated) - 1)
+        tpot = (req.done_s - (req.first_token_s or 0.0)) / gaps
+        ttft_violated = (req.ttft_slo_s is not None
+                         and req.first_token_s is not None
+                         and req.first_token_s > req.ttft_slo_s)
+        tpot_violated = req.tpot_slo_s is not None and tpot > req.tpot_slo_s
         if self.metrics is not None:
             self.metrics.counter("serving_completed_total",
                                  "requests finished").inc()
-            # TPOT over the tokens after the first (matches §4's
-            # definition; a 1-token request has no inter-token gaps)
-            gaps = max(1, len(req.generated) - 1)
-            tpot = (req.done_s - (req.first_token_s or 0.0)) / gaps
+            # the exemplar links this observation's bucket to the
+            # request's /debug/trace/{trace_id} dump (OpenMetrics render)
             self.metrics.histogram(
                 "serving_tpot_seconds",
-                "mean time per output token after the first").observe(tpot)
-            if (req.ttft_slo_s is not None and req.first_token_s is not None
-                    and req.first_token_s > req.ttft_slo_s):
+                "mean time per output token after the first").observe(
+                    tpot, exemplar=req.trace_id)
+            if ttft_violated:
                 self.metrics.counter(
                     "serving_slo_violations_total",
                     "completions that missed an SLO", kind="ttft").inc()
-            if req.tpot_slo_s is not None and tpot > req.tpot_slo_s:
+            if tpot_violated:
                 self.metrics.counter(
                     "serving_slo_violations_total",
                     "completions that missed an SLO", kind="tpot").inc()
+        if self.flight is not None and (ttft_violated or tpot_violated):
+            # SLO violators pin their full traces as exemplars so the
+            # interesting ticks outlive the flight ring
+            self.flight.pin(req.trace_id, reason="slo")
         self._release(seq_id)
         if self.on_done is not None:
             self.on_done(req)
@@ -205,8 +236,26 @@ class ContinuousBatcher:
             self.kv.allocate_seq(seq_id)
             # prefill_fn may return a bare token (legacy contract) or
             # (token, cached_tokens) — the prefix-cached decoders report
-            # how much of the context they skipped via a shared segment
-            res = self.prefill_fn(req, seq_id)
+            # how much of the context they skipped via a shared segment.
+            # The prefill runs under the request's own TraceContext, so
+            # every span it emits (pipeline steps, pager fetches, shard
+            # work) is stamped with this rid/trace_id.
+            pctx = TraceContext.for_request(req.rid, req.trace_id,
+                                            phase="prefill",
+                                            tick=self.stats.ticks)
+            n0 = (len(self.tracer.events) if self.tracer is not None
+                  and self.flight is not None else 0)
+            t0p = time.perf_counter()
+            with activate(pctx):
+                res = self.prefill_fn(req, seq_id)
+            if self.flight is not None:
+                spans = (self.tracer.drain(n0)
+                         if self.tracer is not None else ())
+                self.flight.record_tick(
+                    "prefill", spans=spans,
+                    wall_us=(time.perf_counter() - t0p) * 1e6,
+                    tick=self.stats.ticks, request_ids=(req.rid,),
+                    trace_ids=(req.trace_id,))
             tok, cached = res if isinstance(res, tuple) else (res, 0)
             # the scheduler owns kv.seq_lens end to end: the context length
             # here, the per-tick decode increment in tick()
@@ -237,7 +286,8 @@ class ContinuousBatcher:
                 if self.metrics is not None:
                     self.metrics.histogram(
                         "serving_ttft_seconds",
-                        "time to first token").observe(req.first_token_s)
+                        "time to first token").observe(
+                            req.first_token_s, exemplar=req.trace_id)
             self._emit(req, tok)
             if len(req.generated) >= req.max_new_tokens:
                 # the prefill token already met the budget (e.g.
@@ -307,13 +357,30 @@ class ContinuousBatcher:
 
         seq_ids = sorted(self.active)
         last = [self.active[s].generated[-1] for s in seq_ids]
-        t0 = time.perf_counter() if self.metrics is not None else 0.0
-        next_tokens = self.decode_fn(seq_ids, last)
+        # a batched decode tick serves every active request at once: the
+        # context carries all of them, and every span the tick emits is
+        # stamped with the full set
+        dctx = TraceContext(
+            request_ids=tuple(self.active[s].rid for s in seq_ids),
+            trace_ids=tuple(self.active[s].trace_id for s in seq_ids),
+            phase="decode", tick=self.stats.ticks)
+        n0 = (len(self.tracer.events) if self.tracer is not None
+              and self.flight is not None else 0)
+        t0 = time.perf_counter()
+        with activate(dctx):
+            next_tokens = self.decode_fn(seq_ids, last)
+        t1 = time.perf_counter()
         self.stats.decode_steps += 1
+        if self.flight is not None:
+            spans = self.tracer.drain(n0) if self.tracer is not None else ()
+            self.flight.record_tick(
+                "decode", spans=spans, wall_us=(t1 - t0) * 1e6,
+                tick=self.stats.ticks, request_ids=dctx.request_ids,
+                trace_ids=dctx.trace_ids)
         if self.metrics is not None:
             self.metrics.histogram(
                 "serving_tick_seconds",
-                "decode tick latency").observe(time.perf_counter() - t0)
+                "decode tick latency").observe(t1 - t0)
             self.metrics.gauge(
                 "serving_active_sequences",
                 "sequences in the running batch").set(len(seq_ids))
@@ -334,6 +401,10 @@ class ContinuousBatcher:
             if len(req.generated) >= req.max_new_tokens:
                 self._finish(req, seq_id)
                 del self.active[seq_id]
+        if self.watchdog is not None:
+            # tick boundary: no plan is mid-flight, so the watchdog may
+            # swap the engine's compiled pipelines here
+            self.watchdog.on_tick()
         return bool(self.active or self.queue)
 
     def run(self, max_ticks: int = 100000) -> List[Request]:

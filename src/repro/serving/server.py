@@ -15,9 +15,25 @@ Endpoints (stdlib asyncio streams — no HTTP framework):
   ``POST /v1/chat/completions``   — chat schema over the same path
   ``GET  /v1/models``             — the single served model
   ``GET  /metrics``               — Prometheus text exposition of the
-                                    shared ``obs.metrics`` registry
+                                    shared ``obs.metrics`` registry;
+                                    OpenMetrics (with trace-id exemplars)
+                                    via Accept negotiation or
+                                    ``?format=openmetrics``
   ``GET  /healthz``               — liveness + queue depth
+  ``GET  /debug/flight``          — flight-recorder dump: the last N
+                                    prefill/decode ticks + event log
+  ``GET  /debug/trace/{id}``      — one request's end-to-end Chrome
+                                    trace (id = trace_id or request id)
+  ``GET  /debug/drift``           — drift watchdog state + last report
   ``POST /admin/shutdown``        — graceful stop (used by CI)
+
+Every admitted request is assigned a ``trace_id`` (returned on
+responses and SSE chunks as an extension field); the scheduler runs its
+prefill/decode work under that request-scoped :class:`TraceContext`, so
+``/debug/trace/{trace_id}`` reconstructs admission → prefill → decode
+ticks → DB operators end to end.  The optional drift watchdog
+(``drift_every > 0``) periodically checks observed step timings against
+the cost model and re-plans the engine mid-flight when they diverge.
 
 Admission control: a bounded waiting queue (HTTP 429 + ``Retry-After``
 when full), per-request token budget caps and a context-length cap
@@ -42,9 +58,14 @@ import time
 from collections import deque
 from typing import Deque, Dict, Optional, Tuple
 
-from repro.obs.metrics import PROMETHEUS_CONTENT_TYPE
+from repro.obs.context import new_trace_id
+from repro.obs.flight import FlightRecorder
+from repro.obs.log import set_flight_recorder
+from repro.obs.metrics import (OPENMETRICS_CONTENT_TYPE,
+                               PROMETHEUS_CONTENT_TYPE)
 from repro.serving import api
 from repro.serving.scheduler import ContinuousBatcher, Request
+from repro.serving.watchdog import DriftWatchdog
 
 
 @dataclasses.dataclass
@@ -59,6 +80,10 @@ class ServerConfig:
     ttft_slo_s: Optional[float] = None   # default SLOs (None = unset)
     tpot_slo_s: Optional[float] = None
     idle_wait_s: float = 0.02         # scheduler-thread sleep when drained
+    flight_capacity: int = 256        # ticks retained by the flight ring
+    flight_events: int = 1024         # log events retained alongside
+    drift_every: int = 0              # watchdog cadence in ticks (0 = off)
+    drift_threshold: float = 0.5      # RMS relative drift that re-plans
 
 
 @dataclasses.dataclass
@@ -79,9 +104,29 @@ class AsyncLLMServer:
         self.kv = kv
         self.cfg = cfg or ServerConfig()
         self.metrics = metrics if metrics is not None else engine.metrics
-        self.tracer = tracer
+        self.tracer = tracer if tracer is not None else engine.tracer
         self.tokenizer = api.ToyTokenizer(engine.spec.vocab)
         self.decoder = engine.batched_decoder(max_seqs=kv.max_seqs)
+
+        # flight recorder: shares the tracer's epoch so spans, events and
+        # tick records interleave on one timeline; log_event() output is
+        # forwarded into its event ring
+        self.flight = (FlightRecorder.for_tracer(
+                           self.tracer, capacity=self.cfg.flight_capacity,
+                           event_capacity=self.cfg.flight_events)
+                       if self.tracer is not None
+                       else FlightRecorder(
+                           capacity=self.cfg.flight_capacity,
+                           event_capacity=self.cfg.flight_events))
+        set_flight_recorder(self.flight)
+        self.watchdog = (DriftWatchdog(
+                             engine, self.flight,
+                             every=self.cfg.drift_every,
+                             threshold=self.cfg.drift_threshold,
+                             batch=engine._decode_bucket(
+                                 min(self.cfg.max_batch, kv.max_seqs)),
+                             metrics=self.metrics)
+                         if self.cfg.drift_every > 0 else None)
 
         def prefill(req, seq_id):
             # req.context (prompt + preserved generated prefix), NOT
@@ -97,7 +142,9 @@ class AsyncLLMServer:
             kv, prefill, self.decoder.decode,
             max_batch=min(self.cfg.max_batch, kv.max_seqs),
             release_fn=self.decoder.free, metrics=self.metrics,
-            on_token=self._on_token, on_done=self._on_done)
+            on_token=self._on_token, on_done=self._on_done,
+            tracer=self.tracer, flight=self.flight,
+            watchdog=self.watchdog)
 
         self._streams: Dict[int, _Stream] = {}
         self._pending: Deque[Request] = deque()
@@ -160,6 +207,7 @@ class AsyncLLMServer:
 
     def _admit_request(self, parsed: api.CompletionRequest) -> _Stream:
         cfg = self.cfg
+        t0_admit = time.perf_counter()
         if parsed.max_tokens > cfg.max_tokens_cap:
             self._reject("token_budget")
             raise api.ApiError(
@@ -183,6 +231,10 @@ class AsyncLLMServer:
             req = Request(
                 rid=rid, prompt=list(parsed.prompt),
                 max_new_tokens=parsed.max_tokens,
+                # the end-to-end trace id is minted HERE, at HTTP
+                # admission — the earliest point the request exists —
+                # and returned on the response as an extension field
+                trace_id=new_trace_id(),
                 ttft_slo_s=(parsed.ttft_slo_s if parsed.ttft_slo_s
                             is not None else cfg.ttft_slo_s),
                 tpot_slo_s=(parsed.tpot_slo_s if parsed.tpot_slo_s
@@ -191,6 +243,10 @@ class AsyncLLMServer:
             self._streams[rid] = stream
             self._pending.append(req)
             self._cond.notify()
+        self.flight.record_admission(
+            req.rid, req.trace_id,
+            wall_us=(time.perf_counter() - t0_admit) * 1e6,
+            tick=self.batcher.stats.ticks)
         if self.metrics is not None:
             self.metrics.gauge("serving_queue_depth",
                                "requests waiting for a batch slot").set(
@@ -245,7 +301,8 @@ class AsyncLLMServer:
             length = int(headers.get("content-length", "0") or "0")
             if length:
                 body = await reader.readexactly(length)
-            status = await self._route(method, path, body, writer)
+            status = await self._route(method, path, body, writer,
+                                       headers=headers)
             self._count_request(path, status)
         except (ConnectionError, asyncio.IncompleteReadError):
             pass
@@ -276,22 +333,56 @@ class AsyncLLMServer:
                 pass
 
     async def _route(self, method: str, path: str, body: bytes,
-                     writer) -> int:
+                     writer, headers: Optional[Dict[str, str]] = None
+                     ) -> int:
+        headers = headers or {}
+        path, _, query = path.partition("?")
         if path == "/v1/models" and method == "GET":
             await self._write_json(
                 writer, 200, api.models_response(self.cfg.model_id))
             return 200
         if path == "/metrics" and method == "GET":
-            text = (self.metrics.render_prometheus()
-                    if self.metrics is not None else "")
-            await self._write_response(writer, 200, text.encode(),
-                                       PROMETHEUS_CONTENT_TYPE)
+            # content negotiation: OpenMetrics (trace-id exemplars on the
+            # SLO histograms) via the Accept header or ?format=openmetrics;
+            # plain Prometheus text otherwise
+            want_om = ("application/openmetrics-text"
+                       in headers.get("accept", "")
+                       or "format=openmetrics" in query)
+            if self.metrics is None:
+                text, ctype = "", PROMETHEUS_CONTENT_TYPE
+            elif want_om:
+                text = self.metrics.render_openmetrics()
+                ctype = OPENMETRICS_CONTENT_TYPE
+            else:
+                text = self.metrics.render_prometheus()
+                ctype = PROMETHEUS_CONTENT_TYPE
+            await self._write_response(writer, 200, text.encode(), ctype)
             return 200
         if path == "/healthz" and method == "GET":
             await self._write_json(
                 writer, 200,
                 {"status": "ok", "queue_depth": self._queue_depth(),
                  "active": len(self.batcher.active)})
+            return 200
+        if path == "/debug/flight" and method == "GET":
+            await self._write_json(writer, 200, self.flight.to_dict())
+            return 200
+        if path.startswith("/debug/trace/") and method == "GET":
+            key = path[len("/debug/trace/"):]
+            trace = self.flight.request_trace(key)
+            if trace is None:
+                raise api.ApiError(
+                    404, f"no flight-recorded ticks for request {key!r} "
+                         "(evicted from the ring, or never served)",
+                    code="trace_not_found")
+            await self._write_json(writer, 200, trace)
+            return 200
+        if path == "/debug/drift" and method == "GET":
+            await self._write_json(
+                writer, 200,
+                self.watchdog.to_dict() if self.watchdog is not None
+                else {"enabled": False,
+                      "engine_replans": getattr(self.engine, "replans", 0)})
             return 200
         if path == "/admin/shutdown" and method == "POST":
             await self._write_json(writer, 200, {"status": "stopping"})
@@ -334,7 +425,8 @@ class AsyncLLMServer:
             writer, 200,
             api.completion_response(stream.req.rid, self.cfg.model_id,
                                     parsed, tokens, self.tokenizer,
-                                    cached_tokens=stream.req.cached_tokens))
+                                    cached_tokens=stream.req.cached_tokens,
+                                    trace_id=stream.req.trace_id))
 
     async def _stream_completion(self, writer, parsed, stream) -> None:
         head = ("HTTP/1.1 200 OK\r\n"
@@ -352,7 +444,8 @@ class AsyncLLMServer:
                 last = index + 1 >= parsed.max_tokens
                 writer.write(api.sse_event(api.stream_chunk(
                     stream.req.rid, self.cfg.model_id, parsed, tok, index,
-                    self.tokenizer, finish=last)))
+                    self.tokenizer, finish=last,
+                    trace_id=stream.req.trace_id)))
                 await writer.drain()
                 index += 1
             writer.write(api.SSE_DONE)

@@ -172,13 +172,20 @@ class ShardWorker:
     # -- execution ----------------------------------------------------------
 
     def run(self, dec: ShardDecision, s: int, left: DenseTable,
-            scalars) -> tuple:
+            scalars, ctx=None) -> tuple:
         """Execute this worker's plan copy for one site; returns
         ``(partial_table, busy_seconds)``.  The left activation arrives
         pre-computed (and, for row sites, pre-sliced) from the
         coordinator: it is seeded into the worker's environment when the
         plan's left is a Scan (the executor's Scan branch reads the
-        environment, never the memo) and into the memo otherwise."""
+        environment, never the memo) and into the memo otherwise.
+
+        ``ctx`` is the coordinator's :class:`~repro.obs.context.
+        TraceContext`: contextvars do NOT cross the thread-pool
+        boundary, so the pool captures it at fan-out and this method
+        re-activates it here — the per-worker spans then carry the same
+        request ids as the coordinator's."""
+        from repro.obs.context import activate
         t0 = time.perf_counter()
         env = self.env.copy()
         memo: Dict[int, DenseTable] = {}
@@ -187,15 +194,16 @@ class ShardWorker:
         else:
             memo[id(dec.left)] = left
         root = dec.shard_roots[s]
-        if self.tracer is not None:
-            with self.tracer.span(f"{dec.step_name}::shard{s}", cat="shard",
-                                  table=dec.table, kind=dec.kind,
-                                  combine=dec.combine):
+        with activate(ctx):
+            if self.tracer is not None:
+                with self.tracer.span(f"{dec.step_name}::shard{s}",
+                                      cat="shard", table=dec.table,
+                                      kind=dec.kind, combine=dec.combine):
+                    out = execute(root, env, memo, scalars)
+                    jax.block_until_ready(list(out.cols.values()))
+            else:
                 out = execute(root, env, memo, scalars)
                 jax.block_until_ready(list(out.cols.values()))
-        else:
-            out = execute(root, env, memo, scalars)
-            jax.block_until_ready(list(out.cols.values()))
         busy = time.perf_counter() - t0
         self.metrics.counter("shard_worker_runs_total",
                              "per-shard plan executions").inc()
@@ -300,6 +308,11 @@ class ShardWorkerPool:
         Decisions arrive inner-first (planner post-order), so a site
         nested inside another site's activation subtree is combined —
         and memo-seeded — before the outer site's left executes."""
+        from repro.obs.context import current_context
+        # capture the coordinator's request context here: contextvars do
+        # not propagate into ThreadPoolExecutor workers, so each worker
+        # re-activates it explicitly (ShardWorker.run)
+        ctx = current_context()
         for dec in shard_plan.by_step[step.name]:
             left = execute(dec.left, env, memo, scalars, tracer)
             jobs = []
@@ -309,11 +322,12 @@ class ShardWorkerPool:
                     left_s = slice_table(left, dec.left_key, lo, hi)
                 jobs.append((s, left_s))
             if self.sequential:
-                results = [self.workers[s].run(dec, s, left_s, scalars)
+                results = [self.workers[s].run(dec, s, left_s, scalars,
+                                               ctx=ctx)
                            for s, left_s in jobs]
             else:
                 futures = [self._exec.submit(
-                    self.workers[s].run, dec, s, left_s, scalars)
+                    self.workers[s].run, dec, s, left_s, scalars, ctx=ctx)
                     for s, left_s in jobs]
                 results = [f.result() for f in futures]
             partials = [r[0] for r in results]

@@ -1,0 +1,391 @@
+"""Request-scoped trace context, flight recorder and drift watchdog
+(ISSUE 10 tentpole).
+
+Covers the three new observability pieces end to end but without
+sockets (the HTTP surface rides in ``test_server.py``): contextvars
+propagation into spans/events, the bounded tick ring with pinning and
+windowed reads under concurrent writers, and the watchdog's
+observe → refit → re-plan loop — including the acceptance property
+that a re-plan landing in the middle of a live decode session leaves
+the generated tokens exactly as an unperturbed run produces them.
+"""
+
+import threading
+import warnings
+
+import pytest
+
+from repro.core.llama_graph import LlamaSpec, init_llama_params
+from repro.obs.context import (TraceContext, activate, current_context,
+                               new_trace_id)
+from repro.obs.flight import FlightRecorder
+from repro.obs.log import log_event, set_flight_recorder
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import SpanEvent, TraceRecorder
+from repro.serving.watchdog import DriftWatchdog
+
+SPEC = LlamaSpec(vocab=16, d_model=8, n_layers=1, n_heads=2, n_kv=1,
+                 d_ff=16, rope_theta=10000.0)
+
+
+def _engine(**kw):
+    from repro.serving.engine import RelationalEngine
+    return RelationalEngine(SPEC, init_llama_params(SPEC, seed=0),
+                            chunk_size=4, max_len=16, **kw)
+
+
+def _step_span(name, ts, dur, **args):
+    return SpanEvent(name=name, cat="step", ts_us=ts, dur_us=dur,
+                     depth=0, args=args)
+
+
+class TestTraceContext:
+    def test_trace_ids_are_short_hex_and_unique(self):
+        ids = {new_trace_id() for _ in range(64)}
+        assert len(ids) == 64
+        assert all(len(t) == 16 and int(t, 16) >= 0 for t in ids)
+
+    def test_activate_scopes_and_nests(self):
+        assert current_context() is None
+        outer = TraceContext.for_request(1, "aa", phase="prefill")
+        inner = TraceContext(request_ids=(1, 2), trace_ids=("aa", "bb"),
+                             phase="decode", tick=7)
+        with activate(outer):
+            assert current_context() is outer
+            with activate(inner):
+                assert current_context().phase == "decode"
+            # None deactivates: work serving no particular request
+            with activate(None):
+                assert current_context() is None
+            assert current_context() is outer
+        assert current_context() is None
+
+    def test_span_auto_attaches_context(self):
+        rec = TraceRecorder()
+        ctx = TraceContext(request_ids=(3, 4), trace_ids=("x1", "x2"),
+                           phase="decode", tick=9)
+        with activate(ctx):
+            with rec.span("attn", cat="step", phase="explicit"):
+                pass
+            rec.add_span("fetch", cat="pager", ts_us=0.0, dur_us=1.0)
+        with rec.span("outside", cat="step"):
+            pass
+        by_name = {e.name: e.args for e in rec.events}
+        assert by_name["attn"]["rids"] == [3, 4]
+        assert by_name["attn"]["trace_ids"] == ["x1", "x2"]
+        # explicit kwargs win over the ambient context on collision
+        assert by_name["attn"]["phase"] == "explicit"
+        assert by_name["fetch"]["tick"] == 9
+        assert "rids" not in by_name["outside"]
+
+    def test_context_does_not_cross_threads(self):
+        # contextvars are thread-local: worker threads see no context
+        # unless they re-activate a captured one (the shard pool does)
+        seen = {}
+        ctx = TraceContext.for_request(5, "cc")
+
+        def worker():
+            seen["bare"] = current_context()
+            with activate(ctx):
+                seen["activated"] = current_context()
+
+        with activate(ctx):
+            t = threading.Thread(target=worker)
+            t.start()
+            t.join()
+        assert seen["bare"] is None
+        assert seen["activated"] is ctx
+
+
+class TestLogEventFlightForwarding:
+    def test_event_carries_context_and_lands_in_flight(self):
+        flight = FlightRecorder()
+        set_flight_recorder(flight)
+        try:
+            ctx = TraceContext.for_request(8, "ee", phase="decode", tick=3)
+            with activate(ctx):
+                log_event("unit_test_event", detail="x")
+            log_event("unit_test_event_bare")
+        finally:
+            set_flight_recorder(None)
+        evs = flight.events()
+        assert [e.event for e in evs] == ["unit_test_event",
+                                         "unit_test_event_bare"]
+        assert evs[0].fields["rids"] == [8]
+        assert evs[0].fields["trace_ids"] == ["ee"]
+        assert evs[0].fields["detail"] == "x"
+        assert "rids" not in evs[1].fields
+        # both on the recorder's monotonic timeline, in order
+        assert evs[0].ts_us <= evs[1].ts_us
+
+
+class TestFlightRecorder:
+    def test_ring_bounded_with_eviction(self):
+        fl = FlightRecorder(capacity=4)
+        for i in range(10):
+            fl.record_tick("decode", tick=i, request_ids=(i,),
+                           trace_ids=(f"t{i}",))
+        assert len(fl.ticks()) == 4
+        assert fl.dropped_ticks == 6
+        assert [t.tick for t in fl.ticks()] == [6, 7, 8, 9]
+        # evicted, unpinned requests leave the index entirely
+        assert fl.request_ticks("t0") == []
+        assert fl.request_ticks("0") == []
+        assert fl.request_ticks("t9")[0].tick == 9
+
+    def test_index_accepts_rid_and_trace_id(self):
+        fl = FlightRecorder()
+        fl.record_admission(7, "abc123", wall_us=50.0)
+        fl.record_tick("prefill", tick=1, request_ids=(7,),
+                       trace_ids=("abc123",))
+        assert [t.kind for t in fl.request_ticks("abc123")] == \
+            ["admission", "prefill"]
+        assert fl.request_ticks("7") == fl.request_ticks("abc123")
+
+    def test_pinned_exemplars_survive_eviction(self):
+        fl = FlightRecorder(capacity=2, max_pinned=2)
+        fl.record_tick("decode", tick=0, request_ids=(1,),
+                       trace_ids=("slow",))
+        fl.pin("slow", reason="slo")
+        # future ticks for a pinned trace are pinned as they arrive
+        fl.record_tick("decode", tick=1, request_ids=(1, 2),
+                       trace_ids=("slow", "fast"))
+        for i in range(2, 7):
+            fl.record_tick("decode", tick=i, trace_ids=(f"x{i}",))
+        # both "slow" ticks fell out of the ring yet stay reachable
+        assert len(fl.ticks()) == 2
+        assert [t.tick for t in fl.request_ticks("slow")] == [0, 1]
+        assert all(t.pinned for t in fl.request_ticks("slow"))
+        # ... and the LRU pin bound evicts the oldest pin
+        fl.pin("p1")
+        fl.pin("p2")
+        assert "slow" not in fl.to_dict()["pinned"]
+
+    def test_step_times_us_windowing(self):
+        fl = FlightRecorder()
+        fl.record_tick("decode", spans=(_step_span("a", 0, 100.0),
+                                        _step_span("b", 100, 50.0)))
+        fl.record_tick("prefill", spans=(_step_span("a", 200, 999.0),))
+        fl.record_tick("decode", spans=(_step_span("a", 300, 10.0),))
+        obs, last = fl.step_times_us(kind="decode", cat="step")
+        assert obs == {"a": 110.0, "b": 50.0}   # prefill tick excluded
+        # the returned watermark makes the next read incremental
+        fl.record_tick("decode", spans=(_step_span("b", 400, 7.0),))
+        obs2, last2 = fl.step_times_us(kind="decode", cat="step",
+                                       after_seq=last)
+        assert obs2 == {"b": 7.0}
+        assert last2 > last
+        obs3, _ = fl.step_times_us(kind="decode", cat="step",
+                                   after_seq=last2)
+        assert obs3 == {}
+
+    def test_request_trace_reconstructs_end_to_end(self):
+        fl = FlightRecorder()
+        fl.record_admission(3, "tid3", wall_us=40.0, tick=0)
+        fl.record_tick(
+            "prefill", tick=1, request_ids=(3,), trace_ids=("tid3",),
+            wall_us=100.0,
+            spans=(_step_span("embed", 50, 60.0, trace_ids=["tid3"]),
+                   _step_span("attn", 110, 40.0, trace_ids=["tid3"])))
+        # a batched decode tick shared with another request: spans tagged
+        # for the other request only must not leak into this trace
+        fl.record_tick(
+            "decode", tick=2, request_ids=(3, 4),
+            trace_ids=("tid3", "tid4"), wall_us=80.0,
+            spans=(_step_span("attn", 200, 80.0,
+                              trace_ids=["tid3", "tid4"]),
+                   _step_span("other_only", 200, 5.0,
+                              trace_ids=["tid4"])))
+        trace = fl.request_trace("tid3")
+        assert trace["request_id"] == 3 and trace["trace_id"] == "tid3"
+        assert [t["kind"] for t in trace["ticks"]] == \
+            ["admission", "prefill", "decode"]
+        assert trace["wall_us"] == pytest.approx(220.0)
+        assert 0.0 < trace["coverage"] <= 1.0
+        names = [e["name"] for e in trace["traceEvents"]]
+        assert "other_only" not in names
+        assert "embed" in names and "attn" in names
+        # the rid is an equally good key for the same reconstruction
+        assert fl.request_trace("3")["trace_id"] == "tid3"
+        assert fl.request_trace("deadbeef") is None
+
+    def test_coverage_counts_depth0_only_and_clips(self):
+        fl = FlightRecorder()
+        t = fl.record_tick(
+            "decode", wall_us=100.0,
+            spans=(_step_span("a", 0, 80.0),
+                   SpanEvent(name="sub", cat="op", ts_us=0, dur_us=70.0,
+                             depth=1),       # nested: already counted
+                   _step_span("b", 80, 40.0)))  # overshoot: clip at 1.0
+        assert t.named_us() == pytest.approx(120.0)
+        assert t.coverage() == 1.0
+        t2 = fl.record_tick("decode", wall_us=100.0,
+                            spans=(_step_span("a", 0, 25.0),))
+        assert t2.coverage() == pytest.approx(0.25)
+
+    def test_to_dict_and_chrome_are_serialisable(self):
+        import json
+        fl = FlightRecorder()
+        fl.record_admission(1, "t1", wall_us=10.0)
+        fl.record_tick("decode", spans=(_step_span("a", 0, 5.0),),
+                       wall_us=5.0, request_ids=(1,), trace_ids=("t1",))
+        fl.record_event("evt", {"k": "v"})
+        d = fl.to_dict()
+        assert d["retained_ticks"] == 2 and d["indexed_requests"] >= 1
+        assert d["events"][0]["event"] == "evt"
+        json.dumps(d)
+        chrome = fl.to_chrome()
+        assert {e["ph"] for e in chrome["traceEvents"]} == {"X", "i"}
+        json.dumps(chrome)
+
+
+class TestFlightConcurrency:
+    def test_one_writer_many_readers_stay_consistent(self):
+        """The serving topology: the scheduler thread writes ticks while
+        HTTP handler threads snapshot through every read path.  Nothing
+        may raise, and the final accounting must be exact."""
+        fl = FlightRecorder(capacity=32, event_capacity=64)
+        n_ticks = 600
+        stop = threading.Event()
+        errors = []
+
+        def writer():
+            try:
+                for i in range(n_ticks):
+                    fl.record_tick(
+                        "decode" if i % 3 else "prefill", tick=i,
+                        request_ids=(i % 8,), trace_ids=(f"t{i % 8}",),
+                        wall_us=10.0,
+                        spans=(_step_span("s", i * 10.0, 10.0),))
+                    if i % 7 == 0:
+                        fl.record_event("beat", {"i": i})
+                    if i == n_ticks // 2:
+                        fl.pin(f"t{i % 8}")
+            except Exception as e:           # pragma: no cover
+                errors.append(e)
+            finally:
+                stop.set()
+
+        def reader():
+            try:
+                while not stop.is_set():
+                    fl.to_dict()
+                    fl.step_times_us(kind="decode", cat="step")
+                    fl.request_trace(f"t{len(fl.ticks()) % 8}")
+                    fl.to_chrome()
+            except Exception as e:           # pragma: no cover
+                errors.append(e)
+
+        threads = [threading.Thread(target=writer)] + \
+            [threading.Thread(target=reader) for _ in range(3)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors
+        assert len(fl.ticks()) == 32
+        assert fl.dropped_ticks == n_ticks - 32
+        # seq numbers stayed strictly monotonic through the contention
+        seqs = [t.seq for t in fl.ticks()]
+        assert seqs == sorted(seqs) and len(set(seqs)) == len(seqs)
+
+
+class TestDriftWatchdog:
+    def test_cadence_and_empty_window_skip(self):
+        eng = _engine()
+        fl = FlightRecorder()
+        wd = DriftWatchdog(eng, fl, every=3)
+        assert [wd.on_tick() for _ in range(6)] == [False] * 6
+        assert wd.ticks == 6 and wd.checks == 0   # no decode ticks yet
+
+    def test_unjoinable_window_advances_watermark(self):
+        eng = _engine()
+        fl = FlightRecorder()
+        wd = DriftWatchdog(eng, fl, every=1)
+        fl.record_tick("decode", spans=(_step_span("not_a_step", 0, 5.0),))
+        assert wd.on_tick() is False
+        assert wd.checks == 0
+        # the window was consumed even though it didn't join
+        assert fl.step_times_us(kind="decode", cat="step",
+                                after_seq=wd._after_seq)[0] == {}
+
+    def test_errors_never_escape(self):
+        class Boom:
+            def step_times_us(self, **kw):
+                raise RuntimeError("boom")
+        wd = DriftWatchdog(object(), Boom(), every=1)
+        assert wd.on_tick() is False
+        assert wd.errors == 1
+
+    def test_every_must_be_positive(self):
+        with pytest.raises(ValueError):
+            DriftWatchdog(object(), FlightRecorder(), every=0)
+
+    def test_on_model_window_does_not_replan(self):
+        eng = _engine()
+        fl = FlightRecorder()
+        reg = MetricsRegistry()
+        wd = DriftWatchdog(eng, fl, every=1, threshold=0.5, metrics=reg)
+        feats = wd._features()
+        assert len(feats) >= wd.min_points
+        # observed exactly on the cost model's shape: near-zero drift
+        spans = tuple(_step_span(s, i * 100.0, 2.0 * (r + g) + 5.0)
+                      for i, (s, (r, g)) in enumerate(sorted(feats.items())))
+        fl.record_tick("decode", spans=spans)
+        assert wd.on_tick() is False
+        assert wd.checks == 1 and wd.replans == 0 and eng.replans == 0
+        assert wd.last_report is not None
+        assert wd.last_report.rms_rel_drift < 0.5
+        assert reg.gauge("drift_watchdog_rms_rel_drift").value == \
+            wd.last_report.rms_rel_drift
+
+    def test_replan_mid_session_is_token_exact(self):
+        """The acceptance scenario: perturbed step timings push drift past
+        the threshold, the watchdog refits and re-plans while a decode
+        session is live, and the session's remaining tokens still match
+        the unperturbed sequential reference exactly."""
+        eng = _engine(metrics=MetricsRegistry())
+        prompt = [3, 5, 7]
+        ref = eng.generate(prompt, max_new_tokens=6).tokens
+
+        fl = FlightRecorder()
+        wd = DriftWatchdog(eng, fl, every=2, threshold=0.25,
+                           metrics=eng.metrics)
+        feats = wd._features()
+        assert len(feats) >= wd.min_points
+        # perturbation: alternate steps run 8x over the model's shape —
+        # high RMS relative drift no uniform host slowdown could explain
+        ts, spans = 0.0, []
+        for i, (s, (r, g)) in enumerate(sorted(feats.items())):
+            us = (r + g) * (8.0 if i % 2 else 1.0) + 5.0
+            spans.append(_step_span(s, ts, us))
+            ts += us
+        fl.record_tick("decode", spans=tuple(spans), wall_us=ts, tick=1)
+
+        sess = eng.start_session(prompt)
+        toks = [sess["tok"], eng.session_step(sess)]
+        assert wd.on_tick() is False          # tick 1 of 2: off-cadence
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")   # refit may warn on noise
+            fired = wd.on_tick()
+        assert fired is True
+        assert wd.replans == 1 and eng.replans == 1
+        assert wd.last_report.rms_rel_drift > wd.threshold
+        assert wd.last_fit is not None and wd.last_fit.n_points >= 4
+        assert eng.metrics.counter("engine_replans_total").value == 1
+        assert eng.metrics.counter(
+            "drift_watchdog_replans_total").value == 1
+        # the live session decodes on across the plan-cache swap ...
+        for _ in range(4):
+            toks.append(eng.session_step(sess))
+        # ... token-exact against the unperturbed reference
+        assert toks == ref
+
+    def test_to_dict_shape(self):
+        eng = _engine()
+        wd = DriftWatchdog(eng, FlightRecorder(), every=5, threshold=0.4,
+                           batch=2)
+        d = wd.to_dict()
+        assert d["every"] == 5 and d["threshold"] == 0.4 and d["batch"] == 2
+        assert d["last_report"] is None and d["last_fit"] is None
+        assert d["engine_replans"] == 0

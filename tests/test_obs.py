@@ -93,6 +93,51 @@ class TestMetricsRegistry:
         assert 'tick_seconds_bucket{le="+Inf"} 1' in text
         assert 'tick_seconds_count 1' in text
 
+    def test_histogram_exemplars_track_buckets(self):
+        r = MetricsRegistry()
+        h = r.histogram("ttft_seconds", buckets=(0.01, 0.1, 1.0))
+        h.observe(0.005, exemplar="aaa0")
+        h.observe(0.05, exemplar="bbb1")
+        h.observe(0.06, exemplar="ccc2")   # same bucket: last wins
+        h.observe(5.0, exemplar="ddd3")    # above every bound: +Inf
+        h.observe(0.5)                     # no exemplar: leaves none
+        assert h.exemplars[0][0] == "aaa0"
+        assert h.exemplars[1][0] == "ccc2"
+        assert h.exemplars[len(h.bounds)][0] == "ddd3"
+        assert 2 not in h.exemplars
+
+    def test_openmetrics_render_carries_exemplars_and_eof(self):
+        r = MetricsRegistry()
+        r.counter("reqs_total", "requests").inc(2)
+        h = r.histogram("ttft_seconds", buckets=(0.01, 1.0))
+        h.observe(0.005, exemplar="cafe1234")
+        om = r.render_openmetrics()
+        assert om.endswith("# EOF\n")
+        line = next(l for l in om.splitlines()
+                    if l.startswith('ttft_seconds_bucket{le="0.01"}'))
+        assert '# {trace_id="cafe1234"} 0.005' in line
+        # buckets without an exemplar render bare
+        bare = next(l for l in om.splitlines()
+                    if l.startswith('ttft_seconds_bucket{le="1.0"}'))
+        assert "#" not in bare
+        # the classic exposition stays exemplar- and EOF-free
+        prom = r.render_prometheus()
+        assert "cafe1234" not in prom and "# EOF" not in prom
+        # ... and the series names line up between the two renders
+        def names(text):
+            return {l.split("{")[0].split()[0] for l in text.splitlines()
+                    if l and not l.startswith("#")}
+        assert names(prom) == names(om)
+
+    def test_exemplars_survive_merge(self):
+        parent = MetricsRegistry()
+        child = MetricsRegistry()
+        child.histogram("lat_seconds").observe(0.003, exemplar="feed1")
+        parent.merge(child, shard=0)
+        merged = parent.histogram("lat_seconds", shard="0")
+        assert any(tid == "feed1"
+                   for tid, _, _ in merged.exemplars.values())
+
     def test_json_dump_roundtrips(self, tmp_path):
         r = MetricsRegistry()
         r.histogram("h_seconds").observe(0.01)
@@ -331,8 +376,67 @@ class TestDbTraceSqlite:
         assert tick.coverage() == pytest.approx(1.0)
         assert set(tick.step_times_us()) == {"s1"}
         assert tick.step_times_us()["s1"] > 0
-        assert tick.class_times_us() == {
-            "statement": pytest.approx(tick.wall_s * 1e6)}
+        # the SELECT's wall time was split over its EXPLAIN QUERY PLAN
+        # rows (scan); the DDL statements fell back to one
+        # op_class="statement" record each
+        classes = tick.class_times_us()
+        assert set(classes) == {"statement", "scan"}
+        assert sum(classes.values()) == pytest.approx(tick.wall_s * 1e6)
+
+    def test_run_timed_eqp_join_surfaces_operator_structure(self):
+        class Prov:
+            kind = "bind"
+            step = "join_step"
+            tables = ("w", "x")
+            ops = ("join",)
+            quantised = ()
+        con = sqlite3.connect(":memory:")
+        con.execute("CREATE TABLE w (k INT PRIMARY KEY, v REAL)")
+        con.execute("CREATE TABLE x (k INT, v REAL)")
+        con.executemany("INSERT INTO w VALUES (?, ?)",
+                        [(i, float(i)) for i in range(8)])
+        con.executemany("INSERT INTO x VALUES (?, ?)",
+                        [(i % 4, 1.0) for i in range(16)])
+        tick = run_timed(con, [(
+            "SELECT w.k, SUM(w.v * x.v) FROM w JOIN x ON w.k = x.k "
+            "GROUP BY w.k ORDER BY w.k;", Prov())])
+        ops = tick.attributed
+        assert all(a.step == "join_step" for a in ops)
+        # SQLite's nested-loop join: first table term is the outer
+        # scan, the second (same parent) is the join inner loop
+        classes = {a.op_class for a in ops}
+        assert "join" in classes
+        assert classes & {"scan", "search"}
+        tables = {a.table for a in ops if a.table}
+        assert tables <= {"w", "x"} and len(tables) == 2
+        # uniform split keeps the per-step total exact
+        assert tick.step_times_us()["join_step"] == \
+            pytest.approx(tick.wall_s * 1e6)
+        assert tick.coverage() == pytest.approx(1.0)
+
+    def test_run_timed_explain_off_restores_fallback(self):
+        class Prov:
+            kind = "bind"
+            step = "s"
+            tables = ()
+            ops = ()
+            quantised = ()
+        con = sqlite3.connect(":memory:")
+        con.execute("CREATE TABLE t (a INT)")
+        tick = run_timed(con, [("SELECT * FROM t;", Prov())],
+                         explain=False)
+        assert [a.op_class for a in tick.attributed] == ["statement"]
+
+    def test_classify_eqp_detail_variants(self):
+        from repro.obs.profile import classify_eqp_detail
+        assert classify_eqp_detail("SCAN t") == ("scan", "SCAN", "t")
+        assert classify_eqp_detail("SCAN TABLE t") == ("scan", "SCAN", "t")
+        assert classify_eqp_detail(
+            "SEARCH w USING INTEGER PRIMARY KEY (rowid=?)",
+            first_in_parent=False) == ("join", "SEARCH", "w")
+        assert classify_eqp_detail(
+            "USE TEMP B-TREE FOR ORDER BY")[0] == "sort"
+        assert classify_eqp_detail("")[0] == "other"
 
     def test_tick_trace_exports(self, tmp_path):
         class Prov:
@@ -383,6 +487,33 @@ class TestDriftReport:
         obs = {"a": 300.0, "b": 900.0}  # 3 µs/unit, calibrated at 1.5
         rep = drift_report(feats, obs, scale_us=1.5)
         assert all(s.ratio == pytest.approx(2.0) for s in rep.steps)
+
+    def test_empty_features_yield_empty_report(self):
+        rep = drift_report({}, {"x": 5.0})
+        assert rep.steps == [] and rep.rms_rel_drift == 0.0
+        assert rep.unattributed_us == pytest.approx(5.0)
+        assert rep.total_observed_us == pytest.approx(5.0)
+
+    def test_fully_disjoint_observation_is_all_unattributed(self):
+        # the watchdog's worst window: observed step names share nothing
+        # with the priced features (e.g. a renamed pipeline)
+        rep = drift_report({"a": (10.0, 1.0)}, {"b": 7.0, "c": 3.0})
+        assert rep.steps == [] and rep.scale_us == 0.0
+        assert rep.unattributed_us == pytest.approx(10.0)
+
+    def test_zero_unit_step_gets_inf_ratio_not_crash(self):
+        # a lone step priced at zero cost units: the fitted prediction
+        # is 0 µs, the ratio degrades to inf and drops out of the RMS
+        rep = drift_report({"z": (0.0, 0.0)}, {"z": 4.0})
+        assert rep.steps[0].ratio == float("inf")
+        assert rep.rms_rel_drift == 0.0
+
+    def test_zero_observed_times_fit_zero_scale(self):
+        rep = drift_report({"a": (10.0, 0.0), "b": (20.0, 0.0)},
+                           {"a": 0.0, "b": 0.0})
+        assert rep.scale_us == 0.0
+        assert all(s.ratio == float("inf") for s in rep.steps)
+        assert rep.rms_rel_drift == 0.0
 
 
 class TestTracedRunPipeline:

@@ -36,6 +36,16 @@ def engine():
                             max_len=24)
 
 
+@pytest.fixture(scope="module")
+def traced_engine():
+    """An engine with a TraceRecorder attached: the server drains its
+    spans into the flight ring, so /debug/trace can attribute ticks."""
+    from repro.obs import TraceRecorder
+    return RelationalEngine(SPEC, init_llama_params(SPEC, seed=3),
+                            chunk_size=8, residency="in_memory",
+                            max_len=24, tracer=TraceRecorder())
+
+
 @contextlib.contextmanager
 def _server(engine, n_pages=32, max_batch=3, max_seqs=8, **cfg_kw):
     kvcfg = PagedKVConfig(n_layers=SPEC.n_layers, n_kv=SPEC.n_kv,
@@ -223,3 +233,130 @@ class TestHttpApi:
                                       "GET", "/healthz"))
             assert resp.status == 200
             assert resp.json()["status"] == "ok"
+
+
+async def _raw_get(host, port, path, extra_headers=""):
+    """GET with caller-controlled headers (the stdlib client pins its
+    own header set, so content negotiation needs a raw request)."""
+    reader, writer = await asyncio.open_connection(host, port)
+    try:
+        req = (f"GET {path} HTTP/1.1\r\nHost: localhost\r\n"
+               f"{extra_headers}Connection: close\r\n\r\n")
+        writer.write(req.encode())
+        await writer.drain()
+        status_line = await reader.readline()
+        status = int(status_line.split()[1])
+        headers = {}
+        while True:
+            line = await reader.readline()
+            if line in (b"\r\n", b"\n", b""):
+                break
+            k, _, v = line.decode().partition(":")
+            headers[k.strip().lower()] = v.strip()
+        body = await reader.read()
+        return status, headers, body
+    finally:
+        writer.close()
+        with contextlib.suppress(ConnectionError):
+            await writer.wait_closed()
+
+
+class TestDebugEndpoints:
+    """ISSUE 10: the flight recorder's live debug surface plus the
+    trace_id extension field and OpenMetrics content negotiation."""
+
+    def test_trace_id_rides_every_response_shape(self, engine):
+        with _server(engine) as srv:
+            stream = run(client.stream_completion(
+                srv.cfg.host, srv.port, {"prompt": [4, 2], "max_tokens": 3}))
+            assert stream.status == 200
+            tid = stream.trace_id
+            assert tid and len(tid) == 16 and int(tid, 16) >= 0
+            # one id per request, stamped on every chunk
+            assert {e["trace_id"] for e in stream.events} == {tid}
+            blocking = run(client.request(
+                srv.cfg.host, srv.port, "POST", "/v1/completions",
+                {"prompt": [4, 2], "max_tokens": 3, "stream": False}))
+            assert len(blocking.json()["trace_id"]) == 16
+            assert blocking.json()["trace_id"] != tid
+
+    def test_debug_flight_and_trace_reconstruction(self, traced_engine):
+        with _server(traced_engine) as srv:
+            stream = run(client.stream_completion(
+                srv.cfg.host, srv.port, {"prompt": [7, 1, 9],
+                                         "max_tokens": 4}))
+            assert stream.status == 200
+            flight = run(client.request(srv.cfg.host, srv.port,
+                                        "GET", "/debug/flight")).json()
+            assert flight["retained_ticks"] > 0
+            kinds = {t["kind"] for t in flight["ticks"]}
+            assert {"admission", "prefill", "decode"} <= kinds
+            # the streamed request reconstructs end to end by trace_id
+            trace = run(client.request(
+                srv.cfg.host, srv.port, "GET",
+                f"/debug/trace/{stream.trace_id}"))
+            assert trace.status == 200
+            data = trace.json()
+            assert data["trace_id"] == stream.trace_id
+            tick_kinds = [t["kind"] for t in data["ticks"]]
+            assert tick_kinds[0] == "admission"
+            assert "prefill" in tick_kinds and "decode" in tick_kinds
+            # spans drained from the engine tracer attribute the ticks
+            assert data["wall_us"] > 0
+            assert data["coverage"] > 0.5
+            assert any(e["cat"] == "step" for e in data["traceEvents"])
+            # the scheduler rid is an equally valid key
+            rid = data["request_id"]
+            assert run(client.request(
+                srv.cfg.host, srv.port, "GET",
+                f"/debug/trace/{rid}")).json()["trace_id"] == \
+                stream.trace_id
+
+    def test_debug_trace_unknown_id_is_404(self, engine):
+        with _server(engine) as srv:
+            resp = run(client.request(srv.cfg.host, srv.port, "GET",
+                                      "/debug/trace/deadbeefdeadbeef"))
+            assert resp.status == 404
+            assert resp.json()["error"]["code"] == "trace_not_found"
+
+    def test_debug_drift_disabled_and_enabled(self, engine):
+        with _server(engine) as srv:
+            off = run(client.request(srv.cfg.host, srv.port,
+                                     "GET", "/debug/drift")).json()
+            assert off["enabled"] is False
+        with _server(engine, drift_every=500) as srv:
+            assert srv.watchdog is not None
+            on = run(client.request(srv.cfg.host, srv.port,
+                                    "GET", "/debug/drift")).json()
+            assert on["every"] == 500 and on["replans"] == 0
+            assert on["engine_replans"] == engine.replans
+
+    def test_metrics_content_negotiation(self, engine):
+        with _server(engine) as srv:
+            run(client.stream_completion(
+                srv.cfg.host, srv.port, {"prompt": [1, 2],
+                                         "max_tokens": 2}))
+            # default: classic Prometheus exposition
+            plain = run(client.request(srv.cfg.host, srv.port,
+                                       "GET", "/metrics"))
+            assert plain.headers["content-type"].startswith("text/plain")
+            assert "# EOF" not in plain.body.decode()
+
+            async def negotiate():
+                via_query = await _raw_get(
+                    srv.cfg.host, srv.port, "/metrics?format=openmetrics")
+                via_accept = await _raw_get(
+                    srv.cfg.host, srv.port, "/metrics",
+                    "Accept: application/openmetrics-text; "
+                    "version=1.0.0\r\n")
+                return via_query, via_accept
+
+            for status, headers, body in run(negotiate()):
+                assert status == 200
+                assert headers["content-type"].startswith(
+                    "application/openmetrics-text")
+                text = body.decode()
+                assert text.endswith("# EOF\n")
+                # the SLO histograms carry trace_id exemplars
+                assert 'serving_ttft_seconds_bucket' in text
+                assert '# {trace_id="' in text
